@@ -1,0 +1,54 @@
+"""Paper Tables 2-3 / Fig 3: batch-size sweep — time/run, normalized
+time-per-100k-samples, and per-device memory from the compiled artifact.
+
+Paper claim C7: there is a batch-size optimum (normalized throughput curve
+flattens/turns). On CPU the curve's turning point sits at smaller batches
+than on the IPU, but the shape is the same phenomenon (fixed per-run
+overhead amortized vs working set outgrowing near cache).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import render_table, save_result, time_fn
+from repro.core.abc import ABCConfig, abc_run_batch, make_simulator
+from repro.core.priors import paper_prior
+from repro.epi.data import get_dataset
+
+DAYS = 20
+
+
+def run(quick: bool = True):
+    ds = get_dataset("synthetic_small", num_days=DAYS)
+    batches = [1024, 4096, 16384] if quick else [1024, 4096, 16384, 65536, 131072]
+    rows, raw = [], {}
+    for batch in batches:
+        cfg = ABCConfig(
+            batch_size=batch, tolerance=1.6e4, target_accepted=10**9,
+            chunk_size=min(1024, batch), num_days=DAYS, backend="xla_fused",
+            max_runs=1,
+        )
+        sim = make_simulator(ds, cfg)
+        run_fn = jax.jit(abc_run_batch(paper_prior(), sim, cfg))
+        lowered = run_fn.lower(jax.random.PRNGKey(0))
+        mem = lowered.compile().memory_analysis()
+        peak = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+        t = time_fn(lambda k=jax.random.PRNGKey(1): run_fn(k), iters=3)
+        per_100k = t["p50_s"] * 1e3 * (1e5 / batch)
+        rows.append([batch, f"{t['p50_s']*1e3:.1f}", f"{per_100k:.1f}",
+                     f"{peak/2**20:.1f}"])
+        raw[batch] = {"ms_per_run": t["p50_s"] * 1e3,
+                      "ms_per_100k": per_100k, "peak_mem_mb": peak / 2**20}
+    print("\n== Tables 2-3 analogue: batch-size sweep ==")
+    print(render_table(["batch", "ms/run", "ms/100k samples", "peak MB"], rows))
+    norm = [raw[b]["ms_per_100k"] for b in batches]
+    print(f"C7: normalized cost first->last = {norm[0]:.1f} -> {norm[-1]:.1f} ms/100k "
+          f"({'amortization visible' if norm[-1] < norm[0] else 'flat'})")
+    save_result("table2_3_batch_sweep", raw)
+    return raw
+
+
+if __name__ == "__main__":
+    run()

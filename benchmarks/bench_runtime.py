@@ -1,0 +1,76 @@
+"""Paper Table 1: runtime vs tolerance and accepted-sample count.
+
+The paper's hardware axis (CPU / V100 / 2xIPU) becomes a backend axis here
+(paper-faithful full-trajectory "xla" vs fused "xla_fused" vs the Pallas
+kernel path validated in interpret mode — interpret timing is NOT meaningful
+and is excluded from timing rows). Validated claims:
+  C3 — time/run is independent of tolerance;
+  (linear scaling in accepted samples comes out of the run counts).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import render_table, save_result, time_fn
+from repro.core.abc import ABCConfig, abc_run_batch, make_simulator, run_abc
+from repro.core.priors import paper_prior
+from repro.epi.data import get_dataset
+
+DAYS = 20
+BATCH = 8192
+
+
+def run(quick: bool = True):
+    ds = get_dataset("synthetic_small", num_days=DAYS)
+    rows = []
+    raw = {}
+    tolerances = [2.1e4, 1.6e4] if quick else [2.1e4, 1.6e4, 1.2e4]
+    accepted_targets = [50, 200] if quick else [100, 1000]
+    for backend in ("xla", "xla_fused"):
+        for tol in tolerances:
+            for target in accepted_targets:
+                cfg = ABCConfig(
+                    batch_size=BATCH, tolerance=tol, target_accepted=target,
+                    chunk_size=1024, num_days=DAYS, backend=backend,
+                    max_runs=4000,
+                )
+                sim = make_simulator(ds, cfg)
+                run_fn = jax.jit(abc_run_batch(paper_prior(), sim, cfg))
+                # time-per-run micro-measure (paper's reliable metric)
+                t = time_fn(lambda k=jax.random.PRNGKey(1): run_fn(k), iters=5)
+                post = run_abc(ds, cfg, key=0, run_fn=run_fn)
+                rows.append([
+                    backend, f"{tol:.2g}", target, len(post), post.runs,
+                    f"{post.wall_time_s:.2f}", f"{t['p50_s'] * 1e3:.1f}",
+                    f"{post.acceptance_rate:.2e}",
+                ])
+                raw[f"{backend}_tol{tol:g}_n{target}"] = {
+                    "time_per_run_ms": t["p50_s"] * 1e3,
+                    "total_s": post.wall_time_s,
+                    "runs": post.runs,
+                    "accepted": len(post),
+                }
+    table = render_table(
+        ["backend", "tol", "target", "accepted", "runs", "total_s",
+         "ms/run", "accept_rate"],
+        rows,
+    )
+    print("\n== Table 1 analogue: runtime vs tolerance/accepted ==")
+    print(table)
+    # C3: per-backend ms/run spread across tolerances must be small
+    for backend in ("xla", "xla_fused"):
+        ms = [v["time_per_run_ms"] for k, v in raw.items() if k.startswith(backend)]
+        spread = (max(ms) - min(ms)) / max(ms)
+        print(f"C3 [{backend}]: time/run spread across tolerances = {spread:.1%} "
+              f"({'PASS (<25%)' if spread < 0.25 else 'FAIL'})")
+        raw[f"{backend}_c3_spread"] = spread
+    save_result("table1_runtime", {"rows": rows, "raw": raw})
+    return raw
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Paper Fig 6: total processing time grows super-exponentially as the
+tolerance decreases (claim C4). Measured via acceptance-rate estimation on a
+large prior sample: expected total time = time/run x target / (rate x batch).
+The smallest tolerances are extrapolated exactly the way the paper sizes its
+5-hour runs."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import render_table, save_result, time_fn
+from repro.core.abc import ABCConfig, abc_run_batch, make_simulator
+from repro.core.priors import paper_prior
+from repro.epi.data import get_dataset
+
+DAYS = 20
+BATCH = 16384
+
+
+def run(quick: bool = True):
+    ds = get_dataset("synthetic_small", num_days=DAYS)
+    cfg = ABCConfig(batch_size=BATCH, tolerance=np.inf, target_accepted=1,
+                    strategy="topk", top_k=1, num_days=DAYS, backend="xla_fused")
+    sim = jax.jit(make_simulator(ds, cfg))
+    # estimate the distance distribution on ~1M prior simulations
+    n_probe = 20 if quick else 60
+    dists = []
+    for r in range(n_probe):
+        th = paper_prior().sample(jax.random.fold_in(jax.random.PRNGKey(7), r), (BATCH,))
+        d = np.asarray(sim(th, jax.random.fold_in(jax.random.PRNGKey(8), r)))
+        dists.append(d[np.isfinite(d)])
+    d = np.concatenate(dists)
+
+    run_fn = jax.jit(abc_run_batch(paper_prior(), make_simulator(ds, cfg), cfg))
+    tpr = time_fn(lambda k=jax.random.PRNGKey(1): run_fn(k), iters=3)["p50_s"]
+
+    rows, raw = [], {"time_per_run_s": tpr, "n_sims": len(d)}
+    for tol in (2.2e4, 1.8e4, 1.4e4, 1.0e4, 7e3, 5e3):
+        rate = float((d <= tol).mean())
+        if rate > 0:
+            total = tpr * 100 / (rate * BATCH)
+            rows.append([f"{tol:.2g}", f"{rate:.2e}", f"{total:.1f}"])
+            raw[f"tol_{tol:g}"] = {"accept_rate": rate, "expected_total_s_100": total}
+        else:
+            rows.append([f"{tol:.2g}", f"<{1.0/len(d):.1e}",
+                         f">{tpr * 100 * len(d) / BATCH / 1:.0f}"])
+    print("\n== Fig 6 analogue: tolerance -> expected total time (100 samples) ==")
+    print(render_table(["tolerance", "accept_rate", "expected_total_s"], rows))
+    rates = [v["accept_rate"] for k, v in raw.items() if k.startswith("tol_")]
+    if len(rates) >= 3:
+        # super-exponential check: successive rate ratios shrink
+        ratios = [rates[i + 1] / rates[i] for i in range(len(rates) - 1)]
+        print(f"C4: acceptance-rate decay ratios {['%.3f' % r for r in ratios]} "
+              f"({'accelerating decay' if ratios[-1] < ratios[0] else 'check'})")
+    save_result("fig6_tolerance_curve", raw)
+    return raw
+
+
+if __name__ == "__main__":
+    run()

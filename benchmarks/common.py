@@ -1,0 +1,55 @@
+"""Shared benchmark utilities: timing, result persistence, table rendering."""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Callable, Dict, List
+
+import jax
+
+RESULTS_DIR = Path(__file__).resolve().parents[1] / "experiments" / "bench"
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> Dict[str, float]:
+    """Wall-time a jitted callable (block_until_ready)."""
+    for _ in range(warmup):
+        jax.tree.map(
+            lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x,
+            fn(*args),
+        )
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.tree.map(
+            lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x,
+            out,
+        )
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return {
+        "mean_s": sum(times) / len(times),
+        "min_s": times[0],
+        "p50_s": times[len(times) // 2],
+        "iters": iters,
+    }
+
+
+def save_result(name: str, payload) -> Path:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    path = RESULTS_DIR / f"{name}.json"
+    path.write_text(json.dumps(payload, indent=1, default=float))
+    return path
+
+
+def render_table(headers: List[str], rows: List[List]) -> str:
+    widths = [
+        max(len(str(h)), max((len(str(r[i])) for r in rows), default=0))
+        for i, h in enumerate(headers)
+    ]
+    def fmt(row):
+        return " | ".join(str(c).rjust(w) for c, w in zip(row, widths))
+    sep = "-+-".join("-" * w for w in widths)
+    return "\n".join([fmt(headers), sep] + [fmt(r) for r in rows])

@@ -1,0 +1,126 @@
+"""Aggregates the dry-run cell records into the EXPERIMENTS.md §Roofline
+table, plus the analytic roofline of the paper's own ABC kernel."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import render_table, save_result
+from repro.launch.analysis import HBM_BW, LINK_BW, PEAK_FLOPS
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_cells(mesh="single", tag="baseline"):
+    cells = []
+    for p in sorted(DRYRUN_DIR.glob(f"*__{mesh}__{tag}.json")):
+        cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def advice(cell: dict) -> str:
+    """One sentence per cell: what would move the dominant term down."""
+    r = cell["roofline"]
+    bound = r["bottleneck"]
+    arch, shape = cell["arch"], cell["shape"]
+    is_moe = "moe" in arch
+    over_hbm = cell["memory"]["peak_hbm_bytes"] > 16 * 2**30
+    extra = " (over 16GB HBM: use microbatch knob or the multi-pod mesh)" if over_hbm else ""
+    if bound == "collective":
+        if is_moe:
+            return ("EP dispatch traffic: grouped per-shard dispatch + bf16 "
+                    "on-wire all-to-all (§Perf cell 1, 2.2-2.4x measured)" + extra)
+        if cell["mode"] == "train":
+            return ("grad/activation all-reduces: overlap collectives with "
+                    "backward compute; int8 error-feedback compression on the "
+                    "DP grad reduction (optim/compress.py)" + extra)
+        return ("TP activation all-reduces: fuse/overlap with matmuls, keep "
+                "the wire in bf16" + extra)
+    if bound == "memory":
+        if cell["mode"] == "decode":
+            return ("at the cache/weight streaming floor — raise batch per "
+                    "chip, or quantize KV cache to int8 to halve bytes/token")
+        return ("f32 elementwise + remat recompute traffic: flash-attention "
+                "Pallas kernel (kernels/flash_attention.py, validated) + bf16 "
+                "norm/score discipline" + extra)
+    return "compute-bound at the MXU roofline: raise per-chip batch" + extra
+
+
+def roofline_table(mesh="single", tag="baseline") -> str:
+    cells = load_cells(mesh, tag)
+    rows = []
+    for c in cells:
+        r = c["roofline"]
+        rows.append([
+            c["arch"], c["shape"],
+            f"{r['t_compute_s']:.2e}", f"{r['t_memory_s']:.2e}",
+            f"{r['t_collective_s']:.2e}", r["bottleneck"][:4],
+            f"{r['model_flops']:.2e}", f"{r['useful_flop_ratio']:.2f}",
+            f"{r['mfu_bound']*100:.1f}%",
+            f"{c['memory']['peak_hbm_bytes']/2**30:.1f}",
+        ])
+    return render_table(
+        ["arch", "shape", "t_comp(s)", "t_mem(s)", "t_coll(s)", "bound",
+         "model_flops", "useful", "MFU@roof", "HBM GiB"],
+        rows,
+    )
+
+
+def abc_kernel_roofline(batch: int = 100_000, days: int = 49) -> dict:
+    """Analytic roofline of the fused Pallas ABC kernel (no matmuls — the
+    HLO dot counter sees none, so this is derived from the kernel's op
+    counts; see kernels/abc_sim.py docstring for the traffic model)."""
+    flops_per_sample_day = 160.0  # hazards+rng(10 hashes)+boxmuller+update+dist
+    flops = batch * days * flops_per_sample_day
+    hbm_bytes_fused = batch * (8 * 4 + 4)  # theta in + distance out
+    hbm_bytes_naive = batch * days * (5 + 3 + 6 + 6) * 4  # noise+obs+state rw
+    return {
+        "batch": batch,
+        "days": days,
+        "t_compute_s": flops / PEAK_FLOPS,
+        "t_memory_fused_s": hbm_bytes_fused / HBM_BW,
+        "t_memory_naive_s": hbm_bytes_naive / HBM_BW,
+        "t_collective_s": 4 / LINK_BW,  # scalar psum
+        "arithmetic_intensity_fused": flops / hbm_bytes_fused,
+        "arithmetic_intensity_naive": flops / hbm_bytes_naive,
+        "note": "VPU-bound elementwise workload; MXU bf16 peak is not the "
+                "binding ceiling — reported for consistency with the brief",
+    }
+
+
+def write_advice_appendix(path=None) -> str:
+    path = path or DRYRUN_DIR.parent / "roofline_advice.md"
+    lines = ["# Per-cell dominant-term advice (auto-generated)\n"]
+    for mesh in ("single", "multi"):
+        lines.append(f"\n## {mesh}-pod mesh\n")
+        for c in load_cells(mesh):
+            r = c["roofline"]
+            lines.append(
+                f"- **{c['arch']} × {c['shape']}** [{r['bottleneck']}-bound, "
+                f"MFU@roof {r['mfu_bound']*100:.1f}%, useful {r['useful_flop_ratio']:.2f}]: "
+                f"{advice(c)}"
+            )
+    text = "\n".join(lines)
+    Path(path).write_text(text)
+    return str(path)
+
+
+def run(quick: bool = True):
+    for mesh in ("single", "multi"):
+        cells = load_cells(mesh)
+        print(f"\n== Roofline ({mesh}-pod), {len(cells)} cells ==")
+        if cells:
+            print(roofline_table(mesh))
+    p = write_advice_appendix()
+    print(f"\nper-cell advice appendix -> {p}")
+    abc = abc_kernel_roofline()
+    print("\n== ABC kernel analytic roofline (per chip, batch 100k x 49 days) ==")
+    for k, v in abc.items():
+        print(f"  {k}: {v}")
+    save_result("roofline_abc_kernel", abc)
+    return abc
+
+
+if __name__ == "__main__":
+    run()

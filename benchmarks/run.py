@@ -1,0 +1,55 @@
+"""Benchmark aggregator: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # quick (CPU-minutes)
+    PYTHONPATH=src python -m benchmarks.run --full
+    PYTHONPATH=src python -m benchmarks.run --only table1,roofline
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = {
+    "table1": ("benchmarks.bench_runtime", "Table 1: runtime vs tolerance/accepted"),
+    "table2_3": ("benchmarks.bench_batch_sweep", "Tables 2-3: batch-size sweep"),
+    "table4": ("benchmarks.bench_postproc", "Table 4: host postprocessing"),
+    "fig6": ("benchmarks.bench_tolerance_curve", "Fig 6: tolerance curve"),
+    "table7": ("benchmarks.bench_scaling", "Table 7: device scaling"),
+    "table8": ("benchmarks.bench_countries", "Table 8: three countries"),
+    "abc_perf": ("benchmarks.bench_abc_perf", "ABC backend perf + 512-chip dry-run"),
+    "roofline": ("benchmarks.roofline", "Roofline aggregation"),
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else set(BENCHES)
+
+    failures = []
+    t0 = time.time()
+    for key, (module, desc) in BENCHES.items():
+        if key not in only:
+            continue
+        print(f"\n{'='*72}\n[bench:{key}] {desc}\n{'='*72}", flush=True)
+        try:
+            mod = __import__(module, fromlist=["run"])
+            t = time.time()
+            mod.run(quick=not args.full)
+            print(f"[bench:{key}] done in {time.time()-t:.1f}s", flush=True)
+        except Exception:
+            failures.append(key)
+            traceback.print_exc()
+    print(f"\n{'='*72}\nbenchmarks finished in {time.time()-t0:.1f}s; "
+          f"failures: {failures or 'none'}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Quickstart: parallel ABC inference of the COVID-19 model in ~1 CPU-minute.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Samples 100 posterior draws for a synthetic outbreak with known generating
+parameters and prints recovery quality — the paper's core loop end to end.
+"""
+
+import numpy as np
+
+from repro.core.abc import ABCConfig, run_abc
+from repro.core.priors import paper_prior
+from repro.epi.data import get_dataset
+from repro.epi.model import PARAM_NAMES
+
+
+def main():
+    ds = get_dataset("synthetic_small", num_days=20)
+    print(f"dataset: {ds.name}, P={ds.population:.0f}, T={ds.num_days} days")
+    print(f"generating theta: {dict(zip(PARAM_NAMES, ds.true_theta))}")
+
+    cfg = ABCConfig(
+        batch_size=8192,          # vectorized simulations per run (paper: 100k/IPU)
+        tolerance=1.2e4,
+        target_accepted=100,
+        strategy="outfeed",       # the paper's IPU chunked-outfeed strategy
+        chunk_size=1024,
+        num_days=20,
+        backend="xla_fused",      # fused simulate+distance (no [B,3,T] tensor)
+    )
+    post = run_abc(ds, cfg, key=0, verbose=True)
+    print()
+    print(post.summary_table())
+
+    true = np.asarray(ds.true_theta)
+    highs = np.asarray(paper_prior().highs)
+    err = np.abs(post.theta.mean(0) - true) / highs
+    print("\nnormalized |posterior mean - truth| per parameter:")
+    for name, e in zip(PARAM_NAMES, err):
+        print(f"  {name:>8}: {e:.3f}")
+    print(f"  (prior-mean baseline averages ~{np.abs(highs/2 - true).mean()/highs.mean():.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Serve a small LM with batched requests through the continuous-batching
+decode loop (fixed-shape slots — the serving analogue of the paper's
+fixed-shape outfeed).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    for arch in ("gemma-2b", "mamba2-130m"):
+        print(f"\n== serving {arch} (reduced config) ==")
+        serve_mod.main([
+            "--arch", arch, "--smoke",
+            "--requests", "8", "--prompt-len", "12", "--gen", "6", "--slots", "4",
+        ])
+
+
+if __name__ == "__main__":
+    main()

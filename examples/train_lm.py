@@ -1,0 +1,50 @@
+"""Train a small LM end to end with the production train loop: ZeRO-1 AdamW,
+async checkpointing + restart, deterministic data addressing.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+
+Uses the gemma-2b architecture family at reduced width (~M-scale params for
+CPU) — same code path the pod configs lower through. Demonstrates the loss
+actually decreasing on the learnable synthetic stream, then kills and
+resumes from the checkpoint to show the restart contract.
+"""
+
+import argparse
+import shutil
+import tempfile
+
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    ckdir = tempfile.mkdtemp(prefix="repro_ck_")
+    try:
+        print("== phase 1: train from scratch, checkpoint every 40 steps ==")
+        train_mod.main([
+            "--arch", "gemma-2b", "--smoke",
+            "--steps", str(args.steps), "--batch", str(args.batch),
+            "--seq", str(args.seq), "--lr", "1e-3",
+            "--ckpt-dir", ckdir, "--ckpt-every", "40", "--log-every", "20",
+        ])
+        print("\n== phase 2: simulate preemption -> resume from checkpoint ==")
+        final = train_mod.main([
+            "--arch", "gemma-2b", "--smoke",
+            "--steps", str(args.steps + 40), "--batch", str(args.batch),
+            "--seq", str(args.seq), "--lr", "1e-3",
+            "--ckpt-dir", ckdir, "--ckpt-every", "40", "--resume",
+            "--log-every", "20",
+        ])
+        print(f"\nresumed training continued to step {args.steps + 40}, "
+              f"final loss {final:.4f}")
+    finally:
+        shutil.rmtree(ckdir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

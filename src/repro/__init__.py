@@ -1,0 +1,9 @@
+"""repro: hardware-accelerated simulation-based inference (parallel ABC) at pod scale.
+
+Reproduction + beyond-paper optimization of:
+  Kulkarni, Krell, Nabarro, Moritz (2020),
+  "Hardware-accelerated Simulation-based Inference of Stochastic
+   Epidemiology Models for COVID-19" (DOI 10.1145/3471188).
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,5 @@
+from repro.checkpoint.checkpointer import (
+    Checkpointer,
+    load_checkpoint,
+    save_checkpoint,
+)

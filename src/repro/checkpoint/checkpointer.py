@@ -1,0 +1,184 @@
+"""Lightweight orbax-free checkpointing for pytrees of jax/np arrays.
+
+Design points for 1000+-node deployments (scaled down to this container):
+  * atomic commit: write to `<step>.tmp/`, fsync, rename to `<step>/` — a
+    crash mid-write never corrupts the latest checkpoint;
+  * async save: the device->host copy happens on the caller thread (cheap),
+    serialization happens on a writer thread so the train loop overlaps
+    checkpoint I/O with the next steps;
+  * keep-last-k GC;
+  * elastic restore: arrays are saved UNSHARDED (per-leaf .npy); on load they
+    are placed under whatever sharding the new mesh prescribes, so a job may
+    restart on a different device count (reshard-on-load). On a real pod the
+    same layout extends to per-shard files keyed by shard index — the
+    manifest format already records shapes/dtypes for that;
+  * manifest.json carries the tree structure + per-leaf metadata + a user
+    metadata dict (step, rng state, dataset cursor ...).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import ml_dtypes  # noqa: F401 — registers bfloat16 etc. with np.dtype()
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_leaves_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+def _leaf_filename(i: int) -> str:
+    return f"leaf_{i:05d}.npy"
+
+
+def save_checkpoint(
+    directory: str | Path,
+    step: int,
+    tree: Any,
+    metadata: Optional[Dict] = None,
+) -> Path:
+    """Synchronous atomic save. Returns the committed path."""
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:010d}"
+    tmp = directory / f"step_{step:010d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    leaves = _flatten_with_paths(tree)
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "metadata": metadata or {},
+        "leaves": [],
+    }
+    for i, (path, leaf) in enumerate(leaves):
+        arr = np.asarray(leaf)
+        shape = list(arr.shape)  # before ascontiguousarray (it promotes 0-d)
+        arr = np.ascontiguousarray(arr)
+        # raw-bytes storage: np.save corrupts extension dtypes (bfloat16);
+        # the manifest carries dtype/shape for reconstruction
+        np.save(tmp / _leaf_filename(i), arr.reshape(-1).view(np.uint8))
+        manifest["leaves"].append(
+            {"path": path, "file": _leaf_filename(i), "shape": shape,
+             "dtype": str(arr.dtype)}
+        )
+    with open(tmp / "manifest.json", "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    return final
+
+
+def load_checkpoint(
+    directory: str | Path,
+    like: Any,
+    step: Optional[int] = None,
+    shardings: Any = None,
+):
+    """Restore into the structure of `like`. If `shardings` is given, each
+    leaf is device_put under the (possibly different) new mesh's sharding —
+    the elastic-rescale path. Returns (tree, metadata, step)."""
+    directory = Path(directory)
+    steps = sorted(
+        int(p.name.split("_")[1]) for p in directory.glob("step_*") if p.is_dir()
+        and not p.name.endswith(".tmp")
+    )
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    step = step if step is not None else steps[-1]
+    path = directory / f"step_{step:010d}"
+    with open(path / "manifest.json") as f:
+        manifest = json.load(f)
+
+    flat_like = _flatten_with_paths(like)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+    out_leaves = []
+    flat_sh = (
+        [s for _, s in _flatten_with_paths(shardings)] if shardings is not None
+        else [None] * len(flat_like)
+    )
+    for (keypath, leaf_like), sh in zip(flat_like, flat_sh):
+        e = by_path.get(keypath)
+        if e is None:
+            raise KeyError(f"checkpoint missing leaf {keypath}")
+        raw = np.load(path / e["file"])
+        arr = raw.view(np.dtype(e["dtype"])).reshape(e["shape"])
+        expected = tuple(np.shape(leaf_like))
+        if tuple(arr.shape) != expected:
+            raise ValueError(
+                f"shape mismatch for {keypath}: ckpt {arr.shape} vs {expected}"
+            )
+        if sh is not None:
+            arr = jax.device_put(arr, sh)
+        out_leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), out_leaves
+    )
+    return tree, manifest["metadata"], step
+
+
+class Checkpointer:
+    """Async keep-k checkpoint manager."""
+
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.directory = Path(directory)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save_async(self, step: int, tree: Any, metadata: Optional[Dict] = None):
+        """Snapshot to host memory now; write on a background thread."""
+        self.wait()  # one in-flight save at a time
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree, metadata)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def save(self, step: int, tree: Any, metadata: Optional[Dict] = None):
+        save_checkpoint(self.directory, step, tree, metadata)
+        self._gc()
+
+    def restore(self, like: Any, step: Optional[int] = None, shardings: Any = None):
+        self.wait()
+        return load_checkpoint(self.directory, like, step, shardings)
+
+    def steps(self):
+        return sorted(
+            int(p.name.split("_")[1])
+            for p in self.directory.glob("step_*")
+            if p.is_dir() and not p.name.endswith(".tmp")
+        )
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.directory / f"step_{s:010d}", ignore_errors=True)

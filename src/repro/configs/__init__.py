@@ -1,0 +1,27 @@
+"""Architecture configs — importing this package registers all archs."""
+
+from repro.configs import (  # noqa: F401
+    deepseek_moe_16b,
+    gemma2_27b,
+    gemma_2b,
+    internlm2_20b,
+    internvl2_2b,
+    mamba2_130m,
+    minitron_8b,
+    qwen3_moe_30b_a3b,
+    whisper_large_v3,
+    zamba2_2_7b,
+)
+
+ALL_ARCHS = (
+    "internlm2-20b",
+    "gemma2-27b",
+    "minitron-8b",
+    "gemma-2b",
+    "deepseek-moe-16b",
+    "qwen3-moe-30b-a3b",
+    "whisper-large-v3",
+    "mamba2-130m",
+    "internvl2-2b",
+    "zamba2-2.7b",
+)

@@ -1,0 +1,47 @@
+"""The paper's own workload config: parallel ABC over the stochastic
+epidemiology model (DESIGN.md §1). Scales from this CPU container (reduced
+batch) to the production pod meshes (launch/abc_run.py)."""
+
+import dataclasses
+
+from repro.core.abc import ABCConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ABCWorkload:
+    name: str
+    dataset: str
+    abc: ABCConfig
+
+
+def paper_production() -> ABCWorkload:
+    """Paper §4/§5 scale: 100k samples per device, outfeed chunks of 10k."""
+    return ABCWorkload(
+        name="epi-abc-production",
+        dataset="italy",
+        abc=ABCConfig(
+            batch_size=100_000 * 512,  # 100k per device on the 512-chip mesh
+            tolerance=5e4,
+            target_accepted=1000,
+            strategy="outfeed",
+            chunk_size=10_000,
+            num_days=49,
+            backend="pallas",
+        ),
+    )
+
+
+def cpu_demo() -> ABCWorkload:
+    return ABCWorkload(
+        name="epi-abc-demo",
+        dataset="synthetic_small",
+        abc=ABCConfig(
+            batch_size=8192,
+            tolerance=1.6e4,
+            target_accepted=100,
+            strategy="outfeed",
+            chunk_size=1024,
+            num_days=20,
+            backend="xla_fused",
+        ),
+    )

@@ -1,0 +1,16 @@
+"""The paper's primary contribution: massively parallel ABC rejection inference.
+
+Layers:
+  priors       — vectorized priors with log-pdf (uniform box prior of the paper)
+  distances    — batched distance functions (Euclidean of the paper + extras)
+  abc          — batched rejection-ABC engine with the paper's two fixed-shape
+                 sample-return strategies (chunked outfeed / top-k), resumable
+  smc          — SMC-ABC (decreasing-tolerance sequential Monte Carlo)
+  posterior    — accepted-sample containers + summaries
+  distributed  — shard_map multi-device / multi-pod driver
+"""
+
+from repro.core.priors import UniformBoxPrior
+from repro.core.distances import euclidean_distance
+from repro.core.abc import ABCConfig, ABCState, run_abc, abc_run_batch
+from repro.core.posterior import Posterior

@@ -1,0 +1,45 @@
+"""Batched distance functions between simulated and observed data.
+
+The paper uses the Euclidean distance over the flattened [3, T] observed
+channels (A, R, D). We also provide normalized variants used in ablations.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def euclidean_distance(simulated: jnp.ndarray, observed: jnp.ndarray) -> jnp.ndarray:
+    """dist(D_s, D) = ||D_s - D||_2 over the trailing [3, T] axes.
+
+    simulated: [B, 3, T]; observed: [3, T]  ->  [B].
+    """
+    diff = simulated - observed[None]
+    return jnp.sqrt(jnp.sum(diff * diff, axis=(-2, -1)))
+
+
+def mean_absolute_distance(simulated: jnp.ndarray, observed: jnp.ndarray) -> jnp.ndarray:
+    """Mean absolute error over channels x days. [B, 3, T], [3, T] -> [B]."""
+    diff = jnp.abs(simulated - observed[None])
+    return jnp.mean(diff, axis=(-2, -1))
+
+
+def normalized_euclidean_distance(
+    simulated: jnp.ndarray, observed: jnp.ndarray, eps: float = 1.0
+) -> jnp.ndarray:
+    """Euclidean distance with per-channel normalization by the observed scale.
+
+    Makes tolerances comparable across countries with very different case
+    counts (an ablation the paper discusses when noting tolerances cannot be
+    naively scaled by population).
+    """
+    scale = jnp.sqrt(jnp.mean(observed * observed, axis=-1, keepdims=True)) + eps
+    diff = (simulated - observed[None]) / scale[None]
+    return jnp.sqrt(jnp.sum(diff * diff, axis=(-2, -1)))
+
+
+DISTANCES = {
+    "euclidean": euclidean_distance,
+    "mae": mean_absolute_distance,
+    "normalized_euclidean": normalized_euclidean_distance,
+}

@@ -1,0 +1,111 @@
+"""Multi-device / multi-pod drivers for parallel ABC (paper §4.5, Table 7).
+
+Two equivalent formulations are provided:
+
+  * `make_pjit_runner`   — GSPMD: one logical batch, sharded over the data
+    axes by the partitioner. Simplest; collectives chosen by XLA.
+  * `make_shardmap_runner` — explicit per-device program (the faithful analogue
+    of the paper's per-IPU replica): each device folds its axis index into the
+    run key, simulates its own sub-batch, and the ONLY cross-device collective
+    is a psum of the scalar accept count. This is why the paper sees <= 8%
+    scaling overhead — we get the same property by construction.
+
+Both return a callable with the RunOutput signature of `abc_run_batch`, so the
+host driver (`run_abc`) is oblivious to the device topology. Work addressing
+stays (base_key, run_idx, device_idx) => deterministic, resumable, elastic:
+a restarted job with a different device count re-partitions runs without
+changing the sample stream semantics (each (run, device) pair is a unique
+fold_in, and acceptance is i.i.d. across all of them).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.abc import ABCConfig, RunOutput, SimulatorFn, abc_run_batch
+from repro.core.priors import UniformBoxPrior
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """All mesh axes used for ABC data parallelism (every axis: ABC is pure DP)."""
+    return tuple(mesh.axis_names)
+
+
+def make_pjit_runner(
+    mesh: Mesh,
+    prior: UniformBoxPrior,
+    simulator: SimulatorFn,
+    cfg: ABCConfig,
+) -> Callable[[jax.Array], RunOutput]:
+    """GSPMD path: shard the chunk dimension of the global batch."""
+    axes = data_axes(mesh)
+    run = abc_run_batch(prior, simulator, cfg)
+    if cfg.strategy == "outfeed":
+        out_shardings = RunOutput(
+            NamedSharding(mesh, P(axes)),  # theta [nc, cs, p]
+            NamedSharding(mesh, P(axes)),  # dist  [nc, cs]
+            NamedSharding(mesh, P(axes)),  # flags [nc]
+            NamedSharding(mesh, P()),  # count
+        )
+    else:
+        out_shardings = RunOutput(
+            NamedSharding(mesh, P()),
+            NamedSharding(mesh, P()),
+            NamedSharding(mesh, P()),
+            NamedSharding(mesh, P()),
+        )
+    return jax.jit(run, out_shardings=out_shardings)
+
+
+def make_shardmap_runner(
+    mesh: Mesh,
+    prior: UniformBoxPrior,
+    simulator: SimulatorFn,
+    cfg: ABCConfig,
+) -> Callable[[jax.Array], RunOutput]:
+    """Explicit per-device replica; `cfg.batch_size` is the GLOBAL batch.
+
+    Mirrors the paper's setup where "2x100k" means 100k per IPU: the global
+    batch is split evenly across every mesh axis.
+    """
+    axes = data_axes(mesh)
+    n_dev = 1
+    for a in axes:
+        n_dev *= mesh.shape[a]
+    if cfg.batch_size % n_dev:
+        raise ValueError(f"batch_size {cfg.batch_size} not divisible by {n_dev} devices")
+    local_cfg = dataclasses.replace(
+        cfg,
+        batch_size=cfg.batch_size // n_dev,
+        chunk_size=min(cfg.chunk_size, cfg.batch_size // n_dev),
+    )
+    local_run = abc_run_batch(prior, simulator, local_cfg)
+
+    @partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=P(),
+        out_specs=RunOutput(P(axes), P(axes), P(axes), P()),
+    )
+    def run(key: jax.Array) -> RunOutput:
+        dev = jax.lax.axis_index(axes)
+        out = local_run(jax.random.fold_in(key, dev))
+        # The ONLY steady-state collective: scalar accept-count reduction.
+        count = jax.lax.psum(out.accept_count, axes)
+        if cfg.strategy == "outfeed":
+            return RunOutput(out.theta, out.dist, out.chunk_flags, count)
+        # topk path: per-device top-k buffers are concatenated along the
+        # leading axis by the out_spec; host filters dist <= eps as usual.
+        return RunOutput(out.theta, out.dist, out.chunk_flags, count)
+
+    return jax.jit(run)
+
+
+def effective_chunk_flags(out: RunOutput) -> jax.Array:
+    return out.chunk_flags

@@ -1,0 +1,105 @@
+"""Accepted-sample containers and posterior summaries (paper §5, Table 8)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Posterior:
+    """A set of accepted ABC posterior samples."""
+
+    theta: np.ndarray  # [N, p]
+    distances: np.ndarray  # [N]
+    tolerance: float
+    param_names: Sequence[str]
+    #: bookkeeping from the run
+    runs: int = 0
+    simulations: int = 0
+    wall_time_s: float = 0.0
+
+    def __post_init__(self):
+        self.theta = np.asarray(self.theta, np.float32).reshape(
+            -1, len(self.param_names)
+        )
+        self.distances = np.asarray(self.distances, np.float32).reshape(-1)
+        assert self.theta.shape[0] == self.distances.shape[0]
+
+    def __len__(self) -> int:
+        return int(self.theta.shape[0])
+
+    @property
+    def acceptance_rate(self) -> float:
+        return len(self) / max(self.simulations, 1)
+
+    def mean(self) -> Dict[str, float]:
+        return {
+            name: float(m)
+            for name, m in zip(self.param_names, self.theta.mean(axis=0))
+        }
+
+    def std(self) -> Dict[str, float]:
+        return {
+            name: float(s)
+            for name, s in zip(self.param_names, self.theta.std(axis=0))
+        }
+
+    def quantiles(self, qs=(0.05, 0.5, 0.95)) -> Dict[str, Dict[float, float]]:
+        out: Dict[str, Dict[float, float]] = {}
+        for j, name in enumerate(self.param_names):
+            out[name] = {
+                float(q): float(np.quantile(self.theta[:, j], q)) for q in qs
+            }
+        return out
+
+    def histogram(self, param: str, bins: int = 20):
+        j = list(self.param_names).index(param)
+        return np.histogram(self.theta[:, j], bins=bins)
+
+    def top(self, k: int) -> "Posterior":
+        """k lowest-distance samples."""
+        idx = np.argsort(self.distances)[:k]
+        return dataclasses.replace(
+            self, theta=self.theta[idx], distances=self.distances[idx]
+        )
+
+    def summary_table(self) -> str:
+        mu, sd = self.mean(), self.std()
+        header = f"{'param':>8} | {'mean':>10} | {'std':>10}"
+        rows = [header, "-" * len(header)]
+        for name in self.param_names:
+            rows.append(f"{name:>8} | {mu[name]:>10.4f} | {sd[name]:>10.4f}")
+        rows.append(
+            f"N={len(self)} eps={self.tolerance:g} runs={self.runs} "
+            f"sims={self.simulations} accept_rate={self.acceptance_rate:.3e} "
+            f"wall={self.wall_time_s:.2f}s"
+        )
+        return "\n".join(rows)
+
+    def save(self, path: str) -> None:
+        np.savez(
+            path,
+            theta=self.theta,
+            distances=self.distances,
+            tolerance=self.tolerance,
+            param_names=np.asarray(self.param_names),
+            runs=self.runs,
+            simulations=self.simulations,
+            wall_time_s=self.wall_time_s,
+        )
+
+    @staticmethod
+    def load(path: str) -> "Posterior":
+        z = np.load(path, allow_pickle=False)
+        return Posterior(
+            theta=z["theta"],
+            distances=z["distances"],
+            tolerance=float(z["tolerance"]),
+            param_names=[str(s) for s in z["param_names"]],
+            runs=int(z["runs"]),
+            simulations=int(z["simulations"]),
+            wall_time_s=float(z["wall_time_s"]),
+        )

@@ -1,0 +1,65 @@
+"""Vectorized priors. The paper uses a uniform box prior U(0, highs) (eq. 2)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformBoxPrior:
+    """U(lows, highs) over R^p, independent per dimension."""
+
+    highs: tuple
+    lows: tuple | None = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "highs", tuple(float(h) for h in self.highs))
+        lows = self.lows or tuple(0.0 for _ in self.highs)
+        object.__setattr__(self, "lows", tuple(float(l) for l in lows))
+        assert len(self.lows) == len(self.highs)
+
+    @property
+    def dim(self) -> int:
+        return len(self.highs)
+
+    def _bounds(self):
+        return (
+            jnp.asarray(self.lows, jnp.float32),
+            jnp.asarray(self.highs, jnp.float32),
+        )
+
+    def sample(self, key: jax.Array, batch_shape: Sequence[int] = ()) -> jax.Array:
+        """Sample [*batch_shape, dim] parameter vectors."""
+        lo, hi = self._bounds()
+        u = jax.random.uniform(key, tuple(batch_shape) + (self.dim,), jnp.float32)
+        return lo + u * (hi - lo)
+
+    def sample_from_uniform(self, u: jax.Array) -> jax.Array:
+        """Map externally-generated U[0,1) draws [..., dim] into the box.
+
+        Used by the Pallas kernel path, which generates uniforms in-kernel.
+        """
+        lo, hi = self._bounds()
+        return lo + u * (hi - lo)
+
+    def log_pdf(self, theta: jax.Array) -> jax.Array:
+        """log p(theta) per sample; -inf outside the box. theta [..., dim]."""
+        lo, hi = self._bounds()
+        inside = jnp.all((theta >= lo) & (theta <= hi), axis=-1)
+        log_vol = jnp.sum(jnp.log(hi - lo))
+        return jnp.where(inside, -log_vol, -jnp.inf)
+
+    def clip(self, theta: jax.Array) -> jax.Array:
+        lo, hi = self._bounds()
+        return jnp.clip(theta, lo, hi)
+
+
+def paper_prior() -> UniformBoxPrior:
+    """The prior of eq. (2): U(0, [1, 100, 2, 1, 1, 1, 1, 2])."""
+    from repro.epi.model import PRIOR_HIGHS
+
+    return UniformBoxPrior(highs=PRIOR_HIGHS)

@@ -1,0 +1,15 @@
+"""Stochastic compartmental epidemiology model substrate (Warne et al. 2020 / paper §2.1)."""
+
+from repro.epi.model import (
+    EpiModelConfig,
+    N_PARAMS,
+    N_STATE,
+    PARAM_NAMES,
+    PRIOR_HIGHS,
+    hazards,
+    initial_state,
+    simulate,
+    simulate_observed,
+    tau_leap_step,
+)
+from repro.epi.data import CountryData, get_dataset, list_datasets, synthetic_dataset

@@ -1,0 +1,118 @@
+"""Flash attention Pallas kernel (causal/GQA/softcap) — the §Perf next lever
+for the dense train cells (EXPERIMENTS.md, gemma2-27b iteration log).
+
+The dense cells' memory term is dominated by the f32 score/softmax round
+trips of the pure-JAX blockwise path: every [q_block, kv_block] score tile
+and its online-softmax statistics cross HBM at fusion boundaries. This
+kernel keeps the entire (m, l, acc) state AND the score tile in VMEM for the
+whole KV sweep — one HBM read per K/V tile, one write per O tile, nothing
+else. Napkin (gemma2 train_4k, per layer per device): blockwise-JAX traffic
+~ 3.4 GB of f32 score-chain tiles vs flash ~ 0.20 GB of bf16 q/k/v/o tiles
+(~17x on the attention term, est. -30% on the cell's t_mem).
+
+Validated against the dense oracle in interpret mode
+(tests/test_kernel_flash.py). NOT wired into the model forward by default:
+Pallas custom-calls are opaque to the dry-run HLO analyzer, so enabling it
+would silently drop the attention term from the roofline accounting; on real
+TPU hardware flip `attn_impl="flash_pallas"` (common.attention routes it).
+
+Grid: (B, H, n_q_blocks); each cell sweeps the KV sequence with a fori_loop,
+carrying (m, l, acc) as VMEM values. K/V arrive as full-sequence blocks per
+(batch, kv-head) — VMEM budget 2*S*D bytes (bf16), fine to S=16k at D=128;
+longer sequences would move KV to a fourth sequential grid axis.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, q_block: int, kv_block: int,
+            seq_len: int, causal: bool, window: Optional[int],
+            softcap: Optional[float], scale: float, kv_len: int):
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # [q_block, D]
+    n_kv = kv_len // kv_block
+
+    q_pos = qi * q_block + jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 0)
+
+    def body(ki, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (0, 0, pl.dslice(ki * kv_block, kv_block), slice(None)))
+        v = pl.load(v_ref, (0, 0, pl.dslice(ki * kv_block, kv_block), slice(None)))
+        s = jnp.dot(q, k[...].astype(jnp.float32).T)  # [q_block, kv_block]
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = ki * kv_block + jax.lax.broadcasted_iota(
+            jnp.int32, (q_block, kv_block), 1
+        )
+        ok = k_pos < seq_len  # padding mask
+        if causal:
+            ok &= k_pos <= q_pos
+        if window is not None:
+            ok &= q_pos - k_pos < window
+        s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.where(ok, jnp.exp(s - m_new[:, None]), 0.0)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[:, None] + jnp.dot(p, v[...].astype(jnp.float32))
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((q_block,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((q_block,), jnp.float32)
+    a0 = jnp.zeros((q_block, q_ref.shape[-1]), jnp.float32)
+    if causal:
+        # only sweep KV blocks that intersect the causal triangle
+        hi = jnp.minimum(((qi + 1) * q_block + kv_block - 1) // kv_block, n_kv)
+    else:
+        hi = n_kv
+    m, l, acc = jax.lax.fori_loop(0, hi, body, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_kernel(
+    q: jax.Array,  # [B, H, Sq_pad, D]
+    k: jax.Array,  # [B, KH, Skv_pad, D]
+    v: jax.Array,
+    *,
+    seq_len: int,  # true (unpadded) kv length
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    q_block: int = 128,
+    kv_block: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    kh, skv = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    assert sq % q_block == 0 and skv % kv_block == 0
+    grid = (b, h, sq // q_block)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, q_block=q_block, kv_block=kv_block, seq_len=seq_len,
+            causal=causal, window=window, softcap=softcap, scale=scale,
+            kv_len=skv,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q_block, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, skv, d), lambda bi, hi, qi, g=g: (bi, hi // g, 0, 0)),
+            pl.BlockSpec((1, 1, skv, d), lambda bi, hi, qi, g=g: (bi, hi // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_block, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,121 @@
+"""Jit'd user-facing wrappers around the Pallas kernels.
+
+`abc_sim_distance` handles layout (transpose, padding), constant packing and
+backend selection. On this CPU container interpret=True executes the kernel
+body in Python for correctness; on TPU hardware set interpret=False (the
+default is auto-detected from the backend).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import abc_sim
+
+_CONST_LANES = abc_sim._CONST_LANES
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("population", "a0", "r0", "d0", "tile", "interpret")
+)
+def abc_sim_distance(
+    theta: jax.Array,  # [B, 8] f32
+    seed: jax.Array,  # uint32 scalar
+    observed: jax.Array,  # [3, T] f32
+    *,
+    population: float,
+    a0: float,
+    r0: float = 0.0,
+    d0: float = 0.0,
+    tile: int = 1024,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused simulate+distance for a batch of parameter samples. Returns [B]."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    theta = jnp.asarray(theta, jnp.float32)
+    batch, n_params = theta.shape
+    assert n_params == 8, theta.shape
+    num_days = observed.shape[1]
+
+    tile = min(tile, max(128, 1 << (batch - 1).bit_length()))
+    pad_b = (-batch) % tile
+    theta_t = jnp.swapaxes(theta, 0, 1)  # [8, B]
+    if pad_b:
+        theta_t = jnp.pad(theta_t, ((0, 0), (0, pad_b)))
+
+    t_pad = int(np.ceil(num_days / 128) * 128)
+    obs_pad = jnp.zeros((8, t_pad), jnp.float32)
+    obs_pad = obs_pad.at[:3, :num_days].set(jnp.asarray(observed, jnp.float32))
+
+    fconsts = jnp.zeros((1, _CONST_LANES), jnp.float32)
+    fconsts = fconsts.at[0, 0].set(population)
+    fconsts = fconsts.at[0, 1].set(a0)
+    fconsts = fconsts.at[0, 2].set(r0)
+    fconsts = fconsts.at[0, 3].set(d0)
+    iconsts = jnp.zeros((1, _CONST_LANES), jnp.int32)
+    iconsts = iconsts.at[0, 0].set(jnp.asarray(seed, jnp.uint32).astype(jnp.int32))
+
+    dist = abc_sim.abc_sim_distance_kernel(
+        theta_t,
+        obs_pad,
+        fconsts,
+        iconsts,
+        num_days=num_days,
+        tile=tile,
+        interpret=interpret,
+    )
+    return dist[0, :batch]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "q_block",
+                     "kv_block", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # [B, S, H, D] (model layout)
+    k: jax.Array,  # [B, T, KH, D]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+    q_block: int = 128,
+    kv_block: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """User-facing flash attention: handles layout + padding. Returns the
+    model-layout output [B, S, H, D]."""
+    from repro.kernels import flash_attention as fa
+
+    if interpret is None:
+        interpret = _auto_interpret()
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    qt = jnp.moveaxis(q, 2, 1)  # [B, H, S, D]
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    q_block = min(q_block, max(8, 1 << (s - 1).bit_length()))
+    kv_block = min(kv_block, max(8, 1 << (t - 1).bit_length()))
+    pad_q = (-s) % q_block
+    pad_t = (-t) % kv_block
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_t:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_t), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_t), (0, 0)))
+    out = fa.flash_attention_kernel(
+        qt, kt, vt, seq_len=t, causal=causal, window=window, softcap=softcap,
+        scale=scale, q_block=q_block, kv_block=kv_block, interpret=interpret,
+    )
+    return jnp.moveaxis(out[:, :, :s], 1, 2)

@@ -1,0 +1,434 @@
+"""Compiled-HLO analysis: loop-aware FLOP/byte/collective accounting + roofline.
+
+This is the "profiler" of the dry-run methodology: with no TPU attached, the
+three roofline terms come from the compiled artifact —
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = collective_wire_bytes_per_device / link_bw
+
+`compiled.cost_analysis()` reports while-loop bodies ONCE (verified
+empirically: a 5-step scan reports ~1x the matmul flops), which silently
+drops ~n_layers x of the real work for scanned models. So we analyze
+`compiled.as_text()` directly:
+
+  * computations are parsed into symbol tables (every instruction's result
+    type is inline; operand types resolve by name, incl. tuple params);
+  * the call graph is walked from ENTRY; while bodies multiply downstream
+    costs by the trip count recovered from the loop condition's comparison
+    constant (the condition block contains exactly the bound constant);
+  * dot ops contribute 2 * prod(result dims) * prod(contracted dims) FLOPs
+    (matmul-only count — elementwise is <5% for LM archs and is reported
+    separately as a fusion-byte-based bound);
+  * every compute op contributes operand+result bytes (fusions are treated
+    as single kernels: internal traffic hidden, matching XLA's own model);
+  * collectives are credited with ring-algorithm wire bytes.
+
+The raw cost_analysis() numbers are retained in the record for reference.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+# TPU v5e constants (mandated by the brief)
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s
+LINK_BW = 50e9  # B/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_HEADER_RE = re.compile(r"^(?:ENTRY )?%?([\w.\-]+) \((.*)\)\s*->")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT )?%?([\w.\-]+) = ((?:\([^)]*\)|\S+)) ([\w\-]+)(?:\(([^)]*)\))?"
+)
+_PARAM_RE = re.compile(r"([\w.\-]+): ((?:\([^)]*\)|[^,)]+))")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_ATTR_COMP_RE = re.compile(r"(condition|body|calls|to_apply|branch_computations)=")
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute",
+)
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def _type_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES or dt == "token":
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _type_dims(type_str):
+        if dt == "token":
+            continue
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m and m.group(1):
+        first = m.group(1).split("},{")[0]
+        return max(1, len([x for x in re.split(r"[,{}]", first) if x.strip()]))
+    return 1
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    symbols: Dict[str, str]  # name -> type string
+    instrs: List[Instr]
+
+
+def parse_hlo(txt: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = None
+    for raw in txt.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        hm = _HEADER_RE.match(s)
+        if hm and line.endswith("{"):
+            cur = Computation(hm.group(1), {}, [])
+            comps[cur.name] = cur
+            if line.lstrip().startswith("ENTRY"):
+                entry = cur.name
+            # parameters declared in the header carry their types
+            for pname, ptype in _PARAM_RE.findall(hm.group(2)):
+                cur.symbols[pname] = ptype
+            continue
+        if cur is None:
+            continue
+        if s == "}":
+            cur = None
+            continue
+        im = _INSTR_RE.match(line)
+        if im:
+            name, type_str, op, args = im.group(1), im.group(2), im.group(3), im.group(4)
+            operands = re.findall(r"%([\w.\-]+)", args or "")
+            cur.symbols[name] = type_str
+            cur.instrs.append(Instr(name, type_str, op, operands, s))
+    return comps, entry
+
+
+def _trip_count(cond_name: str, comps: Dict[str, Computation]) -> int:
+    """The condition block contains the loop bound as its only constant."""
+    best = 1
+    comp = comps.get(cond_name)
+    if comp is None:
+        return best
+    consts = []
+    for ins in comp.instrs:
+        consts += [int(c) for c in _CONST_RE.findall(ins.line)]
+        # one level of indirection through fused compares
+        if ins.op == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", ins.line)
+            if m and m.group(1) in comps:
+                for ins2 in comps[m.group(1)].instrs:
+                    consts += [int(c) for c in _CONST_RE.findall(ins2.line)]
+    return max(consts) if consts else 1
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    dims = _type_dims(ins.type_str)
+    if not dims:
+        return 0.0
+    out_n = 1
+    for d in dims[0][1]:
+        out_n *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    k = 1
+    if m and ins.operands:
+        lhs_type = comp.symbols.get(ins.operands[0], "")
+        lhs_dims = _type_dims(lhs_type)
+        if lhs_dims:
+            for idx in (int(i) for i in m.group(1).split(",") if i):
+                if idx < len(lhs_dims[0][1]):
+                    k *= lhs_dims[0][1][idx]
+    return 2.0 * out_n * k
+
+
+_LAYOUT_ONLY_OPS = {
+    "parameter", "convert", "copy", "transpose", "bitcast", "reshape",
+    "get-tuple-element", "tuple", "dynamic-slice", "slice",
+}
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float = 0.0  # matmul flops, loop-corrected, per device
+    bytes_accessed: float = 0.0  # operand+result bytes, loop-corrected
+    #: bytes of pure convert/copy/transpose fusions — mostly CPU-lowering
+    #: artifacts (bf16 dot inputs promoted to f32); reported separately so
+    #: the memory term reflects TPU-real traffic (see EXPERIMENTS.md §Method)
+    layout_bytes: float = 0.0
+    collective_wire: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_operand: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    while_trips: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def total_wire(self) -> float:
+        return sum(self.collective_wire.values())
+
+    @property
+    def total_operand(self) -> float:
+        return sum(self.collective_operand.values())
+
+
+def _coll_kind(op: str) -> Optional[str]:
+    base = op[:-6] if op.endswith("-start") else op
+    return base if base in COLLECTIVES else None
+
+
+def analyze_hlo(txt: str) -> HloCosts:
+    comps, entry = parse_hlo(txt)
+    costs = HloCosts()
+
+    def _called(ins: Instr) -> Optional[Computation]:
+        m = re.search(r"calls=%?([\w.\-]+)", ins.line)
+        return comps.get(m.group(1)) if m else None
+
+    def _is_layout_fusion(ins: Instr) -> bool:
+        sub = _called(ins)
+        return sub is not None and all(i.op in _LAYOUT_ONLY_OPS for i in sub.instrs)
+
+    def _is_inplace_update(ins: Instr) -> bool:
+        if ins.op == "dynamic-update-slice":
+            return True
+        if ins.op != "fusion":
+            return False
+        sub = _called(ins)
+        return sub is not None and any(
+            i.op == "dynamic-update-slice" for i in sub.instrs
+        )
+
+    def _fusion_operand_bytes(ins: Instr, comp: Computation) -> List[float]:
+        """Operand bytes for a fusion, substituting the SLICED size when the
+        fusion consumes a whole stacked array but only dynamic-slices it
+        internally (scan-over-layers weight/cache slicing — charging the full
+        stacked operand overcounts by n_layers)."""
+        full = [float(_shape_bytes(comp.symbols.get(o, ""))) for o in ins.operands]
+        sub = _called(ins)
+        if sub is None:
+            return full
+        # param index -> effective bytes, when every use is a dynamic-slice
+        params = [n for n in sub.symbols if re.match(r"param_\d+", n)]
+        sliced: Dict[int, float] = {}
+        uses: Dict[str, List[Instr]] = {}
+        for i2 in sub.instrs:
+            for o in i2.operands:
+                uses.setdefault(o, []).append(i2)
+        for pname in params:
+            m = re.match(r"param_(\d+)", pname)
+            idx = int(m.group(1))
+            us = uses.get(pname, [])
+            if us and all(u.op == "dynamic-slice" for u in us):
+                sliced[idx] = float(max(_shape_bytes(u.type_str) for u in us))
+        return [sliced.get(i, b) for i, b in enumerate(full)]
+
+    def walk(name: str, mult: float, depth: int = 0):
+        comp = comps.get(name)
+        if comp is None or depth > 10:
+            return
+        for ins in comp.instrs:
+            kind = _coll_kind(ins.op)
+            if kind:
+                rb = _shape_bytes(ins.type_str)
+                n = max(_group_size(ins.line), 1)
+                if kind == "all-gather":
+                    operand, wire = rb / n, rb * (n - 1) / n
+                elif kind == "reduce-scatter":
+                    operand, wire = rb * n, rb * (n - 1)
+                elif kind == "all-reduce":
+                    operand, wire = rb, 2 * rb * (n - 1) / n
+                elif kind == "all-to-all":
+                    operand, wire = rb, rb * (n - 1) / n
+                else:
+                    operand, wire = rb, rb
+                costs.collective_wire[kind] = (
+                    costs.collective_wire.get(kind, 0.0) + wire * mult
+                )
+                costs.collective_operand[kind] = (
+                    costs.collective_operand.get(kind, 0.0) + operand * mult
+                )
+                costs.collective_counts[kind] = costs.collective_counts.get(kind, 0) + 1
+            if ins.op == "while":
+                m = re.search(r"condition=%?([\w.\-]+), body=%?([\w.\-]+)", ins.line)
+                if m:
+                    trips = _trip_count(m.group(1), comps)
+                    costs.while_trips.append(trips)
+                    walk(m.group(2), mult * trips, depth + 1)
+                continue
+            if ins.op in ("call", "async-start"):
+                m = re.search(r"to_apply=%?([\w.\-]+)", ins.line)
+                if m:
+                    walk(m.group(1), mult, depth + 1)
+            if ins.op == "conditional":
+                for cname in re.findall(r"%([\w.\-]+)", ins.line.split("branch_computations=")[-1])[:8]:
+                    walk(cname, mult, depth + 1)
+                continue
+            if ins.op in ("dot", "dot-general"):
+                costs.flops += _dot_flops(ins, comp) * mult
+            if ins.op == "fusion":
+                # fusions may wrap a single dot — count it
+                m = re.search(r"calls=%?([\w.\-]+)", ins.line)
+                if m and m.group(1) in comps:
+                    for sub in comps[m.group(1)].instrs:
+                        if sub.op in ("dot", "dot-general"):
+                            costs.flops += _dot_flops(sub, comps[m.group(1)]) * mult
+            if ins.op not in _SKIP_BYTES_OPS and ins.op != "while":
+                b = _shape_bytes(ins.type_str)
+                if ins.op == "fusion":
+                    op_bytes = _fusion_operand_bytes(ins, comp)
+                else:
+                    op_bytes = [
+                        _shape_bytes(comp.symbols.get(o, "")) for o in ins.operands
+                    ]
+                b += sum(op_bytes)
+                if _is_inplace_update(ins) and op_bytes:
+                    # in-place dynamic-update-slice: the aliased buffer is
+                    # neither fully read nor fully re-written — charge the
+                    # slice, not the buffer (result ~= max operand).
+                    big = max(op_bytes)
+                    b = max(b - 2 * big, min(op_bytes))
+                if ins.op == "fusion" and _is_layout_fusion(ins):
+                    costs.layout_bytes += b * mult
+                else:
+                    costs.bytes_accessed += b * mult
+
+    if entry:
+        walk(entry, 1.0)
+    return costs
+
+
+# ----------------------------------------------------------------- roofline
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per-device matmul flops (loop-corrected)
+    bytes_accessed: float  # per-device bytes (loop-corrected)
+    collective_wire: float
+    collective_operand: float
+    collective_detail: Dict[str, float]
+    n_devices: int
+    model_flops: float  # analytic global model flops for this step
+    raw_cost_analysis: Dict[str, float]
+    layout_bytes: float = 0.0  # CPU-lowering dtype/layout copies (reported, excluded)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_wire / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO flops x devices) — remat/redundancy waste."""
+        total = self.flops * self.n_devices
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-flop utilization if the step ran exactly at the dominant
+        roofline term (the roofline-fraction score we hillclimb)."""
+        denom = self.t_bound * self.n_devices * PEAK_FLOPS
+        return self.model_flops / denom if denom else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes_accessed,
+            "collective_wire_bytes": self.collective_wire,
+            "collective_operand_bytes": self.collective_operand,
+            "collective_detail": self.collective_detail,
+            "n_devices": self.n_devices,
+            "model_flops": self.model_flops,
+            "raw_cost_analysis": self.raw_cost_analysis,
+            "layout_bytes": self.layout_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flop_ratio": self.useful_flop_ratio,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def model_step_flops(model, shape) -> float:
+    """6*N*D (train) / 2*N*D (inference), N = active params."""
+    n = model.active_param_count()
+    if shape.mode == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.mode == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def roofline_from_compiled(compiled, model, shape, n_devices: int) -> Roofline:
+    ca = compiled.cost_analysis() or {}
+    costs = analyze_hlo(compiled.as_text())
+    return Roofline(
+        flops=costs.flops,
+        bytes_accessed=costs.bytes_accessed,
+        collective_wire=costs.total_wire,
+        collective_operand=costs.total_operand,
+        collective_detail=dict(costs.collective_wire),
+        n_devices=n_devices,
+        model_flops=model_step_flops(model, shape),
+        raw_cost_analysis={
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        },
+        layout_bytes=costs.layout_bytes,
+    )

@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (dry-run contract)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 chips per pod; two pods for the multi-pod dry run."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(n_devices: int | None = None, model: int = 1):
+    """Small mesh over this host's devices (tests / CPU demos)."""
+    n = n_devices or len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh(
+        (n // model, model),
+        ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

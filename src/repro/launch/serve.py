@@ -1,0 +1,108 @@
+"""LM serving driver: batched prefill + decode loop with a request queue.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
+        --requests 8 --prompt-len 16 --gen 8
+
+Implements the paper-inspired fixed-shape service pattern: a static decode
+batch, requests slotted in/out of it (continuous batching), per-slot KV
+caches written in place — the serving analogue of the ABC engine's
+fixed-shape outfeed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.mesh import make_host_mesh
+from repro.models.registry import get_model
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4, help="decode batch slots")
+    args = ap.parse_args(argv)
+
+    model = get_model(args.arch, smoke=args.smoke)
+    if model.family == "encdec":
+        raise SystemExit("serve.py demo drives decoder-family archs")
+    mesh = make_host_mesh()
+    vocab = model.cfg.vocab if hasattr(model.cfg, "vocab") else model.cfg.lm.vocab
+    cache_len = args.prompt_len + args.gen
+
+    with jax.set_mesh(mesh):
+        params = model.init_params(jax.random.PRNGKey(0))
+        cache_shapes = model.init_cache_shape(args.slots, cache_len)
+        zero_cache = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), cache_shapes,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+        )
+
+        decode = jax.jit(model.decode_step, donate_argnums=(1,))
+
+        rng = np.random.default_rng(0)
+        queue = [
+            rng.integers(0, vocab, size=args.prompt_len).astype(np.int32)
+            for _ in range(args.requests)
+        ]
+        done = []
+        t0 = time.time()
+        # static decode batch: slots hold independent requests; prompts are
+        # fed token-by-token (prefill-as-decode keeps the demo single-step;
+        # the dry-run exercises the real batched prefill path)
+        slot_req = [None] * args.slots
+        slot_pos = np.zeros(args.slots, np.int64)
+        slot_out = [[] for _ in range(args.slots)]
+        cache = zero_cache
+        steps = 0
+        while queue or any(r is not None for r in slot_req):
+            for s in range(args.slots):
+                if slot_req[s] is None and queue:
+                    slot_req[s] = queue.pop(0).tolist()
+                    slot_pos[s] = 0
+                    slot_out[s] = []
+            toks = np.zeros((args.slots, 1), np.int32)
+            for s, req in enumerate(slot_req):
+                if req is None:
+                    continue
+                p = int(slot_pos[s])
+                if p < len(req):
+                    toks[s, 0] = req[p]  # still consuming the prompt
+                elif slot_out[s]:
+                    toks[s, 0] = slot_out[s][-1]
+            pos = int(slot_pos.max())
+            logits, cache = decode(
+                params, cache, {"tokens": jnp.asarray(toks), "pos": jnp.asarray(pos, jnp.int32)}
+            )
+            steps += 1
+            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+            for s, req in enumerate(slot_req):
+                if req is None:
+                    continue
+                slot_pos[s] += 1
+                if slot_pos[s] >= len(req):
+                    slot_out[s].append(int(nxt[s]))
+                if len(slot_out[s]) >= args.gen:
+                    done.append((req, slot_out[s]))
+                    slot_req[s] = None
+        dt = time.time() - t0
+        print(
+            f"[serve] {len(done)} requests, {steps} decode steps, "
+            f"{steps * args.slots / dt:.1f} tok/s (host mesh, CPU)"
+        )
+        for i, (req, out) in enumerate(done[:3]):
+            print(f"  req{i}: prompt[:4]={req[:4]} -> gen={out}")
+        return len(done)
+
+
+if __name__ == "__main__":
+    main()

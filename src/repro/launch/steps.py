@@ -1,0 +1,262 @@
+"""Builds the pjit'd train/serve steps with divisibility-safe shardings.
+
+JAX rejects uneven shardings on jit arguments, so every (tensor dim, mesh
+axes) assignment is validated against the actual dim size and dropped to
+replicated when it does not divide (e.g. whisper's vocab 51866 on TP=16,
+kv_heads=8 on TP=16, batch=1 on long_500k). For long_500k the KV cache is
+sequence-sharded over the data axes instead (the batch of 1 cannot be) —
+ring-style decode."""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.registry import ModelDef
+from repro.models.sharding import dp_axes, rules_for_mesh
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def safe_sharding(mesh: Mesh, sds, logical, rules) -> NamedSharding:
+    """Logical spec -> NamedSharding. Drops assignments that do not divide
+    the dim, and (first-come) assignments whose mesh axis is already used by
+    an earlier dim of the same tensor (e.g. decode caches map both seq and
+    kv_heads to 'model'; seq wins, kv_heads falls back to replicated)."""
+    parts = []
+    used: set = set()
+    for dim, name in zip(sds.shape, logical):
+        axes = rules.get(name) if name is not None else None
+        if axes is not None:
+            ax_tuple = (axes,) if isinstance(axes, str) else tuple(axes)
+            ax_tuple = tuple(a for a in ax_tuple if a not in used)
+            axes = ax_tuple if len(ax_tuple) > 1 else (ax_tuple[0] if ax_tuple else None)
+        if axes is not None and dim > 0 and dim % _axes_size(mesh, axes) == 0:
+            parts.append(axes)
+            used.update((axes,) if isinstance(axes, str) else axes)
+        else:
+            parts.append(None)
+    return NamedSharding(mesh, P(*parts))
+
+
+def _is_logical_leaf(x):
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+def tree_shardings(mesh, shape_tree, logical_tree, rules):
+    return jax.tree.map(
+        lambda s, l: safe_sharding(mesh, s, l, rules),
+        shape_tree,
+        logical_tree,
+        is_leaf=lambda x: _is_logical_leaf(x),
+    )
+
+
+def _opt_logical(param_logical):
+    return {
+        "mu": param_logical,
+        "nu": param_logical,
+        "step": (),
+    }
+
+
+@dataclasses.dataclass
+class BuiltStep:
+    fn: Callable  # the jit'd function
+    arg_shapes: Tuple[Any, ...]  # abstract inputs for .lower(*arg_shapes)
+    in_shardings: Any
+    out_shardings: Any
+    description: str
+
+
+def build_train_step(
+    model: ModelDef,
+    mesh: Mesh,
+    shape,
+    opt_cfg: Optional[AdamWConfig] = None,
+    rules_overrides: Optional[dict] = None,
+    donate: bool = True,
+    microbatch: int = 1,
+) -> BuiltStep:
+    """train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ZeRO-1: the f32 AdamW moments additionally shard their "embed" dim over
+    the data axes (params keep TP-only sharding). AdamW is 10 bytes/param, so
+    a 27B model's moments (216 GB f32) cannot live on 16 TP shards (13.5
+    GB/chip); over 256 chips they are 0.84 GB. GSPMD reduce-scatters grads
+    into the update and all-gathers fresh params — the ZeRO-1 schedule.
+    (Full FSDP — sharding the params' embed dim too — was tried and REFUTED:
+    without per-op activation constraints the partitioner chose a pathological
+    schedule, 2.7x memory-term regression; see EXPERIMENTS.md §Perf.)
+    """
+    opt_cfg = opt_cfg or AdamWConfig()
+    rules = rules_for_mesh(mesh, rules_overrides)
+    opt_rules = rules_for_mesh(
+        mesh, {**(rules_overrides or {}), "embed": ("pod", "data")}
+    )
+
+    params_shapes = model.param_shapes()
+    opt_shapes = jax.eval_shape(adamw_init, params_shapes)
+    batch_shapes, batch_logical = model.make_inputs(
+        "train", shape.global_batch, shape.seq_len
+    )
+
+    p_sh = tree_shardings(mesh, params_shapes, model.param_logical(), rules)
+    o_sh = tree_shardings(
+        mesh, opt_shapes, _opt_logical(model.param_logical()), opt_rules
+    )
+    b_sh = tree_shardings(mesh, batch_shapes, batch_logical, rules)
+    m_sh = {"loss": NamedSharding(mesh, P()), "grad_norm": NamedSharding(mesh, P()),
+            "lr": NamedSharding(mesh, P())}
+
+    def train_step(params, opt_state, batch):
+        if microbatch > 1:
+            # gradient accumulation: activation working set scales 1/microbatch
+            # (the gemma2-27b §Perf lever); grads accumulate in f32
+            mbs = jax.tree.map(
+                lambda x: jnp.reshape(
+                    x, (microbatch, x.shape[0] // microbatch) + x.shape[1:]
+                ),
+                batch,
+            )
+
+            acc_dtype = (
+                jnp.bfloat16 if os.environ.get("REPRO_GRAD_ACC_BF16") == "1"
+                else jnp.float32
+            )
+
+            def body(carry, mb):
+                loss_acc, g_acc = carry
+                loss, grads = jax.value_and_grad(model.loss)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(acc_dtype), g_acc, grads
+                )
+                return (loss_acc + loss, g_acc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params
+            )
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zeros), mbs
+            )
+            loss = loss / microbatch
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+        else:
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        new_params, new_opt, metrics = adamw_update(params, grads, opt_state, opt_cfg)
+        return new_params, new_opt, {"loss": loss, **metrics}
+
+    fn = jax.jit(
+        train_step,
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, m_sh),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return BuiltStep(
+        fn=fn,
+        arg_shapes=(params_shapes, opt_shapes, batch_shapes),
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, m_sh),
+        description=f"train_step[{model.name} x {shape.name}]",
+    )
+
+
+def build_prefill_step(
+    model: ModelDef, mesh: Mesh, shape, rules_overrides: Optional[dict] = None
+) -> BuiltStep:
+    rules = rules_for_mesh(mesh, rules_overrides)
+    params_shapes = model.param_shapes()
+    batch_shapes, batch_logical = model.make_inputs(
+        "prefill", shape.global_batch, shape.seq_len
+    )
+    p_sh = tree_shardings(mesh, params_shapes, model.param_logical(), rules)
+    b_sh = tree_shardings(mesh, batch_shapes, batch_logical, rules)
+
+    def prefill(params, batch):
+        return model.prefill(params, batch)
+
+    # logits [B, S, V]: batch over dp, vocab over model (avoid the gather)
+    logits_shape = jax.eval_shape(prefill, params_shapes, batch_shapes)
+    l_sh = safe_sharding(
+        mesh, logits_shape, ("batch", None, "vocab"), rules
+    )
+    fn = jax.jit(prefill, in_shardings=(p_sh, b_sh), out_shardings=l_sh)
+    return BuiltStep(
+        fn=fn,
+        arg_shapes=(params_shapes, batch_shapes),
+        in_shardings=(p_sh, b_sh),
+        out_shardings=l_sh,
+        description=f"prefill[{model.name} x {shape.name}]",
+    )
+
+
+def build_decode_step(
+    model: ModelDef, mesh: Mesh, shape, rules_overrides: Optional[dict] = None
+) -> BuiltStep:
+    """serve_step: one new token against a seq_len KV cache."""
+    rules = rules_for_mesh(mesh, rules_overrides)
+    dp = dp_axes(mesh)
+    rules = dict(rules)
+    if shape.global_batch % _axes_size(mesh, dp):
+        # batch unshardable (long_500k, B=1): shard the cache SEQUENCE over
+        # every axis — each chip holds a 1/512 slice of the 512k-token cache.
+        rules["seq"] = dp + ("model",)
+        rules["batch"] = None
+    else:
+        # decode caches are the HBM hog (e.g. internlm2 decode_32k: 412 GB
+        # globally). kv_heads rarely divide TP=16 (8, 20...), so shard the
+        # cache SEQ dim over the model axis instead; decode attention over a
+        # seq-sharded cache is a partial-softmax + psum (GSPMD inserts it).
+        rules["seq"] = ("model",)
+
+    params_shapes = model.param_shapes()
+    batch_shapes, batch_logical = model.make_inputs(
+        "decode", shape.global_batch, shape.seq_len
+    )
+    cache_shapes = model.init_cache_shape(shape.global_batch, shape.seq_len)
+
+    p_sh = tree_shardings(mesh, params_shapes, model.param_logical(), rules)
+    b_sh = tree_shardings(mesh, batch_shapes, batch_logical, rules)
+    c_sh = tree_shardings(mesh, cache_shapes, model.cache_logical(), rules)
+
+    def decode(params, cache, batch):
+        return model.decode_step(params, cache, batch)
+
+    logits_shape, _ = jax.eval_shape(decode, params_shapes, cache_shapes, batch_shapes)
+    l_sh = safe_sharding(mesh, logits_shape, ("batch", None, "vocab"), rules)
+    fn = jax.jit(
+        decode,
+        in_shardings=(p_sh, c_sh, b_sh),
+        out_shardings=(l_sh, c_sh),
+        donate_argnums=(1,),
+    )
+    return BuiltStep(
+        fn=fn,
+        arg_shapes=(params_shapes, cache_shapes, batch_shapes),
+        in_shardings=(p_sh, c_sh, b_sh),
+        out_shardings=(l_sh, c_sh),
+        description=f"decode[{model.name} x {shape.name}]",
+    )
+
+
+def build_step(model: ModelDef, mesh: Mesh, shape, **kw) -> BuiltStep:
+    if shape.mode == "train":
+        return build_train_step(model, mesh, shape, **kw)
+    if shape.mode == "prefill":
+        return build_prefill_step(model, mesh, shape, **kw)
+    return build_decode_step(model, mesh, shape, **kw)

@@ -1,0 +1,348 @@
+"""Shared neural layers for the architecture zoo (pure JAX, explicit pytrees).
+
+Conventions:
+  * params are nested dicts of jnp arrays; layer stacks are STACKED on a
+    leading "layers" axis and consumed with jax.lax.scan (compile-time
+    containment for 48-layer models; see DESIGN.md §5).
+  * activations/params bf16, norms/softmax/router f32 (standard practice).
+  * attention: q [B,S,H,D], k/v [B,T,K,D] with H = K*G (GQA groups).
+    `dense` path for short sequences, `blockwise` online-softmax path for
+    32k+ (no [S,T] materialization), `decode` path for single-token steps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_DTYPE = jnp.bfloat16
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------- init utils
+def ninit(key, shape, fan_in=None, dtype=DEFAULT_DTYPE):
+    """Truncated-normal-ish init scaled by 1/sqrt(fan_in)."""
+    fan_in = fan_in or shape[0]
+    std = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def keygen(key):
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub
+
+
+# ----------------------------------------------------------------- norms etc.
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32) + bias.astype(
+        jnp.float32
+    )
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------- RoPE
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding. x: [B, S, H, D] (D even), positions: [B, S] or [S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freq  # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]  # [B, S, 1, half]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ attention
+def _score_mod(s, cap):
+    return softcap(s, cap) if cap is not None else s
+
+
+def dense_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Reference attention, materializes [.., S, T]. For short sequences/tests."""
+    b, sq, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    qq = (q * scale).reshape(b, sq, kh, g, d)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qq, k).astype(jnp.float32)
+    s = _score_mod(s, attn_softcap)
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(t)
+    ok = jnp.ones((sq, t), bool)
+    if causal:
+        ok &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        ok &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v.dtype), v)
+    return out.reshape(b, sq, h, d)
+
+
+def blockwise_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    q_block: int = 512,
+    kv_block: int = 512,
+) -> jax.Array:
+    """Online-softmax (flash-style) attention in pure JAX.
+
+    Never materializes [S, T]; lax.scan over KV blocks with running
+    (max, denom, acc) carried per q block. Memory O(S*D + blocks).
+    """
+    b, sq, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, t)
+    assert sq % q_block == 0 and t % kv_block == 0, (sq, q_block, t, kv_block)
+    nq, nk = sq // q_block, t // kv_block
+
+    qr = (q * scale).reshape(b, nq, q_block, kh, g, d)
+    kr = k.reshape(b, nk, kv_block, kh, d)
+    vr = v.reshape(b, nk, kv_block, kh, d)
+
+    q_ids = jnp.arange(q_block)
+    k_ids = jnp.arange(kv_block)
+
+    def one_q_block(qi, qblk):
+        # qblk: [b, q_block, kh, g, d]
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, kblk, vblk = inp
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qblk, kblk).astype(jnp.float32)
+            s = _score_mod(s, attn_softcap)
+            qpos = qi * q_block + q_ids
+            kpos = ki * kv_block + k_ids
+            ok = jnp.ones((q_block, kv_block), bool)
+            if causal:
+                ok &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                ok &= qpos[:, None] - kpos[None, :] < window
+            s = jnp.where(ok[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(vblk.dtype), vblk)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kh, g, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, q_block, d), v.dtype)
+        ks = jnp.arange(nk)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (ks, jnp.moveaxis(kr, 1, 0), jnp.moveaxis(vr, 1, 0))
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+        return out  # [b, kh, g, q_block, d]
+
+    # checkpoint per q-block: the backward pass recomputes the online-softmax
+    # statistics instead of storing every [q_block, kv_block] score matrix —
+    # without this, training at 4k+ context saves O(S^2) f32 residuals per
+    # layer (measured 330+ GB/device traffic on gemma-2b train_4k).
+    outs = jax.vmap(jax.checkpoint(one_q_block), in_axes=(0, 1), out_axes=1)(
+        jnp.arange(nq), qr
+    )  # [b, nq, kh, g, q_block, d]
+    out = jnp.moveaxis(outs, (2, 3), (3, 4))  # [b, nq, q_block, kh, g, d]
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,  # [B, 1, H, D]
+    k_cache: jax.Array,  # [B, T, K, D]
+    v_cache: jax.Array,
+    *,
+    valid_len: Optional[jax.Array] = None,  # [B] or None = full cache valid
+    window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """One-token attention against a KV cache (memory-bound serve step)."""
+    b, _, h, d = q.shape
+    t, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    qq = (q * scale).reshape(b, kh, g, d)
+    s = jnp.einsum("bkgd,btkd->bkgt", qq, k_cache).astype(jnp.float32)
+    s = _score_mod(s, attn_softcap)
+    kpos = jnp.arange(t)
+    if valid_len is not None:
+        ok = kpos[None, :] < valid_len[:, None]  # [B, T]
+        if window is not None:
+            ok &= kpos[None, :] >= valid_len[:, None] - window
+        s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    elif window is not None:
+        s = jnp.where((kpos >= t - window)[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, h, d)
+
+
+def attention(q, k, v, *, impl: str = "auto", **kw):
+    if impl == "auto":
+        impl = "blockwise" if q.shape[1] * k.shape[1] > 2048 * 2048 else "dense"
+    if impl == "dense":
+        return dense_attention(q, k, v, **kw)
+    if impl == "blockwise":
+        return blockwise_attention(q, k, v, **kw)
+    if impl == "flash_pallas":
+        # TPU-hardware path (kernels/flash_attention.py); kept off the default
+        # route because Pallas custom-calls are opaque to the dry-run HLO
+        # analyzer (EXPERIMENTS.md §Method / §Perf gemma2 log)
+        from repro.kernels import ops as kernel_ops
+
+        return kernel_ops.flash_attention(
+            q, k, v,
+            causal=kw.get("causal", True),
+            window=kw.get("window"),
+            softcap=kw.get("attn_softcap"),
+            scale=kw.get("scale"),
+        )
+    raise ValueError(impl)
+
+
+# ------------------------------------------------------------------------ MLP
+def gated_mlp(x, wg, wu, wd, act: str = "silu"):
+    """SwiGLU/GeGLU feed-forward: act(x@wg) * (x@wu) @ wd."""
+    a = x @ wg
+    if act == "silu":
+        a = jax.nn.silu(a.astype(jnp.float32)).astype(x.dtype)
+    elif act == "gelu":
+        a = jax.nn.gelu(a.astype(jnp.float32), approximate=True).astype(x.dtype)
+    else:
+        raise ValueError(act)
+    return (a * (x @ wu)) @ wd
+
+
+def vanilla_mlp(x, w1, b1, w2, b2):
+    """Plain GELU MLP (whisper/ViT style)."""
+    a = jax.nn.gelu((x @ w1 + b1).astype(jnp.float32), approximate=True)
+    return (a.astype(x.dtype) @ w2 + b2.astype(x.dtype)).astype(x.dtype)
+
+
+# ----------------------------------------------------------- KV quantization
+def kv_quantize(x: jax.Array):
+    """Per-(token, head) symmetric int8 quantization of K/V tiles.
+
+    x [B, S, K, D] -> (q int8 [B,S,K,D], scale f32 [B,S,K,1]). Halves decode
+    HBM bytes/token — the §Perf lever for memory-bound decode cells."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def kv_dequantize(q: jax.Array, scale: jax.Array, dtype=DEFAULT_DTYPE) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+# ------------------------------------------------------------------ embedding
+def embed(tokens: jax.Array, table: jax.Array, scale_by_dim: bool = False):
+    x = jnp.take(table, tokens, axis=0)
+    if scale_by_dim:
+        x = x * np.sqrt(table.shape[1])
+    return x.astype(DEFAULT_DTYPE)
+
+
+def unembed(x: jax.Array, table: jax.Array, logit_cap: Optional[float] = None):
+    logits = jnp.einsum("bsd,vd->bsv", x, table).astype(jnp.float32)
+    if logit_cap is not None:
+        logits = logit_cap * jnp.tanh(logits / logit_cap)
+    return logits
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token-level cross entropy. logits [B,S,V] f32, labels [B,S] int."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def _pick_chunk(s: int, target: int = 1024) -> int:
+    for c in (target, 512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if c <= s and s % c == 0:
+            return c
+    return s
+
+
+def cross_entropy_chunked(
+    x: jax.Array,  # [B, S, d] final features
+    table: jax.Array,  # [V, d] unembedding
+    labels: jax.Array,  # [B, S]
+    logit_cap: Optional[float] = None,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Cross entropy WITHOUT materializing the [B, S, V] f32 logits tensor.
+
+    The unembed matmul + logsumexp run per sequence-chunk inside a rematted
+    scan, so peak HBM holds one [B, chunk, V] slab instead of the full tensor
+    (at 256k vocab x 1M tokens the full tensor is ~4 TB/device — the dominant
+    memory-roofline term of the naive baseline; see EXPERIMENTS.md §Perf).
+    """
+    b, s, d = x.shape
+    c = _pick_chunk(s, chunk)
+    nc = s // c
+    xs = jnp.moveaxis(x.reshape(b, nc, c, d), 1, 0)  # [nc, B, c, d]
+    ls = jnp.moveaxis(labels.reshape(b, nc, c), 1, 0)  # [nc, B, c]
+
+    @jax.checkpoint
+    def body(acc, inp):
+        xc, lc = inp
+        logits = unembed(xc, table, logit_cap)  # [B, c, V] f32 (one chunk)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ls))
+    return total / (b * s)
+
+
+def last_token_logits(x: jax.Array, table: jax.Array, logit_cap=None) -> jax.Array:
+    """Serving prefill output: next-token logits [B, 1, V] only."""
+    return unembed(x[:, -1:], table, logit_cap)

@@ -1,0 +1,414 @@
+"""Dense / MoE decoder-only LM family.
+
+Covers: internlm2-20b, gemma2-27b (local+global alternation, softcaps,
+post-norms), minitron-8b, gemma-2b (MQA, GeGLU, head_dim 256),
+deepseek-moe-16b (dense prefix layer + 2 shared + 64 routed top-6),
+qwen3-moe-30b-a3b (128 routed top-8), and the LM backbone of internvl2-2b.
+
+Layers are stacked per attention-pattern position and consumed with
+lax.scan over layer groups; remat policy applies per group.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common as cm
+from repro.models import moe as moe_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class DecoderConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    act: str = "silu"  # "silu" | "gelu" (gated) | "relu2" (non-gated, nemotron)
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    attn_pattern: Tuple[str, ...] = ("global",)  # cycled over layers
+    window: int = 4096  # local-attention window
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    query_scale: Optional[float] = None  # None -> 1/sqrt(head_dim)
+    embed_scale: bool = False  # gemma: embeddings * sqrt(d_model)
+    tie_embed: bool = True
+    post_norms: bool = False  # gemma2: post-attn/post-ffn RMSNorms
+    moe: Optional[moe_lib.MoEConfig] = None
+    n_dense_prefix: int = 0  # deepseek: leading dense-FFN layers
+    dense_prefix_ff: int = 0  # their width
+    remat: str = "full"  # "none" | "dots" | "full" — full: peak-HBM-safe default at 1M-token batches
+    attn_impl: str = "auto"  # "auto" | "dense" | "blockwise"
+    sub_quadratic: bool = False  # True only for SSM/hybrid (long_500k gate)
+    kv_quant: bool = False  # int8 KV cache (decode §Perf lever; env REPRO_KV_QUANT=1)
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % len(self.attn_pattern) == 0, (
+            self.n_layers,
+            self.attn_pattern,
+        )
+        return (self.n_layers - self.n_dense_prefix) // len(self.attn_pattern)
+
+    def param_count(self) -> int:
+        d, hd = self.d_model, self.head_dim
+        attn = d * (self.n_heads + 2 * self.n_kv_heads) * hd + self.n_heads * hd * d
+        if self.moe:
+            m = self.moe
+            ffn = d * m.n_experts + 3 * m.n_experts * d * m.d_expert
+            ffn += 3 * d * m.d_expert * m.n_shared
+        else:
+            ffn = (2 if self.act == "relu2" else 3) * d * self.d_ff
+        n = self.n_layers * (attn + ffn + 2 * d)
+        n += self.n_dense_prefix * (3 * d * self.dense_prefix_ff - ffn)
+        n += self.vocab * d * (1 if self.tie_embed else 2) + d
+        return int(n)
+
+    def active_param_count(self) -> int:
+        """Per-token active params (MoE: only routed top-k + shared)."""
+        if not self.moe:
+            return self.param_count()
+        m = self.moe
+        routed_all = 3 * m.n_experts * self.d_model * m.d_expert
+        routed_act = 3 * (m.top_k) * self.d_model * m.d_expert
+        return int(self.param_count() - self.n_layers * (routed_all - routed_act))
+
+
+# ----------------------------------------------------------------- params
+def _init_layer(key, cfg: DecoderConfig, kind: str):
+    """kind: 'attn_global' | 'attn_local' have identical params."""
+    ks = cm.keygen(key)
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "ln1": jnp.zeros((d,), jnp.float32),
+        "wq": cm.ninit(next(ks), (d, h * hd), d),
+        "wk": cm.ninit(next(ks), (d, k * hd), d),
+        "wv": cm.ninit(next(ks), (d, k * hd), d),
+        "wo": cm.ninit(next(ks), (h * hd, d), h * hd),
+        "ln2": jnp.zeros((d,), jnp.float32),
+    }
+    if cfg.post_norms:
+        p["post_attn"] = jnp.zeros((d,), jnp.float32)
+        p["post_ffn"] = jnp.zeros((d,), jnp.float32)
+    if kind == "moe":
+        p["moe"] = moe_lib.init_moe(next(ks), d, cfg.moe)
+    else:
+        ff = cfg.dense_prefix_ff if kind == "dense_prefix" else cfg.d_ff
+        p["wg"] = cm.ninit(next(ks), (d, ff), d)
+        if cfg.act != "relu2":  # relu2 MLP is non-gated (no up-projection)
+            p["wu"] = cm.ninit(next(ks), (d, ff), d)
+        p["wd"] = cm.ninit(next(ks), (ff, d), ff)
+    return p
+
+
+def _layer_logical(cfg: DecoderConfig, kind: str):
+    spec = {
+        "ln1": ("embed",),
+        "wq": ("embed", "heads"),
+        "wk": ("embed", "kv_heads"),
+        "wv": ("embed", "kv_heads"),
+        "wo": ("heads", "embed"),
+        "ln2": ("embed",),
+    }
+    if cfg.post_norms:
+        spec["post_attn"] = ("embed",)
+        spec["post_ffn"] = ("embed",)
+    if kind == "moe":
+        spec["moe"] = moe_lib.moe_logical(cfg.moe)
+    else:
+        spec["wg"] = ("embed", "ffn")
+        if cfg.act != "relu2":
+            spec["wu"] = ("embed", "ffn")
+        spec["wd"] = ("ffn", "embed")
+    return spec
+
+
+def _ffn_kind(cfg: DecoderConfig) -> str:
+    return "moe" if cfg.moe else "dense"
+
+
+def init_params(key, cfg: DecoderConfig):
+    ks = cm.keygen(key)
+    npos = len(cfg.attn_pattern)
+
+    def stack(fn, n):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *(fn(next(ks)) for _ in range(n)))
+
+    params = {
+        "embed": cm.ninit(next(ks), (cfg.vocab, cfg.d_model), cfg.d_model),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        "layers": tuple(
+            stack(lambda kk: _init_layer(kk, cfg, _ffn_kind(cfg)), cfg.n_groups)
+            for _ in range(npos)
+        ),
+    }
+    if cfg.n_dense_prefix:
+        params["prefix"] = stack(
+            lambda kk: _init_layer(kk, cfg, "dense_prefix"), cfg.n_dense_prefix
+        )
+    if not cfg.tie_embed:
+        params["unembed"] = cm.ninit(next(ks), (cfg.vocab, cfg.d_model), cfg.d_model)
+    return params
+
+
+def param_logical(cfg: DecoderConfig):
+    def with_layers(spec):
+        return jax.tree.map(lambda t: ("layers",) + t, spec, is_leaf=lambda x: isinstance(x, tuple))
+
+    spec = {
+        "embed": ("vocab", "embed"),
+        "final_norm": ("embed",),
+        "layers": tuple(
+            with_layers(_layer_logical(cfg, _ffn_kind(cfg)))
+            for _ in range(len(cfg.attn_pattern))
+        ),
+    }
+    if cfg.n_dense_prefix:
+        spec["prefix"] = with_layers(_layer_logical(cfg, "dense_prefix"))
+    if not cfg.tie_embed:
+        spec["unembed"] = ("vocab", "embed")
+    return spec
+
+
+def _kv_quant_on(cfg: DecoderConfig) -> bool:
+    return cfg.kv_quant or os.environ.get("REPRO_KV_QUANT", "0") == "1"
+
+
+def _cache_write_read(entry, new: jax.Array, pos_idx):
+    """Write one token into a cache entry (raw bf16 array OR int8+scale dict)
+    and return (updated entry, dequantized full view for attention)."""
+    if isinstance(entry, dict):  # quantized: {"q": int8, "s": f32}
+        q, s = cm.kv_quantize(new)
+        eq = jax.lax.dynamic_update_slice(entry["q"], q, (0, pos_idx, 0, 0))
+        es = jax.lax.dynamic_update_slice(
+            entry["s"], s.astype(entry["s"].dtype), (0, pos_idx, 0, 0)
+        )
+        return {"q": eq, "s": es}, cm.kv_dequantize(eq, es)
+    e = jax.lax.dynamic_update_slice(entry, new.astype(entry.dtype), (0, pos_idx, 0, 0))
+    return e, e
+
+
+# ----------------------------------------------------------------- forward
+def _attn(x, p, cfg: DecoderConfig, kind: str, positions, impl, cache=None, pos=None):
+    b, s, d = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    hx = cm.rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = (hx @ p["wq"]).reshape(b, s, h, hd)
+    k = (hx @ p["wk"]).reshape(b, s, kh, hd)
+    v = (hx @ p["wv"]).reshape(b, s, kh, hd)
+    q = cm.rope(q, positions, cfg.rope_theta)
+    k = cm.rope(k, positions, cfg.rope_theta)
+    window = cfg.window if kind == "local" else None
+    new_cache = None
+    if cache is not None:
+        kc, vc = cache  # [B, T, K, D] (raw) or {"q","s"} (int8 + scale)
+        pos_idx = positions[0, 0] if positions.ndim == 2 else positions[0]
+        kc, k_view = _cache_write_read(kc, k, pos_idx)
+        vc, v_view = _cache_write_read(vc, v, pos_idx)
+        out = cm.decode_attention(
+            q,
+            k_view,
+            v_view,
+            valid_len=jnp.full((b,), pos_idx + 1, jnp.int32),
+            window=window,
+            attn_softcap=cfg.attn_softcap,
+            scale=cfg.query_scale,
+        )
+        new_cache = (kc, vc)
+    else:
+        out = cm.attention(
+            q,
+            k,
+            v,
+            impl=impl,
+            causal=True,
+            window=window,
+            attn_softcap=cfg.attn_softcap,
+            scale=cfg.query_scale,
+        )
+    out = out.reshape(b, s, h * hd) @ p["wo"]
+    if cfg.post_norms:
+        out = cm.rms_norm(out, p["post_attn"], cfg.norm_eps)
+    return out, new_cache
+
+
+def _ffn(x, p, cfg: DecoderConfig, kind: str):
+    hx = cm.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        y, aux = moe_lib.moe_ffn(hx, p["moe"], cfg.moe, cfg.act)
+    elif cfg.act == "relu2":
+        a = jnp.square(jax.nn.relu((hx @ p["wg"]).astype(jnp.float32))).astype(hx.dtype)
+        y = a @ p["wd"]
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        y = cm.gated_mlp(hx, p["wg"], p["wu"], p["wd"], cfg.act)
+        aux = jnp.zeros((), jnp.float32)
+    if cfg.post_norms:
+        y = cm.rms_norm(y, p["post_ffn"], cfg.norm_eps)
+    return y, aux
+
+
+def _block(x, p, cfg, attn_kind, ffn_kind, positions, impl, cache=None, pos=None):
+    a, new_cache = _attn(x, p, cfg, attn_kind, positions, impl, cache, pos)
+    x = x + a
+    f, aux = _ffn(x, p, cfg, ffn_kind)
+    return x + f, aux, new_cache
+
+
+def _remat_wrap(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+def unembed_table(params, cfg: DecoderConfig):
+    return params["embed"] if cfg.tie_embed else params["unembed"]
+
+
+def forward(params, tokens: jax.Array, cfg: DecoderConfig, *, embeds=None):
+    """Training/prefill trunk. tokens [B, S] (or embeds [B, S, d]).
+
+    Returns (final FEATURES [B, S, d], aux_loss) — logits are produced
+    downstream (chunked CE for train, last-token unembed for prefill) so the
+    [B, S, V] f32 tensor is never materialized.
+    """
+    x = (
+        cm.embed(tokens, params["embed"], cfg.embed_scale)
+        if embeds is None
+        else embeds.astype(cm.DEFAULT_DTYPE)
+    )
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    ffn_kind = _ffn_kind(cfg)
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if cfg.n_dense_prefix:
+
+        def prefix_body(carry, lp):
+            x, aux = carry
+            x, a, _ = _block(x, lp, cfg, "global", "dense", positions, cfg.attn_impl)
+            return (x, aux + a), None
+
+        (x, aux0), _ = jax.lax.scan(
+            _remat_wrap(prefix_body, cfg.remat), (x, aux0), params["prefix"]
+        )
+
+    def group_body(carry, group_params):
+        x, aux = carry
+        for pi, kind in enumerate(cfg.attn_pattern):
+            x, a, _ = _block(
+                x, jax.tree.map(lambda t: t, group_params[pi]), cfg, kind, ffn_kind,
+                positions, cfg.attn_impl,
+            )
+            aux = aux + a
+        return (x, aux), None
+
+    (x, aux), _ = jax.lax.scan(
+        _remat_wrap(group_body, cfg.remat), (x, aux0), params["layers"]
+    )
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def loss_fn(params, batch, cfg: DecoderConfig, *, embeds=None):
+    feats, aux = forward(params, batch.get("tokens"), cfg, embeds=embeds)
+    return (
+        cm.cross_entropy_chunked(
+            feats, unembed_table(params, cfg), batch["labels"], cfg.final_softcap
+        )
+        + aux
+    )
+
+
+def prefill_logits(params, batch, cfg: DecoderConfig, *, embeds=None):
+    feats, _ = forward(params, batch.get("tokens"), cfg, embeds=embeds)
+    return cm.last_token_logits(feats, unembed_table(params, cfg), cfg.final_softcap)
+
+
+# ------------------------------------------------------------------- decode
+def _kv_entry_shape(cfg: DecoderConfig, n_stack: int, batch: int, cache_len: int):
+    shape = (n_stack, batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
+    if _kv_quant_on(cfg):
+        return {
+            "q": jax.ShapeDtypeStruct(shape, jnp.int8),
+            "s": jax.ShapeDtypeStruct(shape[:-1] + (1,), jnp.float32),
+        }
+    return jax.ShapeDtypeStruct(shape, cm.DEFAULT_DTYPE)
+
+
+def init_cache_shape(cfg: DecoderConfig, batch: int, cache_len: int):
+    """ShapeDtypeStructs of the KV cache (per pattern position, stacked
+    groups); int8+scale entries when KV quantization is on."""
+    kv = _kv_entry_shape(cfg, cfg.n_groups, batch, cache_len)
+    caches = tuple((kv, kv) for _ in cfg.attn_pattern)
+    if cfg.n_dense_prefix:
+        pkv = _kv_entry_shape(cfg, cfg.n_dense_prefix, batch, cache_len)
+        return {"layers": caches, "prefix": (pkv, pkv)}
+    return {"layers": caches}
+
+
+def cache_logical(cfg: DecoderConfig):
+    kv = ("layers", "batch", "seq", "kv_heads", "head_dim")
+    if _kv_quant_on(cfg):
+        kv = {"q": kv, "s": ("layers", "batch", "seq", "kv_heads", None)}
+    caches = tuple((kv, kv) for _ in cfg.attn_pattern)
+    if cfg.n_dense_prefix:
+        return {"layers": caches, "prefix": (kv, kv)}
+    return {"layers": caches}
+
+
+def decode_step(params, cache, tokens: jax.Array, pos: jax.Array, cfg: DecoderConfig,
+                *, embeds=None):
+    """One-token decode. tokens [B, 1], pos [] int32 (write position).
+
+    Returns (logits [B, 1, V], new_cache).
+    """
+    x = (
+        cm.embed(tokens, params["embed"], cfg.embed_scale)
+        if embeds is None
+        else embeds.astype(cm.DEFAULT_DTYPE)
+    )
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    ffn_kind = _ffn_kind(cfg)
+    new_cache = {}
+
+    if cfg.n_dense_prefix:
+
+        def prefix_body(x, inp):
+            lp, (kc, vc) = inp
+            x, _, nc = _block(x, lp, cfg, "global", "dense", positions, "dense",
+                              cache=(kc, vc), pos=pos)
+            return x, nc
+
+        x, pc = jax.lax.scan(prefix_body, x, (params["prefix"], cache["prefix"]))
+        new_cache["prefix"] = pc
+
+    def group_body(x, inp):
+        gp, gc = inp
+        ncs = []
+        for pi, kind in enumerate(cfg.attn_pattern):
+            x, _, nc = _block(x, gp[pi], cfg, kind, ffn_kind, positions, "dense",
+                              cache=gc[pi], pos=pos)
+            ncs.append(nc)
+        return x, tuple(ncs)
+
+    x, lc = jax.lax.scan(group_body, x, (params["layers"], cache["layers"]))
+    new_cache["layers"] = lc
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = cm.unembed(x, unembed_table(params, cfg), cfg.final_softcap)
+    return logits, new_cache

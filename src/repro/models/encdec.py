@@ -1,0 +1,302 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed per brief:
+inputs are precomputed frame embeddings at d_model; the conv frontend is
+represented by a learned linear adapter). LayerNorm+bias, GELU MLP,
+sinusoidal encoder positions, learned decoder positions, MHA (kv == heads).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common as cm
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    name: str
+    n_enc_layers: int
+    n_dec_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    max_dec_len: int = 32_768
+    dec_ratio: int = 8  # train/prefill: dec_len = enc_len // dec_ratio
+    norm_eps: float = 1e-5
+    remat: str = "full"
+    attn_impl: str = "auto"
+    sub_quadratic: bool = False
+
+    def param_count(self) -> int:
+        d, h, hd, ff = self.d_model, self.n_heads, self.head_dim, self.d_ff
+        attn = d * (h + 2 * self.n_kv_heads) * hd + h * hd * d
+        mlp = 2 * d * ff + ff + d
+        enc = self.n_enc_layers * (attn + mlp + 4 * d)
+        dec = self.n_dec_layers * (2 * attn + mlp + 6 * d)
+        return int(
+            enc + dec + self.vocab * d + self.max_dec_len * d + d * d + 4 * d
+        )
+
+    def active_param_count(self) -> int:
+        return self.param_count()
+
+
+def _ln():
+    return lambda key, d: {
+        "scale": jnp.ones((d,), jnp.float32),
+        "bias": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def _init_attn(ks, cfg):
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": cm.ninit(next(ks), (d, h * hd), d),
+        "wk": cm.ninit(next(ks), (d, k * hd), d),
+        "wv": cm.ninit(next(ks), (d, k * hd), d),
+        "wo": cm.ninit(next(ks), (h * hd, d), h * hd),
+    }
+
+
+def _init_enc_layer(key, cfg: EncDecConfig):
+    ks = cm.keygen(key)
+    d = cfg.d_model
+    return {
+        "ln1": _ln()(next(ks), d),
+        "attn": _init_attn(ks, cfg),
+        "ln2": _ln()(next(ks), d),
+        "w1": cm.ninit(next(ks), (d, cfg.d_ff), d),
+        "b1": jnp.zeros((cfg.d_ff,), jnp.float32),
+        "w2": cm.ninit(next(ks), (cfg.d_ff, d), cfg.d_ff),
+        "b2": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def _init_dec_layer(key, cfg: EncDecConfig):
+    ks = cm.keygen(key)
+    p = _init_enc_layer(key, cfg)
+    p["ln_cross"] = _ln()(next(ks), cfg.d_model)
+    p["cross"] = _init_attn(ks, cfg)
+    return p
+
+
+_ATTN_SPEC = {
+    "wq": ("embed", "heads"),
+    "wk": ("embed", "kv_heads"),
+    "wv": ("embed", "kv_heads"),
+    "wo": ("heads", "embed"),
+}
+_LN_SPEC = {"scale": ("embed",), "bias": ("embed",)}
+
+
+def _enc_layer_logical():
+    return {
+        "ln1": _LN_SPEC,
+        "attn": dict(_ATTN_SPEC),
+        "ln2": _LN_SPEC,
+        "w1": ("embed", "ffn"),
+        "b1": ("ffn",),
+        "w2": ("ffn", "embed"),
+        "b2": ("embed",),
+    }
+
+
+def _dec_layer_logical():
+    s = _enc_layer_logical()
+    s["ln_cross"] = _LN_SPEC
+    s["cross"] = dict(_ATTN_SPEC)
+    return s
+
+
+def init_params(key, cfg: EncDecConfig):
+    ks = cm.keygen(key)
+
+    def stack(fn, n):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *(fn(next(ks)) for _ in range(n)))
+
+    return {
+        "frontend": cm.ninit(next(ks), (cfg.d_model, cfg.d_model), cfg.d_model),
+        "enc_layers": stack(lambda k: _init_enc_layer(k, cfg), cfg.n_enc_layers),
+        "enc_norm": _ln()(next(ks), cfg.d_model),
+        "embed": cm.ninit(next(ks), (cfg.vocab, cfg.d_model), cfg.d_model),
+        "dec_pos": cm.ninit(next(ks), (cfg.max_dec_len, cfg.d_model), cfg.d_model),
+        "dec_layers": stack(lambda k: _init_dec_layer(k, cfg), cfg.n_dec_layers),
+        "dec_norm": _ln()(next(ks), cfg.d_model),
+    }
+
+
+def param_logical(cfg: EncDecConfig):
+    def with_layers(spec):
+        return jax.tree.map(
+            lambda t: ("layers",) + t, spec, is_leaf=lambda x: isinstance(x, tuple)
+        )
+
+    return {
+        "frontend": ("embed", "ffn"),
+        "enc_layers": with_layers(_enc_layer_logical()),
+        "enc_norm": _LN_SPEC,
+        "embed": ("vocab", "embed"),
+        "dec_pos": ("seq", "embed"),
+        "dec_layers": with_layers(_dec_layer_logical()),
+        "dec_norm": _LN_SPEC,
+    }
+
+
+def _sinusoid(s: int, d: int):
+    pos = np.arange(s)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10_000.0, 2 * i / d)
+    return jnp.asarray(
+        np.concatenate([np.sin(ang), np.cos(ang)], axis=-1), cm.DEFAULT_DTYPE
+    )
+
+
+def _mha(hx, p, cfg, *, kv_input=None, causal, impl, cache=None, pos=None):
+    b, s, _ = hx.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    kv_src = hx if kv_input is None else kv_input
+    q = (hx @ p["wq"]).reshape(b, s, h, hd)
+    new_cache = None
+    if cache is not None and kv_input is None:  # self-attn decode
+        kc, vc = cache
+        k = (kv_src @ p["wk"]).reshape(b, s, kh, hd)
+        v = (kv_src @ p["wv"]).reshape(b, s, kh, hd)
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, pos, 0, 0))
+        out = cm.decode_attention(
+            q, kc, vc, valid_len=jnp.full((b,), pos + 1, jnp.int32)
+        )
+        new_cache = (kc, vc)
+    elif cache is not None:  # cross-attn decode: cache holds projected enc K/V
+        kc, vc = cache
+        out = cm.decode_attention(q, kc, vc)
+        new_cache = cache
+    else:
+        k = (kv_src @ p["wk"]).reshape(b, kv_src.shape[1], kh, hd)
+        v = (kv_src @ p["wv"]).reshape(b, kv_src.shape[1], kh, hd)
+        out = cm.attention(q, k, v, impl=impl, causal=causal)
+    return out.reshape(b, s, h * hd) @ p["wo"], new_cache
+
+
+def encode(params, frames: jax.Array, cfg: EncDecConfig):
+    """frames: [B, S_enc, d_model] precomputed embeddings (frontend stub)."""
+    x = frames.astype(cm.DEFAULT_DTYPE) @ params["frontend"]
+    x = x + _sinusoid(x.shape[1], cfg.d_model)[None]
+
+    def body(x, lp):
+        hx = cm.layer_norm(x, lp["ln1"]["scale"], lp["ln1"]["bias"], cfg.norm_eps)
+        a, _ = _mha(hx, lp["attn"], cfg, causal=False, impl=cfg.attn_impl)
+        x = x + a
+        hx = cm.layer_norm(x, lp["ln2"]["scale"], lp["ln2"]["bias"], cfg.norm_eps)
+        x = x + cm.vanilla_mlp(hx, lp["w1"], lp["b1"], lp["w2"], lp["b2"])
+        return x, None
+
+    body = (
+        body
+        if cfg.remat == "none"
+        else (
+            jax.checkpoint(body)
+            if cfg.remat == "full"
+            else jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            )
+        )
+    )
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return cm.layer_norm(x, params["enc_norm"]["scale"], params["enc_norm"]["bias"], cfg.norm_eps)
+
+
+def decode_train(params, enc_out, tokens, cfg: EncDecConfig):
+    x = cm.embed(tokens, params["embed"]) + params["dec_pos"][None, : tokens.shape[1]].astype(
+        cm.DEFAULT_DTYPE
+    )
+
+    def body(x, lp):
+        hx = cm.layer_norm(x, lp["ln1"]["scale"], lp["ln1"]["bias"], cfg.norm_eps)
+        a, _ = _mha(hx, lp["attn"], cfg, causal=True, impl=cfg.attn_impl)
+        x = x + a
+        hx = cm.layer_norm(x, lp["ln_cross"]["scale"], lp["ln_cross"]["bias"], cfg.norm_eps)
+        a, _ = _mha(hx, lp["cross"], cfg, kv_input=enc_out, causal=False, impl=cfg.attn_impl)
+        x = x + a
+        hx = cm.layer_norm(x, lp["ln2"]["scale"], lp["ln2"]["bias"], cfg.norm_eps)
+        x = x + cm.vanilla_mlp(hx, lp["w1"], lp["b1"], lp["w2"], lp["b2"])
+        return x, None
+
+    body = (
+        body
+        if cfg.remat == "none"
+        else (
+            jax.checkpoint(body)
+            if cfg.remat == "full"
+            else jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            )
+        )
+    )
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    return cm.layer_norm(x, params["dec_norm"]["scale"], params["dec_norm"]["bias"], cfg.norm_eps)
+
+
+def forward(params, batch, cfg: EncDecConfig):
+    """Returns (decoder FEATURES [B, dec_len, d], aux)."""
+    enc_out = encode(params, batch["frames"], cfg)
+    return decode_train(params, enc_out, batch["tokens"], cfg), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, batch, cfg: EncDecConfig):
+    feats, aux = forward(params, batch, cfg)
+    return cm.cross_entropy_chunked(feats, params["embed"], batch["labels"]) + aux
+
+
+def prefill_logits(params, batch, cfg: EncDecConfig):
+    feats, _ = forward(params, batch, cfg)
+    return cm.last_token_logits(feats, params["embed"])
+
+
+def init_cache_shape(cfg: EncDecConfig, batch: int, cache_len: int):
+    kv = jax.ShapeDtypeStruct(
+        (cfg.n_dec_layers, batch, cache_len, cfg.n_kv_heads, cfg.head_dim),
+        cm.DEFAULT_DTYPE,
+    )
+    return {"self": (kv, kv), "cross": (kv, kv)}
+
+
+def cache_logical(cfg: EncDecConfig):
+    kv = ("layers", "batch", "seq", "kv_heads", "head_dim")
+    return {"self": (kv, kv), "cross": (kv, kv)}
+
+
+def decode_step(params, cache, tokens, pos, cfg: EncDecConfig):
+    """One decoder token; cross K/V cache precomputed from the encoder."""
+    b = tokens.shape[0]
+    x = cm.embed(tokens, params["embed"]) + jnp.take(
+        params["dec_pos"], jnp.full((1,), pos), axis=0
+    )[None].astype(cm.DEFAULT_DTYPE)
+
+    def body(x, inp):
+        lp, (sk, sv), (ck, cv) = inp
+        hx = cm.layer_norm(x, lp["ln1"]["scale"], lp["ln1"]["bias"], cfg.norm_eps)
+        a, new_self = _mha(hx, lp["attn"], cfg, causal=True, impl="dense",
+                           cache=(sk, sv), pos=pos)
+        x = x + a
+        hx = cm.layer_norm(x, lp["ln_cross"]["scale"], lp["ln_cross"]["bias"], cfg.norm_eps)
+        a, _ = _mha(hx, lp["cross"], cfg, kv_input=x, causal=False, impl="dense",
+                    cache=(ck, cv), pos=pos)
+        x = x + a
+        hx = cm.layer_norm(x, lp["ln2"]["scale"], lp["ln2"]["bias"], cfg.norm_eps)
+        x = x + cm.vanilla_mlp(hx, lp["w1"], lp["b1"], lp["w2"], lp["b2"])
+        return x, new_self
+
+    x, new_self = jax.lax.scan(body, x, (params["dec_layers"], cache["self"], cache["cross"]))
+    x = cm.layer_norm(x, params["dec_norm"]["scale"], params["dec_norm"]["bias"], cfg.norm_eps)
+    logits = cm.unembed(x, params["embed"])
+    return logits, {"self": new_self, "cross": cache["cross"]}

@@ -1,0 +1,170 @@
+"""Uniform model API over the architecture zoo.
+
+Every assigned architecture is exposed as a ModelDef with the same surface:
+  init_params / param_logical          — parameters + sharding
+  loss(params, batch)                  — train objective (CE + aux)
+  prefill(params, batch)               — full forward -> logits
+  decode_step(params, cache, batch)    — one-token serve step
+  init_cache_shape / cache_logical     — decode state
+  make_inputs(mode, batch, seq)        — ShapeDtypeStruct stand-ins + logical specs
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import decoder as dec_lib
+from repro.models import encdec as encdec_lib
+from repro.models import hybrid as hybrid_lib
+from repro.models import ssm as ssm_lib
+from repro.models import vlm as vlm_lib
+
+I32 = jnp.int32
+BF16 = cm.DEFAULT_DTYPE
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    name: str
+    family: str
+    cfg: Any
+
+    def module(self):
+        return {
+            "decoder": dec_lib,
+            "ssm": ssm_lib,
+            "hybrid": hybrid_lib,
+            "encdec": encdec_lib,
+            "vlm": vlm_lib,
+        }[self.family]
+
+    # ----- params
+    def init_params(self, key):
+        return self.module().init_params(key, self.cfg)
+
+    def param_shapes(self):
+        return jax.eval_shape(lambda k: self.init_params(k), jax.random.PRNGKey(0))
+
+    def param_logical(self):
+        return self.module().param_logical(self.cfg)
+
+    # ----- train / serve entry points
+    def loss(self, params, batch):
+        return self.module().loss_fn(params, batch, self.cfg)
+
+    def prefill(self, params, batch):
+        """Serving prefill: next-token logits [B, 1, V] (the [B,S,V] tensor is
+        never materialized; see common.last_token_logits)."""
+        return self.module().prefill_logits(params, batch, self.cfg)
+
+    def decode_step(self, params, cache, batch):
+        return self.module().decode_step(
+            params, cache, batch["tokens"], batch["pos"], self.cfg
+        )
+
+    def init_cache_shape(self, batch: int, cache_len: int):
+        return self.module().init_cache_shape(self.cfg, batch, cache_len)
+
+    def cache_logical(self):
+        return self.module().cache_logical(self.cfg)
+
+    # ----- stats
+    def param_count(self) -> int:
+        return self.cfg.param_count()
+
+    def active_param_count(self) -> int:
+        return self.cfg.active_param_count()
+
+    @property
+    def sub_quadratic(self) -> bool:
+        return bool(getattr(self.cfg, "sub_quadratic", False))
+
+    # ----- abstract inputs (the dry-run contract: no allocation, shardable)
+    def make_inputs(self, mode: str, batch: int, seq: int) -> Tuple[dict, dict]:
+        """Returns (tree of ShapeDtypeStruct, tree of logical axis tuples)."""
+        if self.family == "vlm":
+            npatch = self.cfg.n_patches
+            if mode in ("train", "prefill"):
+                spec = {
+                    "patch_embeds": _sds((batch, npatch, self.cfg.vit_dim), BF16),
+                    "tokens": _sds((batch, seq - npatch), I32),
+                }
+                logical = {
+                    "patch_embeds": ("batch", "seq", None),
+                    "tokens": ("batch", "seq"),
+                }
+                if mode == "train":
+                    spec["labels"] = _sds((batch, seq), I32)
+                    logical["labels"] = ("batch", "seq")
+                return spec, logical
+        elif self.family == "encdec":
+            if mode in ("train", "prefill"):
+                dec_len = max(seq // self.cfg.dec_ratio, 8)
+                spec = {
+                    "frames": _sds((batch, seq, self.cfg.d_model), BF16),
+                    "tokens": _sds((batch, dec_len), I32),
+                }
+                logical = {
+                    "frames": ("batch", "seq", None),
+                    "tokens": ("batch", "seq"),
+                }
+                if mode == "train":
+                    spec["labels"] = _sds((batch, dec_len), I32)
+                    logical["labels"] = ("batch", "seq")
+                return spec, logical
+        else:
+            if mode in ("train", "prefill"):
+                spec = {"tokens": _sds((batch, seq), I32)}
+                logical = {"tokens": ("batch", "seq")}
+                if mode == "train":
+                    spec["labels"] = _sds((batch, seq), I32)
+                    logical["labels"] = ("batch", "seq")
+                return spec, logical
+        # decode for every family: one token + write position
+        spec = {"tokens": _sds((batch, 1), I32), "pos": _sds((), I32)}
+        logical = {"tokens": ("batch", None), "pos": ()}
+        return spec, logical
+
+
+# --------------------------------------------------------------------------
+_REGISTRY: Dict[str, Callable[[], ModelDef]] = {}
+_SMOKE: Dict[str, Callable[[], ModelDef]] = {}
+
+
+def register(name: str, full: Callable[[], ModelDef], smoke: Callable[[], ModelDef]):
+    _REGISTRY[name] = full
+    _SMOKE[name] = smoke
+
+
+def get_model(name: str, smoke: bool = False) -> ModelDef:
+    _ensure_configs_loaded()
+    table = _SMOKE if smoke else _REGISTRY
+    if name not in table:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(table)}")
+    return table[name]()
+
+
+def list_archs() -> Tuple[str, ...]:
+    _ensure_configs_loaded()
+    return tuple(sorted(_REGISTRY))
+
+
+_LOADED = False
+
+
+def _ensure_configs_loaded():
+    global _LOADED
+    if _LOADED:
+        return
+    from repro.configs import ALL_ARCHS  # noqa: F401  (import side effect)
+
+    _LOADED = True

@@ -1,0 +1,72 @@
+"""Logical-axis sharding rules (MaxText-style, reduced to what we need).
+
+Every parameter/activation carries a tuple of logical axis names; the rules
+map them to mesh axes. The same model code then lowers on the single-pod
+(16x16 "data","model") and multi-pod (2x16x16 "pod","data","model") meshes.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (or tuple of mesh axes)
+BASE_RULES = {
+    "batch": ("pod", "data"),  # data parallel over pod x data
+    "seq": None,  # sequence kept unsharded by default (SP is a perf knob)
+    "seq_shard": ("pod", "data"),  # sequence sharding for decode_* KV caches
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ffn": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_ffn": None,
+    "layers": None,
+    "conv": None,
+    "ssm_state": None,
+    "ssm_heads": "model",
+    "frames": None,
+    "patches": None,
+}
+
+
+def rules_for_mesh(mesh: Mesh, overrides: dict | None = None) -> dict:
+    """Drop mesh axes that do not exist (e.g. 'pod' on the single-pod mesh)."""
+    names = set(mesh.axis_names)
+    out = {}
+    rules = dict(BASE_RULES)
+    if overrides:
+        rules.update(overrides)
+    for k, v in rules.items():
+        if v is None:
+            out[k] = None
+        elif isinstance(v, tuple):
+            kept = tuple(a for a in v if a in names)
+            out[k] = kept if kept else None
+        else:
+            out[k] = v if v in names else None
+    return out
+
+
+def pspec(logical: Tuple[Optional[str], ...], rules: dict) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec."""
+    return P(*(rules[a] if a is not None else None for a in logical))
+
+
+def shardings(logical_tree, mesh: Mesh, rules: dict | None = None):
+    """Map a pytree of logical-axis tuples to NamedShardings."""
+    rules = rules or rules_for_mesh(mesh)
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, pspec(spec, rules)),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

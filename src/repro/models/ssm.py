@@ -1,0 +1,341 @@
+"""Mamba-2 (SSD — state-space duality) blocks, chunked matmul formulation.
+
+The SSD algorithm is the TPU-friendly form of Mamba-2: the sequence is split
+into chunks; within a chunk the recurrence is computed as a (small) quadratic
+attention-like matmul, across chunks a lax.scan carries the [H, N, P] state.
+This keeps every op MXU-shaped, exactly the adaptation the assigned
+architectures need on TPU (DESIGN.md §4).
+
+Decode is the O(1)-per-token recurrent step — the reason mamba2/zamba2 are
+the two archs that run the long_500k shape.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common as cm
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    name: str
+    n_layers: int
+    d_model: int
+    d_state: int  # N
+    vocab: int
+    head_dim: int = 64  # P
+    expand: int = 2
+    n_groups: int = 1  # G (B/C groups)
+    conv_width: int = 4
+    chunk: int = 128
+    norm_eps: float = 1e-6
+    tie_embed: bool = True
+    remat: str = "full"
+    sub_quadratic: bool = True
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_inner % self.head_dim == 0
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_channels(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+    def param_count(self) -> int:
+        d, di, g, n, h = (
+            self.d_model,
+            self.d_inner,
+            self.n_groups,
+            self.d_state,
+            self.n_heads,
+        )
+        per_layer = (
+            d * (2 * di + 2 * g * n + h)  # in_proj
+            + self.conv_width * self.conv_channels
+            + self.conv_channels
+            + 3 * h  # dt_bias, A_log, D
+            + di  # gate norm
+            + di * d  # out_proj
+            + d  # ln
+        )
+        return int(self.n_layers * per_layer + self.vocab * d + d)
+
+    def active_param_count(self) -> int:
+        return self.param_count()
+
+
+# ------------------------------------------------------------------ params
+def init_mamba_layer(key, cfg: Mamba2Config):
+    ks = cm.keygen(key)
+    d, di, h = cfg.d_model, cfg.d_inner, cfg.n_heads
+    gn = cfg.n_groups * cfg.d_state
+    return {
+        "ln": jnp.zeros((d,), jnp.float32),
+        "in_proj": cm.ninit(next(ks), (d, 2 * di + 2 * gn + h), d),
+        "conv_w": cm.ninit(next(ks), (cfg.conv_width, cfg.conv_channels), cfg.conv_width),
+        "conv_b": jnp.zeros((cfg.conv_channels,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "gate_norm": jnp.zeros((di,), jnp.float32),
+        "out_proj": cm.ninit(next(ks), (di, d), di),
+    }
+
+
+def mamba_layer_logical(cfg: Mamba2Config):
+    return {
+        "ln": ("embed",),
+        "in_proj": ("embed", "ssm_heads"),
+        "conv_w": ("conv", "ssm_heads"),
+        "conv_b": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "A_log": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "gate_norm": ("ssm_heads",),
+        "out_proj": ("ssm_heads", "embed"),
+    }
+
+
+def init_params(key, cfg: Mamba2Config):
+    ks = cm.keygen(key)
+    layers = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *(init_mamba_layer(next(ks), cfg) for _ in range(cfg.n_layers)),
+    )
+    return {
+        "embed": cm.ninit(next(ks), (cfg.vocab, cfg.d_model), cfg.d_model),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        "layers": layers,
+    }
+
+
+def param_logical(cfg: Mamba2Config):
+    spec = jax.tree.map(
+        lambda t: ("layers",) + t,
+        mamba_layer_logical(cfg),
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+    return {"embed": ("vocab", "embed"), "final_norm": ("embed",), "layers": spec}
+
+
+# ----------------------------------------------------------------- core SSD
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, state=None):
+    """Depthwise causal conv over seq. x [B, S, C], w [W, C]. If `state`
+    ([B, W-1, C]) is given, runs in streaming mode and returns new state."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # [B, S+W-1, C]
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+    out = out + b[None, None, :]
+    new_state = xp[:, -(width - 1) :, :]
+    return jax.nn.silu(out.astype(jnp.float32)).astype(x.dtype), new_state
+
+
+def _split_proj(h: jax.Array, cfg: Mamba2Config):
+    di, gn, nh = cfg.d_inner, cfg.n_groups * cfg.d_state, cfg.n_heads
+    z = h[..., :di]
+    xbc = h[..., di : di + di + 2 * gn]
+    dt = h[..., di + di + 2 * gn :]
+    assert dt.shape[-1] == nh
+    return z, xbc, dt
+
+
+def ssd_chunked(
+    x: jax.Array,  # [B, S, H, P]
+    dt: jax.Array,  # [B, S, H] (post-softplus)
+    A: jax.Array,  # [H] (negative)
+    B_in: jax.Array,  # [B, S, G, N]
+    C_in: jax.Array,  # [B, S, G, N]
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # [B, H, N, P]
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y [B, S, H, P], final_state [B, H, N, P])."""
+    b, s, h, p = x.shape
+    g, n = B_in.shape[2], B_in.shape[3]
+    hg = h // g
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    xr = x.reshape(b, nc, q, h, p)
+    dtr = dt.reshape(b, nc, q, h)
+    Br = B_in.reshape(b, nc, q, g, n)
+    Cr = C_in.reshape(b, nc, q, g, n)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+
+    def chunk_step(state, inp):
+        xb, dtb, Bb, Cb = inp  # [b,q,h,p], [b,q,h], [b,q,g,n] x2
+        a = dtb * A[None, None, :]  # [b,q,h] log-decays (<= 0)
+        cum = jnp.cumsum(a, axis=1)  # inclusive
+        total = cum[:, -1, :]  # [b,h]
+        # intra-chunk (quadratic in q — the "attention dual")
+        L = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # [b,qi,qj,h]
+        L = jnp.where(causal[None, :, :, None], L, 0.0)
+        scores = jnp.einsum("bqgn,bkgn->bqkg", Cb, Bb)  # [b,qi,qj,g]
+        scores = jnp.repeat(scores, hg, axis=-1)  # broadcast groups->heads
+        xdt = xb * dtb[..., None].astype(xb.dtype)
+        y = jnp.einsum("bqkh,bkhp->bqhp", (scores * L).astype(x.dtype), xdt)
+        # inter-chunk: contribution of carried state
+        Ch = jnp.repeat(Cb, hg, axis=2).reshape(b, q, h, n)
+        y = y + jnp.einsum(
+            "bqhn,bhnp->bqhp", (Ch * jnp.exp(cum)[..., None]).astype(x.dtype), state
+        ).astype(y.dtype)
+        # state update
+        decay_to_end = jnp.exp(total[:, None, :] - cum)  # [b,q,h]
+        Bh = jnp.repeat(Bb, hg, axis=2).reshape(b, q, h, n)
+        state_new = jnp.exp(total)[..., None, None] * state + jnp.einsum(
+            "bqhn,bqhp->bhnp", (Bh * (decay_to_end * dtb)[..., None]).astype(x.dtype), xb
+        )
+        return state_new.astype(jnp.float32), y
+
+    state0 = (
+        init_state
+        if init_state is not None
+        else jnp.zeros((b, h, n, p), jnp.float32)
+    )
+    final_state, ys = jax.lax.scan(
+        chunk_step,
+        state0,
+        (
+            jnp.moveaxis(xr, 1, 0),
+            jnp.moveaxis(dtr, 1, 0),
+            jnp.moveaxis(Br, 1, 0),
+            jnp.moveaxis(Cr, 1, 0),
+        ),
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)
+    return y, final_state
+
+
+def mamba_block(x: jax.Array, p: dict, cfg: Mamba2Config):
+    """Full Mamba-2 block with pre-norm and residual. x [B, S, d]."""
+    b, s, d = x.shape
+    h = cm.rms_norm(x, p["ln"], cfg.norm_eps)
+    proj = h @ p["in_proj"]
+    z, xbc, dt = _split_proj(proj, cfg)
+    xbc, _ = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    di, gn = cfg.d_inner, cfg.n_groups * cfg.d_state
+    xs = xbc[..., :di].reshape(b, s, cfg.n_heads, cfg.head_dim)
+    B_in = xbc[..., di : di + gn].reshape(b, s, cfg.n_groups, cfg.d_state)
+    C_in = xbc[..., di + gn :].reshape(b, s, cfg.n_groups, cfg.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, _ = ssd_chunked(xs, dt, A, B_in, C_in, cfg.chunk)
+    y = y + xs * p["D"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(b, s, di)
+    y = cm.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(z.dtype),
+                    p["gate_norm"], cfg.norm_eps)
+    return x + (y @ p["out_proj"]).astype(x.dtype)
+
+
+def mamba_decode_block(x, p, cfg: Mamba2Config, ssm_state, conv_state):
+    """Single-token recurrent step. x [B, 1, d]. Returns (x, ssm', conv')."""
+    b = x.shape[0]
+    h = cm.rms_norm(x, p["ln"], cfg.norm_eps)
+    proj = h @ p["in_proj"]
+    z, xbc, dt = _split_proj(proj, cfg)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"], state=conv_state)
+    di, gn = cfg.d_inner, cfg.n_groups * cfg.d_state
+    xs = xbc[:, 0, :di].reshape(b, cfg.n_heads, cfg.head_dim)
+    B_in = xbc[:, 0, di : di + gn].reshape(b, cfg.n_groups, cfg.d_state)
+    C_in = xbc[:, 0, di + gn :].reshape(b, cfg.n_groups, cfg.d_state)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B, H]
+    A = -jnp.exp(p["A_log"])
+    hg = cfg.n_heads // cfg.n_groups
+    Bh = jnp.repeat(B_in, hg, axis=1)  # [B, H, N]
+    Ch = jnp.repeat(C_in, hg, axis=1)
+    decay = jnp.exp(dt1 * A[None, :])  # [B, H]
+    upd = (dt1[..., None] * Bh.astype(jnp.float32))[..., :, None] * xs.astype(
+        jnp.float32
+    )[..., None, :]
+    ssm_state = decay[..., None, None] * ssm_state + upd  # [B, H, N, P]
+    y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), ssm_state)
+    y = y.astype(xs.dtype) + xs * p["D"][None, :, None].astype(xs.dtype)
+    y = y.reshape(b, 1, di)
+    y = cm.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(z.dtype),
+                    p["gate_norm"], cfg.norm_eps)
+    return x + (y @ p["out_proj"]).astype(x.dtype), ssm_state, conv_state
+
+
+# ------------------------------------------------------------- full LM defs
+def forward(params, tokens, cfg: Mamba2Config):
+    x = cm.embed(tokens, params["embed"])
+
+    def body(x, lp):
+        return mamba_block(x, lp, cfg), None
+
+    body = (
+        body
+        if cfg.remat == "none"
+        else (
+            jax.checkpoint(body)
+            if cfg.remat == "full"
+            else jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            )
+        )
+    )
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, batch, cfg: Mamba2Config):
+    feats, aux = forward(params, batch["tokens"], cfg)
+    return cm.cross_entropy_chunked(feats, params["embed"], batch["labels"]) + aux
+
+
+def prefill_logits(params, batch, cfg: Mamba2Config):
+    feats, _ = forward(params, batch["tokens"], cfg)
+    return cm.last_token_logits(feats, params["embed"])
+
+
+def init_cache_shape(cfg: Mamba2Config, batch: int, cache_len: int):
+    del cache_len  # state size is O(1) in context length — the whole point
+    return {
+        "ssm": jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, cfg.n_heads, cfg.d_state, cfg.head_dim), jnp.float32
+        ),
+        "conv": jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, cfg.conv_width - 1, cfg.conv_channels),
+            cm.DEFAULT_DTYPE,
+        ),
+    }
+
+
+def cache_logical(cfg: Mamba2Config):
+    return {
+        "ssm": ("layers", "batch", "ssm_heads", "ssm_state", "head_dim"),
+        "conv": ("layers", "batch", "conv", "ssm_heads"),
+    }
+
+
+def decode_step(params, cache, tokens, pos, cfg: Mamba2Config):
+    x = cm.embed(tokens, params["embed"])
+
+    def body(x, inp):
+        lp, ssm, conv = inp
+        x, ssm, conv = mamba_decode_block(x, lp, cfg, ssm, conv)
+        return x, (ssm, conv)
+
+    x, (ssm, conv) = jax.lax.scan(body, x, (params["layers"], cache["ssm"], cache["conv"]))
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = cm.unembed(x, params["embed"])
+    return logits, {"ssm": ssm, "conv": conv}

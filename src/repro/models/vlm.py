@@ -1,0 +1,88 @@
+"""InternVL2-style VLM: ViT frontend stubbed (precomputed patch embeddings per
+brief), 2-layer MLP projector, InternLM2-family decoder backbone."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import decoder as dec_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class VLMConfig:
+    name: str
+    lm: dec_lib.DecoderConfig
+    vit_dim: int = 1024
+    n_patches: int = 256
+    sub_quadratic: bool = False
+
+    def param_count(self) -> int:
+        proj = self.vit_dim * self.lm.d_model + self.lm.d_model * self.lm.d_model
+        return int(self.lm.param_count() + proj)
+
+    def active_param_count(self) -> int:
+        return self.param_count()
+
+
+def init_params(key, cfg: VLMConfig):
+    ks = cm.keygen(key)
+    return {
+        "projector": {
+            "w1": cm.ninit(next(ks), (cfg.vit_dim, cfg.lm.d_model), cfg.vit_dim),
+            "w2": cm.ninit(next(ks), (cfg.lm.d_model, cfg.lm.d_model), cfg.lm.d_model),
+        },
+        "lm": dec_lib.init_params(next(ks), cfg.lm),
+    }
+
+
+def param_logical(cfg: VLMConfig):
+    return {
+        "projector": {"w1": ("embed", "ffn"), "w2": ("ffn", "embed")},
+        "lm": dec_lib.param_logical(cfg.lm),
+    }
+
+
+def _project(patches, p):
+    h = jax.nn.gelu((patches.astype(cm.DEFAULT_DTYPE) @ p["w1"]).astype(jnp.float32),
+                    approximate=True).astype(cm.DEFAULT_DTYPE)
+    return h @ p["w2"]
+
+
+def _embeds(params, batch, cfg: VLMConfig):
+    img = _project(batch["patch_embeds"], params["projector"])  # [B, P, d]
+    txt = cm.embed(batch["tokens"], params["lm"]["embed"])
+    return jnp.concatenate([img, txt], axis=1)
+
+
+def forward(params, batch, cfg: VLMConfig):
+    """batch: patch_embeds [B, P, vit_dim], tokens [B, S-P] -> features."""
+    return dec_lib.forward(params["lm"], None, cfg.lm, embeds=_embeds(params, batch, cfg))
+
+
+def loss_fn(params, batch, cfg: VLMConfig):
+    return dec_lib.loss_fn(
+        params["lm"], batch, cfg.lm, embeds=_embeds(params, batch, cfg)
+    )
+
+
+def prefill_logits(params, batch, cfg: VLMConfig):
+    return dec_lib.prefill_logits(
+        params["lm"], batch, cfg.lm, embeds=_embeds(params, batch, cfg)
+    )
+
+
+def init_cache_shape(cfg: VLMConfig, batch: int, cache_len: int):
+    return dec_lib.init_cache_shape(cfg.lm, batch, cache_len)
+
+
+def cache_logical(cfg: VLMConfig):
+    return dec_lib.cache_logical(cfg.lm)
+
+
+def decode_step(params, cache, tokens, pos, cfg: VLMConfig):
+    """Text decode against a cache whose prefix covers the image tokens."""
+    return dec_lib.decode_step(params["lm"], cache, tokens, pos, cfg.lm)

@@ -1,0 +1,86 @@
+"""AdamW with global-norm clipping and cosine schedule (own implementation —
+no optax in the container). Moment tensors are f32 and shaped like the params,
+so they inherit the params' shardings (including the stacked layer axis)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def cosine_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def adamw_init(params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    params, grads, state: dict, cfg: AdamWConfig
+) -> Tuple[Any, dict, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = cosine_schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    # three passes instead of one unzip: params trees may contain tuples as
+    # internal nodes (stacked layer stacks), so tuple-leaf tricks are unsafe.
+    # XLA CSE merges the duplicated moment math.
+    def new_mu_fn(g, mu):
+        return cfg.b1 * mu + (1 - cfg.b1) * g.astype(jnp.float32) * scale
+
+    def new_nu_fn(g, nu):
+        gs = g.astype(jnp.float32) * scale
+        return cfg.b2 * nu + (1 - cfg.b2) * gs * gs
+
+    new_mu = jax.tree.map(new_mu_fn, grads, state["mu"])
+    new_nu = jax.tree.map(new_nu_fn, grads, state["nu"])
+
+    def upd(p, mu, nu):
+        mhat = mu / b1c
+        nhat = nu / b2c
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, new_mu, new_nu)
+    new_state = {"mu": new_mu, "nu": new_nu, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,56 @@
+"""int8 gradient compression with error feedback (distributed-optimization
+trick for bandwidth-bound DP training at 1000+ nodes).
+
+Per-tensor symmetric int8 quantization before the DP all-reduce, residual
+(error-feedback) carried in f32 so the compression bias vanishes over steps
+(Seide et al. / Karimireddy et al.). Used as an optional stage in
+launch/train.py; correctness bounds tested in tests/test_optim.py."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    gf = g.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_gradients(grads, error_state=None):
+    """Returns (compressed tree {q, scale}, new error_state).
+
+    error_state is a pytree like grads holding the f32 residuals.
+    """
+    if error_state is None:
+        error_state = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    # grad trees may contain tuple internal nodes — return parallel trees
+    # instead of (q, scale) tuple leaves.
+    def q_fn(g, e):
+        q, _ = _quantize(g.astype(jnp.float32) + e)
+        return q
+
+    def s_fn(g, e):
+        _, s = _quantize(g.astype(jnp.float32) + e)
+        return s
+
+    qs = jax.tree.map(q_fn, grads, error_state)
+    scales = jax.tree.map(s_fn, grads, error_state)
+    new_err = jax.tree.map(
+        lambda g, e, q, s: (g.astype(jnp.float32) + e) - _dequantize(q, s),
+        grads, error_state, qs, scales,
+    )
+    return {"q": qs, "scale": scales}, new_err
+
+
+def decompress_gradients(comp):
+    return jax.tree.map(_dequantize, comp["q"], comp["scale"])

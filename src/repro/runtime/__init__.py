@@ -1,0 +1,1 @@
+from repro.runtime.scheduler import ChunkLedger, WorkScheduler, WorkerPool

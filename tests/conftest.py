@@ -1,0 +1,32 @@
+"""Shared fixtures. NOTE: device count stays 1 here (the 512-device forcing is
+only in launch/dryrun.py, per the multi-pod dry-run contract); multi-device
+tests spawn subprocesses with their own XLA_FLAGS."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_dataset():
+    from repro.epi.data import get_dataset
+
+    return get_dataset("synthetic_small", num_days=15)
+
+
+def run_in_subprocess(code: str, n_devices: int = 8, timeout: int = 600) -> str:
+    """Run `code` in a fresh python with a forced host device count."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+    )
+    assert out.returncode == 0, f"subprocess failed:\nSTDOUT:{out.stdout}\nSTDERR:{out.stderr}"
+    return out.stdout

@@ -1,0 +1,179 @@
+"""Integration + property tests for the parallel ABC engine (paper §3)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.abc import ABCConfig, ABCState, abc_run_batch, make_simulator, run_abc
+from repro.core.priors import paper_prior
+from repro.epi.data import get_dataset
+
+DAYS = 15
+TOL = 1.6e4  # ~1% acceptance on synthetic_small@15d — fast tests
+
+
+def _cfg(**kw):
+    base = dict(
+        batch_size=2048,
+        tolerance=TOL,
+        target_accepted=25,
+        chunk_size=256,
+        strategy="outfeed",
+        max_runs=50,
+        num_days=DAYS,
+        backend="xla_fused",
+    )
+    base.update(kw)
+    return ABCConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return get_dataset("synthetic_small", num_days=DAYS)
+
+
+def test_rejection_abc_reaches_target(ds):
+    post = run_abc(ds, _cfg(), key=0)
+    assert len(post) >= 25
+    assert np.all(post.distances <= TOL)
+    assert post.runs <= 50
+
+
+def test_outfeed_and_topk_agree_on_same_stream(ds):
+    """Paper claim C1 (engine level): the two fixed-shape host-return
+    strategies harvest the SAME accepted samples from the same stream."""
+    p_out = run_abc(ds, _cfg(), key=0)
+    p_top = run_abc(ds, _cfg(strategy="topk", top_k=256, chunk_size=2048), key=0)
+    n = min(len(p_out), len(p_top))
+    np.testing.assert_allclose(
+        np.sort(p_out.distances)[:n], np.sort(p_top.distances)[:n], rtol=1e-6
+    )
+
+
+def test_topk_truncation_caveat(ds):
+    """With k too small, top-k may drop accepted samples (the paper's stated
+    caveat). The engine must still count them correctly on-device."""
+    cfg = _cfg(strategy="topk", top_k=1, target_accepted=5, max_runs=30)
+    sim = make_simulator(ds, cfg)
+    run = jax.jit(abc_run_batch(paper_prior(), sim, cfg))
+    out = run(jax.random.fold_in(jax.random.PRNGKey(0), 0))
+    assert out.theta.shape == (1, 8)
+    assert int(out.accept_count) >= 0  # count is exact even when k < count
+
+
+def test_acceptance_monotone_in_tolerance(ds):
+    """P(accept) must be non-decreasing in epsilon (ABC definition, eq. 7)."""
+    cfg = _cfg()
+    sim = jax.jit(make_simulator(ds, cfg))
+    th = paper_prior().sample(jax.random.PRNGKey(1), (4096,))
+    d = np.asarray(sim(th, jax.random.PRNGKey(2)))
+    rates = [(d <= eps).mean() for eps in (TOL / 4, TOL, TOL * 4, TOL * 16)]
+    assert all(a <= b for a, b in zip(rates, rates[1:]))
+    assert rates[-1] > rates[0]
+
+
+def test_deterministic_and_resumable(ds):
+    """Restarting from a checkpointed ABCState must reproduce the exact same
+    posterior as an uninterrupted run (fault-tolerance contract)."""
+    cfg4 = _cfg(target_accepted=10**9, max_runs=4)
+    sim = make_simulator(ds, cfg4)
+    run_fn = jax.jit(abc_run_batch(paper_prior(), sim, cfg4))
+    p_full = run_abc(ds, cfg4, key=7, run_fn=run_fn)
+    assert p_full.runs == 4
+
+    # interrupted run: stop after 2 runs, checkpoint, reload, resume to 4
+    state = ABCState()
+    cfg2 = dataclasses.replace(cfg4, max_runs=2)
+    run_abc(ds, cfg2, key=7, state=state, run_fn=run_fn)
+    assert state.run_idx == 2
+
+    import tempfile, os
+
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "abc_state.npz")
+        state.save(path)
+        resumed = ABCState.load(path)
+    assert resumed.run_idx == 2
+    p_res = run_abc(ds, cfg4, key=7, state=resumed, run_fn=run_fn)
+    assert len(p_res) == len(p_full)
+    np.testing.assert_allclose(
+        np.sort(p_full.distances), np.sort(p_res.distances), rtol=1e-6
+    )
+
+
+def test_posterior_recovery_synthetic_truth(ds):
+    """Paper claim C2: the ABC posterior concentrates around the generating
+    parameters relative to the prior."""
+    post = run_abc(ds, _cfg(tolerance=8e3, target_accepted=30, max_runs=400), key=3)
+    assert len(post) >= 20
+    true = np.asarray(ds.true_theta)
+    highs = np.asarray(paper_prior().highs)
+    prior_mean = highs / 2.0
+    post_mean = post.theta.mean(axis=0)
+    # normalized error must shrink vs the prior mean for most parameters
+    err_prior = np.abs(prior_mean - true) / highs
+    err_post = np.abs(post_mean - true) / highs
+    assert (err_post <= err_prior + 0.05).mean() >= 0.6
+    assert err_post.mean() < err_prior.mean()
+
+
+def test_backends_agree_statistically(ds):
+    """xla / xla_fused / pallas produce the same distance distribution."""
+    th = paper_prior().sample(jax.random.PRNGKey(5), (1024,))
+    key = jax.random.PRNGKey(6)
+    outs = {}
+    for backend in ("xla", "xla_fused", "pallas"):
+        cfg = _cfg(backend=backend, batch_size=1024)
+        sim = jax.jit(make_simulator(ds, cfg))
+        d = np.asarray(sim(th, key))
+        outs[backend] = d[np.isfinite(d)]
+    # xla vs xla_fused share RNG -> near-identical
+    np.testing.assert_allclose(outs["xla"], outs["xla_fused"], rtol=1e-4)
+    # pallas has its own RNG stream -> compare quantiles
+    qs = np.linspace(0.1, 0.9, 9)
+    qa = np.quantile(outs["xla"], qs)
+    qp = np.quantile(outs["pallas"], qs)
+    np.testing.assert_allclose(qa, qp, rtol=0.15)
+
+
+def test_nan_simulations_never_accepted(ds):
+    cfg = _cfg(batch_size=256, chunk_size=256, max_runs=1, target_accepted=10**9)
+
+    def bad_sim(theta, key):
+        d = jnp.full((theta.shape[0],), jnp.nan, jnp.float32)
+        return d
+
+    run = jax.jit(abc_run_batch(paper_prior(), bad_sim, cfg))
+    out = run(jax.random.PRNGKey(0))
+    assert int(out.accept_count) == 0
+    assert not bool(out.chunk_flags.any())
+
+
+def test_chunk_flag_semantics(ds):
+    """A chunk flag is set iff its chunk holds >= 1 accepted sample."""
+    cfg = _cfg(max_runs=1)
+    sim = make_simulator(ds, cfg)
+    run = jax.jit(abc_run_batch(paper_prior(), sim, cfg))
+    out = run(jax.random.fold_in(jax.random.PRNGKey(4), 0))
+    d = np.asarray(out.dist)  # [nc, cs]
+    flags = np.asarray(out.chunk_flags)
+    np.testing.assert_array_equal(flags, (d <= cfg.tolerance).any(axis=1))
+    assert int(out.accept_count) == int((d <= cfg.tolerance).sum())
+
+
+def test_calibrate_tolerance_controls_acceptance(ds):
+    """Auto-calibrated epsilon yields ~the requested acceptance rate."""
+    from repro.core.abc import calibrate_tolerance
+
+    cfg = _cfg()
+    q = 5e-3
+    eps = calibrate_tolerance(ds, cfg, key=11, quantile=q, n_pilot=8192)
+    assert eps > 0
+    sim = jax.jit(make_simulator(ds, cfg))
+    th = paper_prior().sample(jax.random.PRNGKey(12), (8192,))
+    d = np.asarray(sim(th, jax.random.PRNGKey(13)))
+    rate = float((d[np.isfinite(d)] <= eps).mean())
+    assert q / 4 < rate < q * 4, (eps, rate)

@@ -1,0 +1,47 @@
+"""Data pipeline: determinism, shard disjointness, learnable signal."""
+
+import numpy as np
+
+from repro.data import SyntheticTokenDataset, make_batches
+
+
+def test_deterministic_by_address():
+    ds = SyntheticTokenDataset(vocab=512, seq_len=32, seed=4)
+    a = ds.batch(step=7, batch_size=8)
+    b = ds.batch(step=7, batch_size=8)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = ds.batch(step=8, batch_size=8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_shards_are_distinct_and_stable():
+    ds = SyntheticTokenDataset(vocab=512, seq_len=32, seed=0)
+    s0 = ds.batch(3, 8, shard=0, n_shards=4)
+    s1 = ds.batch(3, 8, shard=1, n_shards=4)
+    assert s0["tokens"].shape == (2, 32)
+    assert not np.array_equal(s0["tokens"], s1["tokens"])
+    np.testing.assert_array_equal(
+        s0["tokens"], ds.batch(3, 8, shard=0, n_shards=4)["tokens"]
+    )
+
+
+def test_labels_are_next_tokens():
+    ds = SyntheticTokenDataset(vocab=512, seq_len=16, seed=1)
+    b = ds.batch(0, 4)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_stream_has_learnable_signal():
+    """The copy-mixture makes label == previous token ~50% of the time —
+    a unigram model can't reach that, a context model can."""
+    ds = SyntheticTokenDataset(vocab=512, seq_len=128, seed=2)
+    b = ds.batch(0, 16)
+    copy_rate = (b["labels"] == b["tokens"]).mean()
+    assert 0.25 < copy_rate < 0.75, copy_rate
+
+
+def test_make_batches_iterates():
+    ds = SyntheticTokenDataset(vocab=64, seq_len=8, seed=0)
+    batches = list(make_batches(ds, batch_size=4, steps=3))
+    assert len(batches) == 3
+    assert batches[0]["tokens"].shape == (4, 8)

@@ -1,0 +1,131 @@
+"""Unit + property tests for the stochastic epidemiology model (paper §2.1)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.epi import model as em
+
+CFG = em.EpiModelConfig(population=1e6, num_days=12, a0=100.0, r0=5.0, d0=1.0)
+
+
+def _theta(batch=4, seed=0):
+    from repro.core.priors import paper_prior
+
+    return paper_prior().sample(jax.random.PRNGKey(seed), (batch,))
+
+
+def test_initial_state_matches_paper_step1():
+    th = jnp.asarray([[0.5, 10.0, 1.0, 0.1, 0.2, 0.05, 0.5, 1.5]], jnp.float32)
+    s0 = em.initial_state(th, CFG)[0]
+    assert float(s0[5]) == 0.0  # Ru = 0
+    assert float(s0[1]) == pytest.approx(1.5 * 100.0)  # I0 = kappa * A0
+    assert float(s0[0]) == pytest.approx(1e6 - (100 + 5 + 1 + 150))
+    assert float(s0[2]) == 100.0 and float(s0[3]) == 5.0 and float(s0[4]) == 1.0
+
+
+def test_hazards_eq5():
+    th = jnp.asarray([[0.5, 10.0, 1.0, 0.1, 0.2, 0.05, 0.5, 1.5]], jnp.float32)
+    state = jnp.asarray([[9e5, 150.0, 100.0, 5.0, 1.0, 0.0]], jnp.float32)
+    h = em.hazards(state, th, CFG.population)[0]
+    g = 0.5 + 10.0 / (1.0 + (100.0 + 5.0 + 1.0) ** 1.0)
+    np.testing.assert_allclose(float(h[0]), g * 9e5 * 150.0 / 1e6, rtol=1e-5)
+    np.testing.assert_allclose(float(h[1]), 0.2 * 150.0, rtol=1e-6)  # gamma*I
+    np.testing.assert_allclose(float(h[2]), 0.1 * 100.0, rtol=1e-6)  # beta*A
+    np.testing.assert_allclose(float(h[3]), 0.05 * 100.0, rtol=1e-6)  # delta*A
+    np.testing.assert_allclose(float(h[4]), 0.1 * 0.5 * 150.0, rtol=1e-6)  # beta*eta*I
+
+
+def test_trajectory_shapes_and_finiteness():
+    traj = em.simulate(_theta(8), jax.random.PRNGKey(1), CFG)
+    assert traj.shape == (8, CFG.num_days, 6)
+    assert bool(jnp.all(jnp.isfinite(traj)))
+    obs = em.simulate_observed(_theta(8), jax.random.PRNGKey(1), CFG)
+    assert obs.shape == (8, 3, CFG.num_days)
+
+
+def test_population_conservation_and_nonnegativity():
+    """Mass moves between compartments but the total never changes, and no
+    compartment goes negative — the clamping contract."""
+    th = _theta(64, seed=3)
+    traj = em.simulate(th, jax.random.PRNGKey(2), CFG)
+    total = jnp.sum(traj, axis=-1)
+    init_total = jnp.sum(em.initial_state(th, CFG), axis=-1)
+    expected = np.broadcast_to(np.asarray(init_total)[:, None], total.shape)
+    np.testing.assert_allclose(np.asarray(total), expected, rtol=1e-6)
+    assert float(jnp.min(traj)) >= 0.0
+
+
+def test_cumulative_channels_monotone():
+    """R, D, Ru only ever receive mass — must be non-decreasing."""
+    traj = em.simulate(_theta(32, seed=5), jax.random.PRNGKey(3), CFG)
+    for ch in (3, 4, 5):
+        diffs = jnp.diff(traj[:, :, ch], axis=1)
+        assert float(jnp.min(diffs)) >= 0.0
+    # S only loses mass
+    assert float(jnp.max(jnp.diff(traj[:, :, 0], axis=1))) <= 0.0
+
+
+def test_simulate_matches_lowmem_fused_path():
+    """The beyond-paper fused path must be bit-compatible with the reference."""
+    th = _theta(16, seed=7)
+    key = jax.random.PRNGKey(11)
+    obs_ref = em.simulate_observed(th, key, CFG)  # [B, 3, T]
+    from repro.core.distances import euclidean_distance
+
+    observed = obs_ref[0]  # use sample 0's trajectory as "data"
+    d_full = euclidean_distance(obs_ref, observed)
+    d_fused, state_f = em.simulate_observed_lowmem(th, key, CFG, observed)
+    np.testing.assert_allclose(np.asarray(d_full), np.asarray(d_fused), rtol=1e-5)
+    assert float(d_fused[0]) == 0.0  # self-distance exactly zero
+
+
+def test_deterministic_given_key():
+    th = _theta(4)
+    a = em.simulate(th, jax.random.PRNGKey(42), CFG)
+    b = em.simulate(th, jax.random.PRNGKey(42), CFG)
+    assert bool(jnp.all(a == b))
+    c = em.simulate(th, jax.random.PRNGKey(43), CFG)
+    assert not bool(jnp.all(a == c))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    alpha0=st.floats(0.0, 1.0),
+    alpha=st.floats(0.0, 100.0),
+    n=st.floats(0.0, 2.0),
+    beta=st.floats(0.0, 1.0),
+    gamma=st.floats(0.0, 1.0),
+    delta=st.floats(0.0, 1.0),
+    eta=st.floats(0.0, 1.0),
+    kappa=st.floats(0.0, 2.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_conservation_over_prior_box(
+    alpha0, alpha, n, beta, gamma, delta, eta, kappa, seed
+):
+    """Invariant holds for EVERY parameter point in the prior box."""
+    th = jnp.asarray([[alpha0, alpha, n, beta, gamma, delta, eta, kappa]], jnp.float32)
+    cfg = em.EpiModelConfig(population=5e5, num_days=8, a0=50.0)
+    traj = em.simulate(th, jax.random.PRNGKey(seed % (2**31)), cfg)
+    assert bool(jnp.all(jnp.isfinite(traj)))
+    assert float(jnp.min(traj)) >= 0.0
+    total = np.asarray(jnp.sum(traj, axis=-1))
+    expected = float(jnp.sum(em.initial_state(th, cfg)))
+    np.testing.assert_allclose(total, expected, rtol=1e-5)
+
+
+def test_infection_rate_monotone_decreasing_in_cases():
+    """g(A,R,D) must decrease as confirmed cases grow (behavioural response)."""
+    th = jnp.asarray([[0.3, 50.0, 1.5, 0, 0, 0, 0, 0]], jnp.float32)
+    ard = jnp.asarray([0.0, 10.0, 100.0, 1e4])
+    g = em.infection_rate(th[:, None, :], ard[None, :])
+    diffs = jnp.diff(g[0])
+    assert float(jnp.max(diffs)) <= 0.0
+    # limits: g -> alpha0 + alpha at ARD=0, -> alpha0 as ARD -> inf
+    assert float(g[0, 0]) == pytest.approx(0.3 + 50.0, rel=1e-6)
+    assert float(g[0, -1]) == pytest.approx(0.3 + 50.0 / (1 + 1e4**1.5), rel=1e-5)

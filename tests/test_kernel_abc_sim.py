@@ -1,0 +1,111 @@
+"""Pallas kernel vs pure-jnp oracle: shape/tile/horizon sweeps (interpret mode).
+
+Per the kernel contract every sweep asserts allclose against ref.py. The RNG
+primitive is shared (kernels/rng.py) so agreement checks the kernel's
+tiling/loop/layout logic; the dynamics are independently implemented.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.priors import paper_prior
+from repro.kernels import ops, ref
+
+POP = 1e6
+KW = dict(population=POP, a0=100.0, r0=5.0, d0=1.0)
+
+
+def _observed(days: int, seed: int = 0) -> jnp.ndarray:
+    """A plausible observed series: simulate one trajectory with fixed params."""
+    from repro.epi import model as em
+
+    cfg = em.EpiModelConfig(population=POP, num_days=days, a0=100.0, r0=5.0, d0=1.0)
+    th = jnp.asarray([[0.4, 30.0, 0.8, 0.05, 0.3, 0.01, 0.5, 1.0]], jnp.float32)
+    return em.simulate_observed(th, jax.random.PRNGKey(seed), cfg)[0]
+
+
+def _theta(batch: int, seed: int = 0) -> jnp.ndarray:
+    return paper_prior().sample(jax.random.PRNGKey(seed), (batch,))
+
+
+@pytest.mark.parametrize("batch", [64, 128, 300, 512, 1000])
+@pytest.mark.parametrize("tile", [128, 256])
+def test_kernel_matches_ref_batch_tile_sweep(batch, tile):
+    obs = _observed(10)
+    th = _theta(batch, seed=batch)
+    seed = jnp.uint32(77)
+    d_k = ops.abc_sim_distance(th, seed, obs, tile=tile, interpret=True, **KW)
+    d_r = ref.abc_sim_distance_ref(th, seed, obs, **KW)
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_r), rtol=2e-6, atol=1e-3)
+
+
+@pytest.mark.parametrize("days", [1, 7, 49])
+def test_kernel_matches_ref_horizon_sweep(days):
+    obs = _observed(days)
+    th = _theta(256, seed=days)
+    d_k = ops.abc_sim_distance(th, jnp.uint32(5), obs, tile=128, interpret=True, **KW)
+    d_r = ref.abc_sim_distance_ref(th, jnp.uint32(5), obs, **KW)
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_r), rtol=2e-6, atol=1e-3)
+
+
+@pytest.mark.parametrize(
+    "pop,a0,r0,d0",
+    [(1e5, 10.0, 0.0, 0.0), (60.36e6, 155.0, 2.0, 3.0), (328.2e6, 104.0, 7.0, 6.0)],
+)
+def test_kernel_matches_ref_population_sweep(pop, a0, r0, d0):
+    """Country-scale populations (f32 stress: S ~ 3e8)."""
+    from repro.epi import model as em
+
+    cfg = em.EpiModelConfig(population=pop, num_days=12, a0=a0, r0=r0, d0=d0)
+    th_true = jnp.asarray([[0.38, 36.0, 0.6, 0.013, 0.385, 0.009, 0.48, 0.83]], jnp.float32)
+    obs = em.simulate_observed(th_true, jax.random.PRNGKey(1), cfg)[0]
+    th = _theta(256, seed=9)
+    kw = dict(population=pop, a0=a0, r0=r0, d0=d0)
+    d_k = ops.abc_sim_distance(th, jnp.uint32(3), obs, tile=128, interpret=True, **kw)
+    d_r = ref.abc_sim_distance_ref(th, jnp.uint32(3), obs, **kw)
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_r), rtol=1e-5, atol=1.0)
+
+
+def test_kernel_seed_sensitivity():
+    """Different seeds give different (but finite) distances; same seed exact."""
+    obs = _observed(8)
+    th = _theta(128)
+    a = ops.abc_sim_distance(th, jnp.uint32(1), obs, tile=128, interpret=True, **KW)
+    b = ops.abc_sim_distance(th, jnp.uint32(1), obs, tile=128, interpret=True, **KW)
+    c = ops.abc_sim_distance(th, jnp.uint32(2), obs, tile=128, interpret=True, **KW)
+    assert bool(jnp.all(a == b))
+    assert not bool(jnp.all(a == c))
+    assert bool(jnp.all(jnp.isfinite(a)))
+
+
+def test_kernel_tile_invariance():
+    """Distances must not depend on the tiling (pure layout parameter)."""
+    obs = _observed(10)
+    th = _theta(512, seed=2)
+    d1 = ops.abc_sim_distance(th, jnp.uint32(9), obs, tile=128, interpret=True, **KW)
+    d2 = ops.abc_sim_distance(th, jnp.uint32(9), obs, tile=512, interpret=True, **KW)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-6)
+
+
+def test_kernel_statistics_match_threefry_reference():
+    """Hash-RNG simulation must be statistically indistinguishable from the
+    paper-faithful threefry path at the distance-distribution level."""
+    from repro.epi import model as em
+    from repro.core.distances import euclidean_distance
+
+    days = 15
+    obs = _observed(days)
+    cfg = em.EpiModelConfig(population=POP, num_days=days, a0=100.0, r0=5.0, d0=1.0)
+    th = _theta(2048, seed=4)
+    d_hash = np.asarray(
+        ops.abc_sim_distance(th, jnp.uint32(11), obs, tile=512, interpret=True, **KW)
+    )
+    sim = em.simulate_observed(th, jax.random.PRNGKey(12), cfg)
+    d_tf = np.asarray(euclidean_distance(sim, obs))
+    ok = np.isfinite(d_hash) & np.isfinite(d_tf)
+    qs = np.linspace(0.05, 0.95, 19)
+    np.testing.assert_allclose(
+        np.quantile(d_hash[ok], qs), np.quantile(d_tf[ok], qs), rtol=0.1
+    )

@@ -1,0 +1,150 @@
+"""Numerics of the shared layers: blockwise-vs-dense attention equivalence,
+SSD chunked-vs-recurrent equivalence, rope/softcap invariants (hypothesis)."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.models import common as cm
+from repro.models import ssm as ssm_lib
+
+
+# ------------------------------------------------------ attention equivalence
+@pytest.mark.parametrize("kh,window", [(4, None), (2, None), (1, None), (4, 8)])
+def test_blockwise_matches_dense(kh, window):
+    b, s, h, d = 2, 64, 4, 16
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(kq, (b, s, h, d), jnp.float32)
+    k = jax.random.normal(kk, (b, s, kh, d), jnp.float32)
+    v = jax.random.normal(kv, (b, s, kh, d), jnp.float32)
+    dense = cm.dense_attention(q, k, v, causal=True, window=window)
+    block = cm.blockwise_attention(q, k, v, causal=True, window=window,
+                                   q_block=16, kv_block=16)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(block),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_blockwise_matches_dense_with_softcap():
+    b, s, h, d = 1, 32, 2, 8
+    q = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, d), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, d), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(3), (b, s, h, d), jnp.float32)
+    dense = cm.dense_attention(q, k, v, causal=True, attn_softcap=50.0)
+    block = cm.blockwise_attention(q, k, v, causal=True, attn_softcap=50.0,
+                                   q_block=8, kv_block=8)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(block),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_decode_attention_matches_dense_last_row():
+    """One-token decode == last row of full causal attention."""
+    b, s, h, d = 2, 24, 4, 8
+    kh = 2
+    q = jax.random.normal(jax.random.PRNGKey(4), (b, s, h, d), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(5), (b, s, kh, d), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(6), (b, s, kh, d), jnp.float32)
+    full = cm.dense_attention(q, k, v, causal=True)
+    dec = cm.decode_attention(
+        q[:, -1:], k, v, valid_len=jnp.full((b,), s, jnp.int32)
+    )
+    np.testing.assert_allclose(np.asarray(full[:, -1:]), np.asarray(dec),
+                               rtol=2e-5, atol=2e-6)
+
+
+# ----------------------------------------------------------- SSD equivalence
+def _ssd_recurrent_ref(x, dt, A, B_in, C_in):
+    """Step-by-step SSM recurrence (the definition SSD must match)."""
+    b, s, h, p = x.shape
+    g, n = B_in.shape[2], B_in.shape[3]
+    hg = h // g
+    Bh = jnp.repeat(B_in, hg, axis=2)  # [b, s, h, n]
+    Ch = jnp.repeat(C_in, hg, axis=2)
+    state = jnp.zeros((b, h, n, p), jnp.float32)
+    ys = []
+    for t in range(s):
+        decay = jnp.exp(dt[:, t] * A[None, :])  # [b, h]
+        upd = (dt[:, t, :, None] * Bh[:, t].astype(jnp.float32))[..., None] * \
+            x[:, t].astype(jnp.float32)[:, :, None, :]
+        state = decay[..., None, None] * state + upd
+        ys.append(jnp.einsum("bhn,bhnp->bhp", Ch[:, t].astype(jnp.float32), state))
+    return jnp.stack(ys, axis=1), state  # [b, s, h, p]
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_ssd_chunked_matches_recurrence(chunk):
+    b, s, h, p, g, n = 2, 16, 4, 8, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,), jnp.float32) * 0.3)
+    B_in = jax.random.normal(ks[3], (b, s, g, n), jnp.float32) * 0.5
+    C_in = jax.random.normal(ks[0], (b, s, g, n), jnp.float32) * 0.5
+    y, st = ssm_lib.ssd_chunked(x, dt, A, B_in, C_in, chunk=chunk)
+    y_ref, st_ref = _ssd_recurrent_ref(x, dt, A, B_in, C_in)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref), rtol=2e-3, atol=2e-3)
+
+
+def test_mamba_decode_matches_forward_prefix():
+    """Token-by-token decode reproduces the chunked forward activations."""
+    cfg = ssm_lib.Mamba2Config(
+        name="t", n_layers=1, d_model=32, d_state=8, vocab=64, head_dim=8,
+        chunk=4, remat="none",
+    )
+    p = ssm_lib.init_mamba_layer(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 32), jnp.float32) * 0.5
+    x = x.astype(jnp.bfloat16)
+    full = ssm_lib.mamba_block(x, p, cfg)
+    ssm = jnp.zeros((1, cfg.n_heads, cfg.d_state, cfg.head_dim), jnp.float32)
+    conv = jnp.zeros((1, cfg.conv_width - 1, cfg.conv_channels), cm.DEFAULT_DTYPE)
+    outs = []
+    for t in range(8):
+        o, ssm, conv = ssm_lib.mamba_decode_block(x[:, t : t + 1], p, cfg, ssm, conv)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(full, np.float32), np.asarray(dec, np.float32),
+        rtol=0.05, atol=0.05,  # bf16 path
+    )
+
+
+# ------------------------------------------------------------- invariants
+@settings(max_examples=20, deadline=None)
+@given(cap=st.floats(1.0, 100.0), scale=st.floats(0.1, 100.0))
+def test_softcap_bounds_and_monotone(cap, scale):
+    x = jnp.linspace(-scale, scale, 64, dtype=jnp.float32)
+    y = cm.softcap(x, cap)
+    assert float(jnp.max(jnp.abs(y))) <= cap + 1e-3
+    assert bool(jnp.all(jnp.diff(y) >= -1e-6))
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 8, 2, 16), jnp.float32)
+    pos = jnp.arange(8)
+    y = cm.rope(x, pos)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.PRNGKey(3), (1, 1, 1, 16), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(4), (1, 1, 1, 16), jnp.float32)
+    def dot_at(i, j):
+        qi = cm.rope(q, jnp.asarray([i]))
+        kj = cm.rope(k, jnp.asarray([j]))
+        return float(jnp.sum(qi * kj))
+    np.testing.assert_allclose(dot_at(3, 1), dot_at(7, 5), rtol=1e-4)
+
+
+def test_chunked_ce_matches_full():
+    b, s, d, v = 2, 16, 8, 32
+    x = jax.random.normal(jax.random.PRNGKey(5), (b, s, d), jnp.bfloat16)
+    table = jax.random.normal(jax.random.PRNGKey(6), (v, d), jnp.bfloat16)
+    labels = jax.random.randint(jax.random.PRNGKey(7), (b, s), 0, v)
+    full = cm.cross_entropy_loss(cm.unembed(x, table), labels)
+    chunked = cm.cross_entropy_chunked(x, table, labels, chunk=4)
+    np.testing.assert_allclose(float(full), float(chunked), rtol=1e-5)

@@ -1,0 +1,88 @@
+"""MoE dispatch correctness: grouped EP vs global baseline vs dense oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import moe as moe_lib
+from repro.models.moe import MoEConfig, init_moe, moe_ffn, moe_ffn_global
+
+
+def _setup(e=8, k=2, d=32, f=16, n_shared=0, seed=0):
+    cfg = MoEConfig(n_experts=e, top_k=k, d_expert=f, n_shared=n_shared,
+                    capacity_factor=8.0)  # ample capacity: no drops
+    p = init_moe(jax.random.PRNGKey(seed), d, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, 16, d), jnp.float32) * 0.3
+    return cfg, p, x.astype(jnp.bfloat16)
+
+
+def _dense_oracle(x, p, cfg):
+    """Every expert on every token, combined with top-k router weights."""
+    xf = x.reshape(-1, x.shape[-1])
+    logits = xf.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    w, ids = jax.lax.top_k(probs, cfg.top_k)
+    w = w / w.sum(-1, keepdims=True)
+    h = jnp.einsum("nd,edf->enf", xf, p["wg"])
+    hu = jnp.einsum("nd,edf->enf", xf, p["wu"])
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("enf,efd->end", h * hu, p["wd"])  # [E, N, d]
+    mask = jax.nn.one_hot(ids, cfg.n_experts, dtype=jnp.float32)  # [N,k,E]
+    comb = jnp.einsum("nke,end->nkd", mask, out.astype(jnp.float32))
+    y = (comb * w[..., None].astype(jnp.float32)).sum(1)
+    return y.reshape(x.shape).astype(x.dtype)
+
+
+def test_grouped_matches_dense_oracle():
+    cfg, p, x = _setup()
+    y, aux = moe_ffn(x, p, cfg)
+    y_ref = _dense_oracle(x, p, cfg)
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(y_ref, np.float32),
+        rtol=0.08, atol=0.05,  # bf16 combine vs f32 oracle
+    )
+    assert float(aux) >= 0
+
+
+def test_grouped_matches_global_formulation():
+    cfg, p, x = _setup(seed=3)
+    y_g, _ = moe_ffn(x, p, cfg)
+    y_n, _ = moe_ffn_global(x, p, cfg)
+    np.testing.assert_allclose(
+        np.asarray(y_g, np.float32), np.asarray(y_n, np.float32),
+        rtol=0.08, atol=0.05,
+    )
+
+
+def test_shared_experts_added():
+    cfg, p, x = _setup(n_shared=2, seed=5)
+    y, _ = moe_ffn(x, p, cfg)
+    cfg0, p0, _ = _setup(n_shared=0, seed=5)
+    # zero-out router path by comparing against shared-only contribution
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y.astype(jnp.float32))))
+
+
+def test_capacity_drops_tokens_not_correctness():
+    """With capacity factor < needed, dropped slots contribute zeros (no NaN,
+    no misrouting)."""
+    cfg = MoEConfig(n_experts=4, top_k=2, d_expert=8, capacity_factor=0.25)
+    p = init_moe(jax.random.PRNGKey(0), 16, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 16), jnp.bfloat16)
+    y, aux = moe_ffn(x, p, cfg)
+    assert bool(jnp.all(jnp.isfinite(y.astype(jnp.float32))))
+    # with ample capacity output magnitude should be >= dropped version
+    cfg2 = MoEConfig(n_experts=4, top_k=2, d_expert=8, capacity_factor=8.0)
+    y2, _ = moe_ffn(x, p, cfg2)
+    assert float(jnp.abs(y2.astype(jnp.float32)).sum()) >= float(
+        jnp.abs(y.astype(jnp.float32)).sum()
+    ) - 1e-3
+
+
+def test_aux_loss_penalizes_imbalance():
+    """Uniform routing gives ~the minimum aux value (= weight)."""
+    cfg, p, x = _setup(e=4, k=1, seed=7)
+    _, aux = moe_ffn(x, p, cfg)
+    # aux = w * E * sum(f_e p_e); for near-uniform ~ w
+    assert 0.5 * cfg.router_aux_weight < float(aux) < 6 * cfg.router_aux_weight

@@ -1,0 +1,106 @@
+"""AdamW, schedule, clipping, and int8 error-feedback gradient compression."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.optim import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    compress_gradients,
+    cosine_schedule,
+    decompress_gradients,
+)
+
+
+def _params():
+    return {"a": jnp.ones((4, 4), jnp.bfloat16), "nested": (jnp.ones(3),)}
+
+
+def test_adamw_decreases_quadratic_loss():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0, total_steps=100,
+                      min_lr_ratio=1.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    opt = adamw_init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    for _ in range(100):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw_update(params, g, opt, cfg)
+    assert float(loss(params)) < 5e-2
+
+
+def test_schedule_warmup_and_decay():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=110, min_lr_ratio=0.1)
+    lrs = [float(cosine_schedule(cfg, jnp.asarray(s))) for s in (0, 5, 10, 60, 110)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 0.5) < 1e-6  # linear warmup
+    assert abs(lrs[2] - 1.0) < 1e-6
+    assert lrs[2] > lrs[3] > lrs[4]
+    assert abs(lrs[4] - 0.1) < 1e-3  # floor
+
+
+def test_grad_clipping_caps_update_norm():
+    cfg = AdamWConfig(lr=1e-3, clip_norm=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    opt = adamw_init(params)
+    g = {"w": jnp.full(4, 1e6)}
+    _, _, metrics = adamw_update(params, g, opt, cfg)
+    assert float(metrics["grad_norm"]) > 1e5  # reported pre-clip
+
+
+def test_tuple_containing_trees_supported():
+    """Regression: decoder params contain tuples as internal nodes."""
+    params = _params()
+    opt = adamw_init(params)
+    g = jax.tree.map(jnp.ones_like, params)
+    p2, o2, _ = adamw_update(params, g, opt, AdamWConfig())
+    assert jax.tree.structure(p2) == jax.tree.structure(params)
+
+
+def test_compression_roundtrip_error_bound():
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64, 64)), jnp.float32)}
+    comp, err = compress_gradients(g)
+    deq = decompress_gradients(comp)
+    scale = float(jnp.max(jnp.abs(g["w"]))) / 127.0
+    assert float(jnp.max(jnp.abs(deq["w"] - g["w"]))) <= scale * 0.5 + 1e-6
+    # error feedback holds the exact residual
+    np.testing.assert_allclose(
+        np.asarray(err["w"]), np.asarray(g["w"] - deq["w"]), rtol=1e-5, atol=1e-7
+    )
+
+
+def test_error_feedback_unbiased_over_steps():
+    """With error feedback, the SUM of dequantized grads converges to the sum
+    of true grads (compression bias does not accumulate)."""
+    rng = np.random.default_rng(1)
+    true_sum = np.zeros((32,), np.float32)
+    deq_sum = np.zeros((32,), np.float32)
+    err = None
+    for _ in range(50):
+        g = {"w": jnp.asarray(rng.normal(size=(32,)), jnp.float32)}
+        comp, err = compress_gradients(g, err)
+        deq = decompress_gradients(comp)
+        true_sum += np.asarray(g["w"])
+        deq_sum += np.asarray(deq["w"])
+    resid = np.abs(true_sum - deq_sum).max()
+    scale_bound = np.abs(true_sum).max() * 0.05 + 0.2
+    assert resid < scale_bound, resid
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    vals=st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=1, max_size=64)
+)
+def test_property_compression_max_error(vals):
+    g = {"w": jnp.asarray(np.array(vals, np.float32))}
+    comp, _ = compress_gradients(g)
+    deq = decompress_gradients(comp)
+    scale = float(jnp.max(jnp.abs(g["w"]))) / 127.0
+    assert float(jnp.max(jnp.abs(deq["w"] - g["w"]))) <= scale * 0.5 + 1e-5

@@ -1,0 +1,93 @@
+"""Fault-tolerance control plane: ledger, worker loss, stragglers, resume."""
+
+import random
+
+from repro.runtime import ChunkLedger, WorkScheduler
+
+
+def test_all_chunks_complete_happy_path():
+    sched = WorkScheduler(n_chunks=10)
+    t = 0.0
+    while not sched.finished:
+        t += 0.1
+        for w in ("w0", "w1", "w2"):
+            c = sched.request_work(w, t)
+            if c is not None:
+                sched.report_done(w, c, t)
+    assert sched.ledger.done == set(range(10))
+    assert sched.wasted_completions == 0
+
+
+def test_worker_death_requeues_chunks():
+    sched = WorkScheduler(n_chunks=4, timeout=1.0)
+    c0 = sched.request_work("dead", now=0.0)
+    assert c0 is not None
+    # dead worker never reports; others keep beating past the timeout
+    t = 0.0
+    while not sched.finished:
+        t += 0.5
+        c = sched.request_work("alive", t)
+        if c is not None:
+            sched.report_done("alive", c, t)
+        assert t < 60
+    assert c0 in sched.ledger.done  # recovered despite owner death
+
+
+def test_straggler_speculation_bounds_tail():
+    """With one 100x-slow worker, speculative duplicates finish the job
+    without waiting for it."""
+    sched = WorkScheduler(n_chunks=6, timeout=1e9)  # no death reaping
+    slow_chunk = sched.request_work("slow", now=0.0)  # slow worker grabs one
+    t = 0.0
+    while not sched.finished:
+        t += 0.1
+        c = sched.request_work("fast", t)
+        if c is not None:
+            sched.report_done("fast", c, t)
+        assert t < 30
+    assert sched.duplicates_issued >= 1
+    assert slow_chunk in sched.ledger.done
+    # late completion by the slow worker is counted as wasted, not an error
+    sched.report_done("slow", slow_chunk, t + 100)
+    assert sched.wasted_completions >= 1
+
+
+def test_ledger_resume_roundtrip():
+    led = ChunkLedger(n_chunks=8)
+    for c in (0, 3, 5):
+        led.next_chunk("w")
+        led.complete(c)
+    state = led.to_state()
+    led2 = ChunkLedger.from_state(state)
+    assert led2.done == {0, 3, 5}
+    remaining = set()
+    while True:
+        c = led2.next_chunk("w")
+        if c is None:
+            break
+        remaining.add(c)
+        led2.complete(c)
+    assert remaining == {1, 2, 4, 6, 7}
+
+
+def test_randomized_chaos_all_work_completes():
+    """Property-ish: random worker deaths/speculation never lose a chunk."""
+    rng = random.Random(0)
+    sched = WorkScheduler(n_chunks=40, timeout=2.0)
+    workers = {f"w{i}": True for i in range(6)}
+    t = 0.0
+    while not sched.finished and t < 1000:
+        t += 0.5
+        for w, alive in list(workers.items()):
+            if not alive:
+                continue
+            if rng.random() < 0.02:  # sudden death
+                workers[w] = False
+                continue
+            c = sched.request_work(w, t)
+            if c is not None and rng.random() < 0.9:
+                sched.report_done(w, c, t)
+        if all(not a for a in workers.values()):  # elastic scale-up
+            workers[f"w{len(workers)}"] = True
+    assert sched.finished
+    assert sched.ledger.done == set(range(40))

@@ -1,0 +1,58 @@
+"""Cross-model simulator throughput: every registry model x every backend.
+
+    PYTHONPATH=src python benchmarks/bench_model_sweep.py [--batch 16384]
+
+Times the batched theta -> distance simulator (one ABC run's inner loop) for
+each registered compartmental model on the xla / xla_fused / pallas
+backends, reporting simulations per second and the per-model state/param
+dimensions that size the kernel's VMEM tiles.
+"""
+
+import argparse
+import sys
+from pathlib import Path
+
+import jax
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from common import render_table, save_result, time_fn  # noqa: E402
+
+from repro.core.abc import ABCConfig, make_simulator  # noqa: E402
+from repro.epi.data import get_dataset  # noqa: E402
+from repro.epi.models import get_model, list_models  # noqa: E402
+
+DAYS = 20
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=16384)
+    ap.add_argument("--backends", nargs="+",
+                    default=["xla", "xla_fused", "pallas"])
+    args = ap.parse_args(argv)
+
+    rows, payload = [], []
+    for name in list_models():
+        spec = get_model(name)
+        ds = get_dataset("synthetic_small", num_days=DAYS, model=name)
+        theta = spec.prior().sample(jax.random.PRNGKey(0), (args.batch,))
+        key = jax.random.PRNGKey(1)
+        for backend in args.backends:
+            cfg = ABCConfig(batch_size=args.batch, num_days=DAYS,
+                            chunk_size=args.batch, backend=backend, model=name)
+            sim = jax.jit(make_simulator(ds, cfg))
+            t = time_fn(sim, theta, key, warmup=1, iters=3)
+            sps = args.batch / t["min_s"]
+            rows.append([name, spec.n_state, spec.n_params, backend,
+                         f"{t['min_s']*1e3:.1f}", f"{sps:,.0f}"])
+            payload.append({"model": name, "backend": backend,
+                            "batch": args.batch, "days": DAYS, **t,
+                            "sims_per_s": sps})
+    print(render_table(
+        ["model", "n_state", "n_params", "backend", "min_ms", "sims/s"], rows))
+    path = save_result("model_sweep", payload)
+    print(f"\nsaved {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,15 @@
 """The paper's own workload config: parallel ABC over the stochastic
-epidemiology model (DESIGN.md §1). Scales from this CPU container (reduced
-batch) to the production pod meshes (launch/abc_run.py)."""
+epidemiology models (DESIGN.md §1). Scales from this CPU container (reduced
+batch) to the production pod meshes (launch/abc_run.py). Since the
+stoichiometry-driven refactor a workload names its model via
+`ABCConfig.model`; `cross_model_sweep()` yields one workload per registry
+entry for model-comparison runs."""
 
 import dataclasses
+from typing import Tuple
 
 from repro.core.abc import ABCConfig
+from repro.epi.models import list_models
 
 
 @dataclasses.dataclass(frozen=True)
@@ -12,6 +17,17 @@ class ABCWorkload:
     name: str
     dataset: str
     abc: ABCConfig
+
+    def load_dataset(self, num_days: int | None = None):
+        """Materialize the dataset for this workload's model — callers must
+        not re-derive it from the name alone, or the model gets lost."""
+        from repro.epi.data import get_dataset
+
+        return get_dataset(
+            self.dataset,
+            num_days=num_days or self.abc.num_days,
+            model=self.abc.model,
+        )
 
 
 def paper_production() -> ABCWorkload:
@@ -27,6 +43,7 @@ def paper_production() -> ABCWorkload:
             chunk_size=10_000,
             num_days=49,
             backend="pallas",
+            model="siard",
         ),
     )
 
@@ -43,5 +60,37 @@ def cpu_demo() -> ABCWorkload:
             chunk_size=1024,
             num_days=20,
             backend="xla_fused",
+            model="siard",
         ),
     )
+
+
+def cross_model_sweep(
+    batch_size: int = 8192,
+    num_days: int = 20,
+    backend: str = "xla_fused",
+) -> Tuple[ABCWorkload, ...]:
+    """One synthetic-recovery workload per registered model.
+
+    Tolerances are left at infinity + topk so each workload self-selects its
+    acceptance set; callers typically pair this with `calibrate_tolerance`.
+    """
+    out = []
+    for name in list_models():
+        out.append(
+            ABCWorkload(
+                name=f"epi-abc-{name}",
+                dataset="synthetic_small",
+                abc=ABCConfig(
+                    batch_size=batch_size,
+                    tolerance=float("inf"),
+                    target_accepted=100,
+                    strategy="topk",
+                    top_k=100,
+                    num_days=num_days,
+                    backend=backend,
+                    model=name,
+                ),
+            )
+        )
+    return tuple(out)

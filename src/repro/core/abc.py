@@ -37,8 +37,9 @@ import numpy as np
 from repro.core.distances import DISTANCES
 from repro.core.posterior import Posterior
 from repro.core.priors import UniformBoxPrior
-from repro.epi import model as epi_model
+from repro.epi import engine
 from repro.epi.data import CountryData
+from repro.epi.models import get_model
 
 Array = jax.Array
 
@@ -57,6 +58,8 @@ class ABCConfig:
     distance: str = "euclidean"
     backend: str = "xla_fused"
     num_days: int = 49
+    #: registry name of the compartmental model to infer (repro.epi.models)
+    model: str = "siard"
 
     def __post_init__(self):
         if self.strategy not in ("outfeed", "topk"):
@@ -84,7 +87,17 @@ SimulatorFn = Callable[[Array, Array], Array]  # (theta [B,p], key) -> dist [B]
 
 
 def make_simulator(dataset: CountryData, cfg: ABCConfig) -> SimulatorFn:
-    """Build the batched theta -> distance function for the chosen backend."""
+    """Build the batched theta -> distance function for the chosen backend.
+
+    The model spec comes from `cfg.model`; the dataset must hold series for
+    the same observed channels (checked here, not at run time).
+    """
+    spec = get_model(cfg.model)
+    if not dataset.compatible_with(spec):
+        raise ValueError(
+            f"dataset {dataset.name!r} holds {dataset.model!r} series; model "
+            f"{spec.name!r} observes different channels"
+        )
     mcfg = dataset.model_config(cfg.num_days)
     observed = jnp.asarray(dataset.observed[:, : cfg.num_days], jnp.float32)
     dist_fn = DISTANCES[cfg.distance]
@@ -92,7 +105,7 @@ def make_simulator(dataset: CountryData, cfg: ABCConfig) -> SimulatorFn:
     if cfg.backend == "xla":
 
         def simulator(theta: Array, key: Array) -> Array:
-            sim = epi_model.simulate_observed(theta, key, mcfg)  # [B, 3, T]
+            sim = engine.simulate_observed(spec, theta, key, mcfg)  # [B, n_obs, T]
             return dist_fn(sim, observed)
 
     elif cfg.backend == "xla_fused":
@@ -100,7 +113,7 @@ def make_simulator(dataset: CountryData, cfg: ABCConfig) -> SimulatorFn:
             raise ValueError("xla_fused backend implements euclidean only")
 
         def simulator(theta: Array, key: Array) -> Array:
-            d, _ = epi_model.simulate_observed_lowmem(theta, key, mcfg, observed)
+            d, _ = engine.simulate_observed_lowmem(spec, theta, key, mcfg, observed)
             return d
 
     else:  # pallas
@@ -120,6 +133,7 @@ def make_simulator(dataset: CountryData, cfg: ABCConfig) -> SimulatorFn:
                 a0=mcfg.a0,
                 r0=mcfg.r0,
                 d0=mcfg.d0,
+                model=spec,
             )
 
     return simulator
@@ -172,6 +186,9 @@ class ABCState:
     simulations: int = 0
     accepted_theta: list = dataclasses.field(default_factory=list)
     accepted_dist: list = dataclasses.field(default_factory=list)
+    #: parameter dimension, set from the model/prior by run_abc (or on load);
+    #: required only to give the empty-case arrays a concrete shape
+    n_params: Optional[int] = None
 
     @property
     def n_accepted(self) -> int:
@@ -179,7 +196,11 @@ class ABCState:
 
     def to_arrays(self):
         if not self.accepted_theta:
-            return np.zeros((0, 8), np.float32), np.zeros((0,), np.float32)
+            # shape derives from the model/prior — NOT a hardcoded paper dim
+            return (
+                np.zeros((0, self.n_params or 0), np.float32),
+                np.zeros((0,), np.float32),
+            )
         return (
             np.concatenate(self.accepted_theta, axis=0),
             np.concatenate(self.accepted_dist, axis=0),
@@ -194,7 +215,11 @@ class ABCState:
     @staticmethod
     def load(path: str) -> "ABCState":
         z = np.load(path)
-        st = ABCState(run_idx=int(z["run_idx"]), simulations=int(z["simulations"]))
+        st = ABCState(
+            run_idx=int(z["run_idx"]),
+            simulations=int(z["simulations"]),
+            n_params=int(z["theta"].shape[1]),
+        )
         if z["theta"].shape[0]:
             st.accepted_theta = [z["theta"]]
             st.accepted_dist = [z["dist"]]
@@ -249,10 +274,18 @@ def run_abc(
     `run_fn` may be a pre-sharded/jitted runner (multi-device); by default a
     single-device jitted runner is built here.
     """
+    spec = get_model(cfg.model)
     if isinstance(key, int):
         key = jax.random.PRNGKey(key)
-    prior = prior or UniformBoxPrior(highs=epi_model.PRIOR_HIGHS)
+    prior = prior or spec.prior()
     state = state or ABCState()
+    if state.n_params is None:
+        state.n_params = prior.dim
+    elif state.n_params != prior.dim:
+        raise ValueError(
+            f"resumed state holds {state.n_params}-parameter samples but model "
+            f"{spec.name!r} has {prior.dim} parameters — wrong checkpoint?"
+        )
     if run_fn is None:
         simulator = make_simulator(dataset, cfg)
         run_fn = jax.jit(abc_run_batch(prior, simulator, cfg))
@@ -281,11 +314,13 @@ def run_abc(
             state.save(checkpoint_path)
 
     theta, dist = state.to_arrays()
+    # every harvested sample is returned (a run may overshoot target_accepted;
+    # the paper keeps the overshoot too — callers can slice with Posterior.top)
     post = Posterior(
-        theta=theta[: max(cfg.target_accepted, len(theta))],
-        distances=dist[: max(cfg.target_accepted, len(dist))],
+        theta=theta,
+        distances=dist,
         tolerance=cfg.tolerance,
-        param_names=epi_model.PARAM_NAMES,
+        param_names=spec.param_names,
         runs=state.run_idx,
         simulations=state.simulations,
         wall_time_s=time.time() - t0,
@@ -312,7 +347,7 @@ def calibrate_tolerance(
     """
     if isinstance(key, int):
         key = jax.random.PRNGKey(key)
-    prior = prior or UniformBoxPrior(highs=epi_model.PRIOR_HIGHS)
+    prior = prior or get_model(cfg.model).prior()
     simulator = jax.jit(make_simulator(dataset, cfg))
     per_wave = min(n_pilot, cfg.batch_size)
     dists = []

@@ -28,8 +28,26 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.abc import ABCConfig, RunOutput, SimulatorFn, abc_run_batch
+from repro.core.abc import ABCConfig, RunOutput, SimulatorFn, abc_run_batch, make_simulator
 from repro.core.priors import UniformBoxPrior
+
+
+def make_runner(mesh: Mesh, dataset, cfg: ABCConfig, style: str = "shard_map"):
+    """Build a sharded runner from the config alone.
+
+    Resolves the model spec named by `cfg.model` (prior bounds, parameter
+    dimension, simulator) so callers never hardcode a particular model's
+    shapes. `style` is "shard_map" (paper-faithful per-device replica) or
+    "pjit" (GSPMD).
+    """
+    from repro.epi.models import get_model
+
+    if style not in ("shard_map", "pjit"):
+        raise ValueError(f"unknown runner style {style!r}")
+    prior = get_model(cfg.model).prior()
+    simulator = make_simulator(dataset, cfg)
+    maker = make_shardmap_runner if style == "shard_map" else make_pjit_runner
+    return maker(mesh, prior, simulator, cfg)
 
 
 def data_axes(mesh: Mesh) -> Tuple[str, ...]:

@@ -20,8 +20,8 @@ import numpy as np
 from repro.core.abc import ABCConfig, make_simulator
 from repro.core.posterior import Posterior
 from repro.core.priors import UniformBoxPrior
-from repro.epi import model as epi_model
 from repro.epi.data import CountryData
+from repro.epi.models import get_model
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,6 +35,8 @@ class SMCConfig:
     backend: str = "xla_fused"
     max_waves_per_round: int = 200
     min_tolerance: float = 0.0
+    #: registry name of the compartmental model to infer (repro.epi.models)
+    model: str = "siard"
 
 
 def _weighted_var(theta: np.ndarray, w: np.ndarray) -> np.ndarray:
@@ -50,9 +52,10 @@ def run_smc_abc(
     verbose: bool = False,
 ) -> Posterior:
     """Returns the final particle population as a Posterior."""
+    spec = get_model(cfg.model)
     if isinstance(key, int):
         key = jax.random.PRNGKey(key)
-    prior = prior or UniformBoxPrior(highs=epi_model.PRIOR_HIGHS)
+    prior = prior or spec.prior()
     abc_cfg = ABCConfig(
         batch_size=cfg.batch_size,
         tolerance=np.inf,
@@ -61,6 +64,7 @@ def run_smc_abc(
         top_k=cfg.batch_size,
         num_days=cfg.num_days,
         backend=cfg.backend,
+        model=cfg.model,
     )
     simulator = make_simulator(dataset, abc_cfg)
     sim_jit = jax.jit(simulator)
@@ -136,7 +140,7 @@ def run_smc_abc(
         theta=particles,
         distances=dists,
         tolerance=eps,
-        param_names=epi_model.PARAM_NAMES,
+        param_names=spec.param_names,
         runs=cfg.n_rounds,
         simulations=sims,
         wall_time_s=time.time() - t0,

@@ -1,4 +1,13 @@
-"""Stochastic compartmental epidemiology model substrate (Warne et al. 2020 / paper §2.1)."""
+"""Stochastic compartmental epidemiology substrate (Warne et al. 2020 / paper §2.1).
+
+The package is organized around declarative model specs:
+
+  * `repro.epi.spec`    — `CompartmentalModel` + `EpiModelConfig`
+  * `repro.epi.engine`  — generic stoichiometry-driven tau-leap engine
+  * `repro.epi.models`  — registry (siard — the paper model —, sir, seir, seiard)
+  * `repro.epi.model`   — backwards-compatible facade for the paper model
+  * `repro.epi.data`    — datasets (model-aware synthetic + bundled series)
+"""
 
 from repro.epi.model import (
     EpiModelConfig,
@@ -11,5 +20,12 @@ from repro.epi.model import (
     simulate,
     simulate_observed,
     tau_leap_step,
+)
+from repro.epi.models import (
+    CompartmentalModel,
+    DEFAULT_MODEL,
+    get_model,
+    list_models,
+    register,
 )
 from repro.epi.data import CountryData, get_dataset, list_datasets, synthetic_dataset

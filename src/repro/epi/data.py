@@ -1,31 +1,35 @@
-"""Dataset registry for the epidemiology model.
+"""Dataset registry for the epidemiology models.
 
 The paper fits Johns Hopkins CSSE daily (A, R, D) series for Italy, New
 Zealand and the USA, 49 days starting from the first day with 100 detected
 cases. This container is offline, so we provide:
 
   * `synthetic_dataset(...)` — simulate a ground-truth trajectory from known
-    parameters. This is the scientifically strongest validation target: the
-    ABC posterior must concentrate around the generating parameters
-    (EXPERIMENTS.md claim C2).
+    parameters with ANY registered model spec. This is the scientifically
+    strongest validation target: the ABC posterior must concentrate around
+    the generating parameters (EXPERIMENTS.md claim C2).
   * Bundled demo series for italy / new_zealand / usa, generated from the
     paper's Table 8 posterior-mean parameters with fixed seeds and realistic
     (P, A0, R0, D0) starting points. These are clearly labeled approximations
-    standing in for the JHU feed — NOT the actual JHU numbers.
+    standing in for the JHU feed — NOT the actual JHU numbers. They are SIARD
+    series (the paper model), but any model whose observed channels are
+    (A, R, D) — e.g. seiard — can be fitted against them.
 
-Every dataset is a `CountryData` with observed [3, T] = (A, R, D) per day.
+Every dataset is a `CountryData` with observed [n_observed, T] series; the
+`model` field names the spec whose observed channels the rows correspond to.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, Tuple, Union
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.epi import model as epi_model
+from repro.epi import engine
+from repro.epi.models import get_model
+from repro.epi.spec import CompartmentalModel, EpiModelConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,25 +39,35 @@ class CountryData:
     a0: float
     r0: float
     d0: float
-    observed: np.ndarray  # [3, T] float32 — (A, R, D) per day
+    observed: np.ndarray  # [n_observed, T] float32 — per-day observed channels
     #: tolerance the paper used for this dataset (Table 8), where applicable
     paper_tolerance: float | None = None
     #: generating parameters if synthetic, else None
     true_theta: Tuple[float, ...] | None = None
     synthetic: bool = True
+    #: registry name of the model whose observed channels the rows match
+    model: str = "siard"
+    #: the observed channel names themselves — carried on the dataset so
+    #: compatibility never needs a registry lookup (datasets may come from
+    #: unregistered or since-replaced specs)
+    observed_channels: Tuple[str, ...] = ("A", "R", "D")
 
     @property
     def num_days(self) -> int:
         return int(self.observed.shape[1])
 
-    def model_config(self, num_days: int | None = None) -> epi_model.EpiModelConfig:
-        return epi_model.EpiModelConfig(
+    def model_config(self, num_days: int | None = None) -> EpiModelConfig:
+        return EpiModelConfig(
             population=self.population,
             num_days=int(num_days or self.num_days),
             a0=self.a0,
             r0=self.r0,
             d0=self.d0,
         )
+
+    def compatible_with(self, spec: CompartmentalModel) -> bool:
+        """A spec can fit this dataset iff its observed channels line up."""
+        return spec.observed == self.observed_channels
 
 
 def synthetic_dataset(
@@ -66,13 +80,20 @@ def synthetic_dataset(
     seed: int = 0,
     name: str = "synthetic",
     paper_tolerance: float | None = None,
+    model: Union[str, CompartmentalModel] = "siard",
 ) -> CountryData:
     """Generate a ground-truth dataset by simulating with known parameters."""
-    cfg = epi_model.EpiModelConfig(
+    spec = get_model(model)
+    cfg = EpiModelConfig(
         population=population, num_days=num_days, a0=a0, r0=r0, d0=d0
     )
-    th = jnp.asarray([theta], jnp.float32)
-    obs = epi_model.simulate_observed(th, jax.random.PRNGKey(seed), cfg)[0]
+    th = np.asarray([theta], np.float32)
+    if th.shape[1] != spec.n_params:
+        raise ValueError(
+            f"theta has {th.shape[1]} entries; model {spec.name!r} "
+            f"expects {spec.n_params}"
+        )
+    obs = engine.simulate_observed(spec, th, jax.random.PRNGKey(seed), cfg)[0]
     return CountryData(
         name=name,
         population=population,
@@ -83,6 +104,8 @@ def synthetic_dataset(
         paper_tolerance=paper_tolerance,
         true_theta=tuple(float(x) for x in theta),
         synthetic=True,
+        model=spec.name,
+        observed_channels=spec.observed,
     )
 
 
@@ -101,47 +124,77 @@ _COUNTRY_META = {
     "usa": (328.2e6, 104.0, 7.0, 6.0, 2e5, 3),
 }
 
-_CACHE: Dict[str, CountryData] = {}
+#: generating parameters for the per-model synthetic_small problem. SIARD
+#: keeps its historical values so existing tolerances/baselines stay valid;
+#: other models use their spec's default_theta.
+_SYNTH_SMALL_THETA = {"siard": (0.4, 30.0, 0.8, 0.05, 0.3, 0.01, 0.5, 1.0)}
+
+_CACHE: Dict[tuple, CountryData] = {}
 
 
 def list_datasets() -> Tuple[str, ...]:
     return tuple(sorted(_COUNTRY_META)) + ("synthetic_small",)
 
 
-def get_dataset(name: str, num_days: int = 49) -> CountryData:
+def get_dataset(
+    name: str,
+    num_days: int = 49,
+    model: Union[str, CompartmentalModel] = "siard",
+) -> CountryData:
     """Fetch a bundled dataset by name ('italy' | 'new_zealand' | 'usa' |
-    'synthetic_small')."""
-    key = f"{name}:{num_days}"
+    'synthetic_small').
+
+    `model` selects which registry spec generates (and is fitted against)
+    the series. The bundled country series are SIARD-generated; they can be
+    requested for any model with matching observed channels (e.g. seiard).
+    """
+    spec = get_model(model)
+    # key on the spec object itself (hashable by design), not its name: two
+    # different unregistered specs sharing a name must not alias cached data
+    key = (name, num_days, spec)
     if key in _CACHE:
         return _CACHE[key]
     if name == "synthetic_small":
         # A tiny, fast-converging problem for tests / quickstart: small
         # population keeps distances small so moderate tolerances accept.
         ds = synthetic_dataset(
-            theta=(0.4, 30.0, 0.8, 0.05, 0.3, 0.01, 0.5, 1.0),
+            theta=_SYNTH_SMALL_THETA.get(spec.name, spec.default_theta),
             population=1e6,
             num_days=num_days,
             a0=100.0,
             seed=7,
             name="synthetic_small",
             paper_tolerance=None,
+            model=spec,
         )
     elif name in _COUNTRY_META:
-        population, a0, r0, d0, tol, seed = _COUNTRY_META[name]
-        ds = synthetic_dataset(
-            theta=_TABLE8_THETA[name],
-            population=population,
-            num_days=num_days,
-            a0=a0,
-            r0=r0,
-            d0=d0,
-            seed=seed,
-            name=name,
-            paper_tolerance=tol,
-        )
-        # demo series: generated from the paper's posterior means, standing in
-        # for the (offline) JHU feed.
-        ds = dataclasses.replace(ds, synthetic=True)
+        if spec.name != "siard":
+            # the series stays SIARD-generated; re-tag the cached siard entry
+            # (no re-simulation) iff the requested model observes the same
+            # channels and can therefore fit it
+            base = get_dataset(name, num_days=num_days, model="siard")
+            if not base.compatible_with(spec):
+                raise ValueError(
+                    f"dataset {name!r} holds (A, R, D) series; model "
+                    f"{spec.name!r} observes {spec.observed}"
+                )
+            ds = dataclasses.replace(base, model=spec.name, true_theta=None)
+        else:
+            population, a0, r0, d0, tol, seed = _COUNTRY_META[name]
+            # demo series: generated from the paper's posterior means,
+            # standing in for the (offline) JHU feed.
+            ds = synthetic_dataset(
+                theta=_TABLE8_THETA[name],
+                population=population,
+                num_days=num_days,
+                a0=a0,
+                r0=r0,
+                d0=d0,
+                seed=seed,
+                name=name,
+                paper_tolerance=tol,
+                model="siard",
+            )
     else:
         raise KeyError(f"unknown dataset {name!r}; available: {list_datasets()}")
     _CACHE[key] = ds

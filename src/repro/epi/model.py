@@ -1,21 +1,11 @@
 """The stochastic COVID-19 compartmental model of the paper (§2.1).
 
-Six sub-populations X = [S, I, A, R, D, Ru]:
-  S  — Susceptible
-  I  — undocumented Infected                (latent)
-  A  — Active confirmed cases              (observed)
-  R  — confirmed Recoveries                (observed)
-  D  — confirmed fatalities                (observed)
-  Ru — unconfirmed Removed                 (latent)
-
-Eight parameters theta = [alpha0, alpha, n, beta, gamma, delta, eta, kappa]
-with the paper's uniform prior U(0, [1, 100, 2, 1, 1, 1, 1, 2])  (eq. 2).
-
-Dynamics (tau-leaping, one day per step; paper steps 2-4):
-  g  = alpha0 + alpha / (1 + (A + R + D)^n)                       (eq. 4)
-  h  = (g*S*I/P,  gamma*I,  beta*A,  delta*A,  beta*eta*I)        (eq. 5)
-  n_i = floor(Normal(mean=h_i, std=sqrt(h_i)))   -- Gaussian tau-leap approx
-  transitions applied in order  S->I, I->A, A->R, A->D, I->Ru.
+This module is the backwards-compatible facade for the paper's 6-compartment
+SIARD model. Since the stoichiometry-driven refactor the actual spec lives in
+`repro.epi.models.siard` and the dynamics in the generic tau-leap engine
+(`repro.epi.engine`); every function here simply binds that engine to the
+paper spec. Equivalence with the original hand-unrolled implementation is
+bit-for-bit (pinned by tests/test_model_registry.py).
 
 Numerical notes (recorded in DESIGN.md §5):
   * The paper says "variance sqrt(h)"; a Poisson has variance h (std sqrt(h)).
@@ -26,165 +16,64 @@ Numerical notes (recorded in DESIGN.md §5):
     table shows `Clamp` compute sets, confirming the original does this too.
   * Everything is float32, as in all the paper's experiments.
 
-This module is the *paper-faithful reference path* (pure jax.numpy +
+This is the *paper-faithful reference path* (pure jax.numpy +
 jax.random.normal, lax.scan over days). The performance path is the fused
-Pallas kernel in `repro.kernels.abc_sim` (same math, in-kernel RNG).
+Pallas kernel in `repro.kernels.abc_sim` (same math, in-kernel RNG), which
+consumes the same spec.
 """
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Tuple
 
 import jax
-import jax.numpy as jnp
 
-N_PARAMS = 8
-N_STATE = 6
-N_TRANSITIONS = 5
-N_OBSERVED = 3  # (A, R, D) — indices 2, 3, 4 of the state vector
+from repro.epi import engine
+from repro.epi.models.siard import MODEL as PAPER_MODEL
+from repro.epi.models.siard import infection_rate  # noqa: F401  (re-export)
+from repro.epi.spec import EpiModelConfig  # noqa: F401  (re-export)
 
-PARAM_NAMES = ("alpha0", "alpha", "n", "beta", "gamma", "delta", "eta", "kappa")
-STATE_NAMES = ("S", "I", "A", "R", "D", "Ru")
+N_PARAMS = PAPER_MODEL.n_params
+N_STATE = PAPER_MODEL.n_state
+N_TRANSITIONS = PAPER_MODEL.n_transitions
+N_OBSERVED = PAPER_MODEL.n_observed  # (A, R, D) — indices 2, 3, 4
+
+PARAM_NAMES = PAPER_MODEL.param_names
+STATE_NAMES = PAPER_MODEL.compartments
 
 #: Uniform-prior upper bounds, eq. (2) of the paper.
-PRIOR_HIGHS = (1.0, 100.0, 2.0, 1.0, 1.0, 1.0, 1.0, 2.0)
+PRIOR_HIGHS = PAPER_MODEL.prior_highs
 
-OBSERVED_IDX = (2, 3, 4)
-
-
-@dataclasses.dataclass(frozen=True)
-class EpiModelConfig:
-    """Static simulation configuration."""
-
-    population: float  # P — total population at day 0
-    num_days: int  # T — simulation horizon (paper uses 49 for fitting)
-    # initial observed values (A0, R0, D0) at day 0
-    a0: float = 100.0
-    r0: float = 0.0
-    d0: float = 0.0
-
-
-def infection_rate(theta: jax.Array, ard_sum: jax.Array) -> jax.Array:
-    """Total infection rate g_(A,R,D) = alpha0 + alpha / (1 + (A+R+D)^n), eq. (4).
-
-    theta: [..., 8]; ard_sum: [...] — broadcastable batch shapes.
-    """
-    alpha0, alpha, n = theta[..., 0], theta[..., 1], theta[..., 2]
-    # (A+R+D) >= 0 always; power of a non-negative base is safe.
-    return alpha0 + alpha / (1.0 + jnp.power(jnp.maximum(ard_sum, 0.0), n))
+OBSERVED_IDX = PAPER_MODEL.observed_idx
 
 
 def hazards(state: jax.Array, theta: jax.Array, population: float) -> jax.Array:
     """Hazard vector h, eq. (5). state: [..., 6], theta: [..., 8] -> [..., 5]."""
-    s, i, a = state[..., 0], state[..., 1], state[..., 2]
-    ard = state[..., 2] + state[..., 3] + state[..., 4]
-    g = infection_rate(theta, ard)
-    beta, gamma, delta, eta = theta[..., 3], theta[..., 4], theta[..., 5], theta[..., 6]
-    h = jnp.stack(
-        [
-            g * s * i / population,  # S -> I
-            gamma * i,  # I -> A
-            beta * a,  # A -> R
-            delta * a,  # A -> D
-            beta * eta * i,  # I -> Ru
-        ],
-        axis=-1,
-    )
-    # Hazards are rates of counting processes; they cannot be negative.
-    return jnp.maximum(h, 0.0)
+    return engine.hazards(PAPER_MODEL, state, theta, population)
 
 
 def initial_state(theta: jax.Array, cfg: EpiModelConfig) -> jax.Array:
-    """Paper step 1: Ru = 0, I0 = kappa * A0, S = P - (A0 + R0 + D0 + I0).
-
-    theta: [..., 8] -> state [..., 6].
-    """
-    kappa = theta[..., 7]
-    a0 = jnp.asarray(cfg.a0, jnp.float32)
-    r0 = jnp.asarray(cfg.r0, jnp.float32)
-    d0 = jnp.asarray(cfg.d0, jnp.float32)
-    i0 = kappa * a0
-    s0 = cfg.population - (a0 + r0 + d0 + i0)
-    zeros = jnp.zeros_like(kappa)
-    return jnp.stack(
-        [s0, i0, zeros + a0, zeros + r0, zeros + d0, zeros], axis=-1
-    ).astype(jnp.float32)
-
-
-def _apply_transitions(state: jax.Array, n_raw: jax.Array) -> jax.Array:
-    """Clamp raw transition counts to available sources and apply them.
-
-    state: [..., 6], n_raw: [..., 5] (already floor(Normal(h, sqrt h))).
-    Returns the next-day state, guaranteed non-negative, conserving total mass.
-    """
-    s, i, a, r, d, ru = (state[..., k] for k in range(N_STATE))
-    n1 = jnp.clip(n_raw[..., 0], 0.0, s)  # S -> I
-    n2 = jnp.clip(n_raw[..., 1], 0.0, i)  # I -> A
-    n5 = jnp.clip(n_raw[..., 4], 0.0, i - n2)  # I -> Ru (I drained by n2 first)
-    n3 = jnp.clip(n_raw[..., 2], 0.0, a)  # A -> R
-    n4 = jnp.clip(n_raw[..., 3], 0.0, a - n3)  # A -> D (A drained by n3 first)
-    return jnp.stack(
-        [
-            s - n1,
-            i + n1 - n2 - n5,
-            a + n2 - n3 - n4,
-            r + n3,
-            d + n4,
-            ru + n5,
-        ],
-        axis=-1,
-    )
+    """Paper step 1: Ru = 0, I0 = kappa * A0, S = P - (A0 + R0 + D0 + I0)."""
+    return engine.initial_state(PAPER_MODEL, theta, cfg)
 
 
 def tau_leap_step(
     state: jax.Array, theta: jax.Array, noise: jax.Array, population: float
 ) -> jax.Array:
-    """One day of tau-leaping given standard-normal noise [..., 5].
-
-    n_i = floor(h_i + sqrt(h_i) * z_i), clamped to sources (paper steps 2-4).
-    """
-    h = hazards(state, theta, population)
-    n_raw = jnp.floor(h + jnp.sqrt(h) * noise)
-    return _apply_transitions(state, n_raw)
+    """One day of tau-leaping given standard-normal noise [..., 5]."""
+    return engine.tau_leap_step(PAPER_MODEL, state, theta, noise, population)
 
 
-def simulate(
-    theta: jax.Array, key: jax.Array, cfg: EpiModelConfig
-) -> jax.Array:
-    """Simulate the full state trajectory.
-
-    theta: [B, 8]; returns trajectory [B, T, 6] (state *after* each day's update).
-    Noise is drawn with jax.random (threefry) — the paper-faithful path.
-    """
-    theta = jnp.asarray(theta, jnp.float32)
-    batch_shape = theta.shape[:-1]
-    state0 = initial_state(theta, cfg)
-
-    def step(state, day):
-        # Per-day fold_in keeps this bit-identical with the fused low-memory
-        # path (simulate_observed_lowmem) for the same key.
-        z = jax.random.normal(
-            jax.random.fold_in(key, day), batch_shape + (N_TRANSITIONS,), jnp.float32
-        )
-        nxt = tau_leap_step(state, theta, z, cfg.population)
-        return nxt, nxt
-
-    _, traj = jax.lax.scan(step, state0, jnp.arange(cfg.num_days))
-    # traj: [T, B, 6] -> [B, T, 6]
-    return jnp.moveaxis(traj, 0, -2)
+def simulate(theta: jax.Array, key: jax.Array, cfg: EpiModelConfig) -> jax.Array:
+    """Simulate the full state trajectory. theta: [B, 8] -> [B, T, 6]."""
+    return engine.simulate(PAPER_MODEL, theta, key, cfg)
 
 
 def simulate_observed(
     theta: jax.Array, key: jax.Array, cfg: EpiModelConfig
 ) -> jax.Array:
-    """Simulate only the observed channels. Returns [B, 3, T] = (A, R, D) per day.
-
-    Matches the paper's D_s layout [batch, 3, num_days].
-    """
-    traj = simulate(theta, key, cfg)  # [B, T, 6]
-    obs = traj[..., OBSERVED_IDX]  # [B, T, 3]
-    return jnp.swapaxes(obs, -1, -2)  # [B, 3, T]
+    """Simulate only the observed channels. Returns [B, 3, T] = (A, R, D)."""
+    return engine.simulate_observed(PAPER_MODEL, theta, key, cfg)
 
 
 def simulate_observed_lowmem(
@@ -193,34 +82,5 @@ def simulate_observed_lowmem(
     cfg: EpiModelConfig,
     observed: jax.Array,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Fused simulate + running squared-distance accumulation (no [B,3,T] output).
-
-    The beyond-paper memory optimization (DESIGN.md §2): never materialize the
-    trajectory; accumulate sum-of-squares against `observed` [3, T] per day.
-    Returns (distance [B], final_state [B, 6]).
-
-    This is the pure-XLA analogue of the Pallas kernel; the kernel additionally
-    keeps the whole loop in VMEM.
-    """
-    theta = jnp.asarray(theta, jnp.float32)
-    batch_shape = theta.shape[:-1]
-    state0 = initial_state(theta, cfg)
-    # derive from state0 so the carry inherits its varying mesh axes when this
-    # runs inside shard_map (scan carries must have uniform vma types)
-    acc0 = state0[..., 0] * 0.0
-    obs_by_day = jnp.swapaxes(jnp.asarray(observed, jnp.float32), 0, 1)  # [T, 3]
-
-    def step(carry, inp):
-        state, acc = carry
-        day, obs_t = inp
-        z = jax.random.normal(
-            jax.random.fold_in(key, day), batch_shape + (N_TRANSITIONS,), jnp.float32
-        )
-        nxt = tau_leap_step(state, theta, z, cfg.population)
-        diff = nxt[..., OBSERVED_IDX] - obs_t
-        acc = acc + jnp.sum(diff * diff, axis=-1)
-        return (nxt, acc), None
-
-    days = jnp.arange(cfg.num_days)
-    (state_f, acc_f), _ = jax.lax.scan(step, (state0, acc0), (days, obs_by_day))
-    return jnp.sqrt(acc_f), state_f
+    """Fused simulate + running squared-distance accumulation (no [B,3,T])."""
+    return engine.simulate_observed_lowmem(PAPER_MODEL, theta, key, cfg, observed)

@@ -1,0 +1,117 @@
+"""Registry of stochastic compartmental models.
+
+Every model is a `CompartmentalModel` spec (see `repro.epi.spec`); the same
+spec drives the reference XLA engine, the fused low-memory path and the
+Pallas kernel. Register a new model with:
+
+    from repro.epi.models import register
+    register(CompartmentalModel(name="my_model", ...))
+
+or simply add a module here that calls `register` at import time. The paper's
+SIARD model is the default everywhere (`DEFAULT_MODEL`), keeping the original
+reproduction bit-for-bit intact.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple, Union
+
+from repro.epi.spec import CompartmentalModel
+
+_REGISTRY: Dict[str, CompartmentalModel] = {}
+
+
+def _code_fingerprint(code) -> tuple:
+    """Bytecode + constants of a code object, recursing into nested code
+    objects (whose default repr embeds memory addresses and would make the
+    fingerprint unstable across module reloads)."""
+    import types
+
+    consts = tuple(
+        _code_fingerprint(c) if isinstance(c, types.CodeType) else repr(c)
+        for c in code.co_consts
+    )
+    return (code.co_code, consts)
+
+
+def _fn_key(fn) -> tuple:
+    """Identity of a spec function for idempotency checks: source location
+    plus compiled bytecode/constants. A module-reloaded function (new object,
+    same source — including nested helpers/lambdas) matches itself; a
+    different function body — even a lambda defined at the same spot — does
+    not. Closure cells compare by value repr; objects whose repr embeds an
+    address err on the conservative side (re-registration raises rather than
+    silently replacing the dynamics)."""
+    code = getattr(fn, "__code__", None)
+    body = _code_fingerprint(code) if code is not None else repr(fn)
+    cells = tuple(repr(c.cell_contents) for c in (getattr(fn, "__closure__", None) or ()))
+    return (
+        getattr(fn, "__module__", ""),
+        getattr(fn, "__qualname__", repr(fn)),
+        body,
+        cells,
+    )
+
+
+def _declarative_key(model: CompartmentalModel) -> tuple:
+    """Identity of a spec for idempotency checks. Function-valued fields are
+    compared by `_fn_key` rather than object identity, so a module-reloaded
+    spec still matches itself, while a same-named spec with *different*
+    dynamics — even with identical shape tuples — is rejected instead of
+    silently replacing the registered model."""
+    return (
+        model.name,
+        model.compartments,
+        model.param_names,
+        model.prior_highs,
+        model.prior_lows,
+        model.stoichiometry,
+        model.observed,
+        model.default_theta,
+        _fn_key(model.hazard_rows),
+        _fn_key(model.initial_rows),
+    )
+
+
+def register(model: CompartmentalModel) -> CompartmentalModel:
+    """Add a model spec to the registry (idempotent for declaratively
+    identical specs — a reloaded module re-registering the same model is
+    fine and replaces the entry)."""
+    existing = _REGISTRY.get(model.name)
+    if existing is not None and _declarative_key(existing) != _declarative_key(model):
+        raise ValueError(f"model {model.name!r} already registered with a different spec")
+    _REGISTRY[model.name] = model
+    return model
+
+
+def get_model(model: Union[str, CompartmentalModel]) -> CompartmentalModel:
+    """Resolve a registry name (or pass a spec through)."""
+    if isinstance(model, CompartmentalModel):
+        return model
+    try:
+        return _REGISTRY[model]
+    except KeyError:
+        raise KeyError(
+            f"unknown model {model!r}; registered: {list_models()}"
+        ) from None
+
+
+def list_models() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# Import order fixes registry contents; siard first (the paper default).
+from repro.epi.models import siard as _siard  # noqa: E402
+from repro.epi.models import sir as _sir  # noqa: E402
+from repro.epi.models import seir as _seir  # noqa: E402
+from repro.epi.models import seiard as _seiard  # noqa: E402
+
+DEFAULT_MODEL = _siard.MODEL
+
+__all__ = [
+    "CompartmentalModel",
+    "DEFAULT_MODEL",
+    "get_model",
+    "list_models",
+    "register",
+]

@@ -1,0 +1,59 @@
+"""Stochastic SEIR model as a registry spec.
+
+Four compartments [S, E, I, R] and four parameters [beta, sigma, gamma, kappa]:
+
+  S -> E   beta * S * I / P      (exposure)
+  E -> I   sigma * E             (incubation, 1/sigma mean latent period)
+  I -> R   gamma * I             (removal)
+
+Seeding: I0 = A0 (the dataset's day-0 case count), E0 = kappa * A0 (latent
+pool scales with observed seed), R0 from the dataset, S = P - E0 - I0 - R0.
+Observed channels are (I, R) -> datasets carry [2, T] series.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.epi.models import register
+from repro.epi.spec import CompartmentalModel
+
+
+def _hazard_rows(sc, pc, population):
+    s, e, i, _r = sc
+    beta, sigma, gamma, _kappa = pc
+    return (
+        beta * s * i / population,  # S -> E
+        sigma * e,  # E -> I
+        gamma * i,  # I -> R
+    )
+
+
+def _initial_rows(pc, population, a0, r0, _d0):
+    kappa = pc[3]
+    e0 = kappa * a0
+    zeros = jnp.zeros_like(kappa)
+    i0 = zeros + a0
+    s0 = population - (e0 + a0 + r0)
+    return (s0, e0, i0, zeros + r0)
+
+
+MODEL = register(
+    CompartmentalModel(
+        name="seir",
+        compartments=("S", "E", "I", "R"),
+        param_names=("beta", "sigma", "gamma", "kappa"),
+        prior_highs=(2.0, 1.0, 1.0, 2.0),
+        stoichiometry=(
+            # S   E   I   R
+            (-1, +1, 0, 0),  # S -> E
+            (0, -1, +1, 0),  # E -> I
+            (0, 0, -1, +1),  # I -> R
+        ),
+        observed=("I", "R"),
+        hazard_rows=_hazard_rows,
+        initial_rows=_initial_rows,
+        default_theta=(0.6, 0.3, 0.2, 1.0),
+        doc="SEIR with exposed/latent compartment (tau-leaped).",
+    )
+)

@@ -1,0 +1,55 @@
+"""Classic stochastic SIR model as a registry spec.
+
+Three compartments [S, I, R] and three parameters [beta, gamma, kappa]:
+
+  S -> I   beta * S * I / P      (infection)
+  I -> R   gamma * I             (recovery/removal)
+
+The initial-state rule mirrors the paper's seeding convention: I0 = kappa*A0
+(A0 is the dataset's day-0 case count), R0 from the dataset, S = P - I0 - R0.
+Observed channels are (I, R), so datasets for this model carry [2, T] series.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.epi.models import register
+from repro.epi.spec import CompartmentalModel
+
+
+def _hazard_rows(sc, pc, population):
+    s, i, _r = sc
+    beta, gamma, _kappa = pc
+    return (
+        beta * s * i / population,  # S -> I
+        gamma * i,  # I -> R
+    )
+
+
+def _initial_rows(pc, population, a0, r0, _d0):
+    kappa = pc[2]
+    i0 = kappa * a0
+    s0 = population - (i0 + r0)
+    zeros = jnp.zeros_like(kappa)
+    return (s0, i0, zeros + r0)
+
+
+MODEL = register(
+    CompartmentalModel(
+        name="sir",
+        compartments=("S", "I", "R"),
+        param_names=("beta", "gamma", "kappa"),
+        prior_highs=(2.0, 1.0, 2.0),
+        stoichiometry=(
+            # S   I   R
+            (-1, +1, 0),  # S -> I
+            (0, -1, +1),  # I -> R
+        ),
+        observed=("I", "R"),
+        hazard_rows=_hazard_rows,
+        initial_rows=_initial_rows,
+        default_theta=(0.5, 0.2, 1.0),
+        doc="Kermack-McKendrick stochastic SIR (tau-leaped).",
+    )
+)

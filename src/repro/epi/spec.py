@@ -1,0 +1,165 @@
+"""Declarative specification of a stochastic compartmental model.
+
+A `CompartmentalModel` is the single source of truth every layer consumes:
+
+  * the reference tau-leap engine (`repro.epi.engine`) — pure jax.numpy,
+  * the fused Pallas kernel (`repro.kernels.abc_sim`) — the spec's hazards and
+    stoichiometry are inlined into the kernel body at trace time,
+  * the ABC/SMC drivers (`repro.core.abc`, `repro.core.smc`) — prior bounds,
+    parameter names and output shapes all derive from the spec,
+  * datasets (`repro.epi.data`) — synthetic ground truth is simulated from
+    `default_theta` with the spec's own dynamics.
+
+The spec is declarative: compartments and parameters are *names*, transitions
+are a stoichiometry matrix plus a hazard function, and the initial state is a
+rule mapping parameters to compartment counts. Dynamics follow the paper's
+tau-leap scheme (§2.1, steps 2-4) generically:
+
+    h   = hazard_rows(state, theta)              one rate per transition
+    n_k = floor(Normal(h_k, sqrt(h_k)))          Gaussian tau-leap counts
+    n_k = clip(n_k, 0, remaining[source_k])      sequential source draining
+    x'  = x + stoichiometry^T @ n                apply transitions
+
+Sequential source draining means transitions are clamped in declaration
+order, each one reducing the budget of its source compartment, so no
+compartment ever goes negative and total mass is conserved exactly — the
+same clamping contract the paper's IPU implementation applies (its cycle
+table shows `Clamp` compute sets).
+
+Layout contract for `hazard_rows` / `initial_rows`: they receive the state
+and parameters as *sequences of channel arrays* (one array per compartment /
+parameter) rather than stacked tensors. The same function body therefore
+runs unchanged in the reference engine (channels are slices of a [..., n]
+tensor) and inside the Pallas kernel (channels are (1, TILE) VREG rows).
+
+Known limitation: the seeding interface is the paper's three scalars
+(a0, r0, d0) — `initial_rows` receives exactly those, and the kernel's
+constant layout reserves the same three slots. Models are free to
+reinterpret them (SIR/SEIR treat a0 as a generic day-0 case count), but a
+model needing MORE day-0 inputs requires widening `InitialFn`, the fconsts
+layout in kernels/abc_sim.py and `CountryData` together.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence, Tuple
+
+Rows = Sequence  # sequence of same-shape arrays, one per channel
+
+#: (state_rows, param_rows, population) -> one rate array per transition
+HazardFn = Callable[[Rows, Rows, object], Tuple]
+#: (param_rows, population, a0, r0, d0) -> one array per compartment
+InitialFn = Callable[[Rows, object, object, object, object], Tuple]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompartmentalModel:
+    """Declarative spec of a stochastic compartmental epidemic model.
+
+    Frozen and hashable (fields are tuples / callables), so a model can be a
+    `static_argnames` entry of a jitted function — the Pallas kernel builder
+    relies on this to specialize the kernel body per model.
+    """
+
+    name: str
+    compartments: Tuple[str, ...]
+    param_names: Tuple[str, ...]
+    #: uniform-box prior upper bounds, one per parameter (lows default to 0)
+    prior_highs: Tuple[float, ...]
+    #: stoichiometry matrix [n_transitions][n_state]: each row moves one unit
+    #: of mass out of exactly one source (-1) into one destination (+1)
+    stoichiometry: Tuple[Tuple[int, ...], ...]
+    #: names of observed compartments, compared against data [n_observed, T]
+    observed: Tuple[str, ...]
+    hazard_rows: HazardFn
+    initial_rows: InitialFn
+    #: plausible generating parameters — used for synthetic ground-truth data
+    default_theta: Tuple[float, ...]
+    prior_lows: Tuple[float, ...] | None = None
+    doc: str = ""
+
+    def __post_init__(self):
+        ns, np_, nt = len(self.compartments), len(self.param_names), len(self.stoichiometry)
+        if len(self.prior_highs) != np_:
+            raise ValueError(f"{self.name}: prior_highs must have {np_} entries")
+        if self.prior_lows is not None and len(self.prior_lows) != np_:
+            raise ValueError(f"{self.name}: prior_lows must have {np_} entries")
+        if len(self.default_theta) != np_:
+            raise ValueError(f"{self.name}: default_theta must have {np_} entries")
+        for k, row in enumerate(self.stoichiometry):
+            if len(row) != ns:
+                raise ValueError(f"{self.name}: stoichiometry row {k} has wrong width")
+            if sum(row) != 0:
+                raise ValueError(
+                    f"{self.name}: transition {k} does not conserve mass: {row}"
+                )
+            if sorted(row) != sorted((-1, 1) + (0,) * (ns - 2)):
+                raise ValueError(
+                    f"{self.name}: transition {k} must move one unit from one "
+                    f"source to one destination, got {row}"
+                )
+        for name in self.observed:
+            if name not in self.compartments:
+                raise ValueError(f"{self.name}: observed {name!r} is not a compartment")
+        if nt > 8:
+            # the counter-based RNG reserves 8 counter slots per day
+            # (kernels/rng.day_transition_ctr); widen the layout to go beyond
+            raise ValueError(f"{self.name}: at most 8 transitions supported, got {nt}")
+
+    # ------------------------------------------------------------ dimensions
+    @property
+    def n_state(self) -> int:
+        return len(self.compartments)
+
+    @property
+    def n_params(self) -> int:
+        return len(self.param_names)
+
+    @property
+    def n_transitions(self) -> int:
+        return len(self.stoichiometry)
+
+    @property
+    def n_observed(self) -> int:
+        return len(self.observed)
+
+    @property
+    def observed_idx(self) -> Tuple[int, ...]:
+        return tuple(self.compartments.index(c) for c in self.observed)
+
+    @property
+    def transition_sources(self) -> Tuple[int, ...]:
+        """Source compartment index of each transition (the -1 entry)."""
+        return tuple(row.index(-1) for row in self.stoichiometry)
+
+    # ------------------------------------------------------------------ misc
+    def prior(self):
+        """The model's uniform box prior U(lows, highs)."""
+        from repro.core.priors import UniformBoxPrior
+
+        return UniformBoxPrior(highs=self.prior_highs, lows=self.prior_lows)
+
+    def describe(self) -> str:
+        lines = [
+            f"model {self.name}: {self.n_state} compartments "
+            f"({', '.join(self.compartments)}), {self.n_params} params, "
+            f"{self.n_transitions} transitions, observed ({', '.join(self.observed)})"
+        ]
+        for row, src in zip(self.stoichiometry, self.transition_sources):
+            dst = row.index(1)
+            lines.append(f"  {self.compartments[src]} -> {self.compartments[dst]}")
+        return "\n".join(lines)
+
+
+@dataclasses.dataclass(frozen=True)
+class EpiModelConfig:
+    """Static simulation configuration (shared across all registry models)."""
+
+    population: float  # P — total population at day 0
+    num_days: int  # T — simulation horizon (paper uses 49 for fitting)
+    # initial observed values (A0, R0, D0) at day 0; the spec's initial-state
+    # rule decides how they seed the compartments
+    a0: float = 100.0
+    r0: float = 0.0
+    d0: float = 0.0

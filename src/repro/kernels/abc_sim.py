@@ -8,22 +8,31 @@ horizon. One `pallas_call` grid cell owns a tile of `TB` samples and:
     for day in 0..T-1:                              (fori_loop, on-chip)
         z      <- counter-based RNG (in-kernel)     (never touches HBM)
         h      <- hazards(state, theta)
-        n      <- clamp(floor(h + sqrt(h) * z))
-        state  <- apply_transitions(state, n)
-        acc    += ||state[ARD] - obs[:, day]||^2    (running distance)
+        n      <- clamp(floor(h + sqrt(h) * z))     (sequential source drain)
+        state  <- state + stoichiometry^T @ n
+        acc    += ||state[obs] - obs[:, day]||^2    (running distance)
     dist   <- sqrt(acc)                             (single [TB] HBM write)
 
-HBM traffic per sample: 8 floats of theta in + 1 float distance out = 36 B,
-versus the naive path's >= (T*5 noise + T*3 trajectory + T*6 state round
-trips) * 4 B ~ 2.3 KB/sample at T=49. Arithmetic intensity rises ~60x, which
-is what moves the workload from the memory roofline to the compute roofline
-(EXPERIMENTS.md §Perf, ABC rows).
+Since the stoichiometry-driven refactor the kernel body is generic over any
+`CompartmentalModel` spec (repro.epi.spec): the spec's hazard rows, initial
+rows, clamp order and stoichiometry are *inlined at trace time* — the Python
+loops over transitions/compartments below unroll into straight-line vector
+code, exactly like the previous hand-unrolled SIARD body. The spec is a
+static (hashable) argument, so each model compiles its own specialized
+kernel with VMEM tiles sized from its `n_state` / `n_params`.
+
+HBM traffic per sample: n_params floats of theta in + 1 float distance out
+(36 B for the paper model), versus the naive path's >= (T*n_trans noise +
+T*n_obs trajectory + T*n_state state round trips) * 4 B ~ 2.3 KB/sample at
+T=49. Arithmetic intensity rises ~60x, which is what moves the workload from
+the memory roofline to the compute roofline (EXPERIMENTS.md §Perf, ABC rows).
 
 Data layout: samples ride the 128-lane minor dimension; theta arrives
-transposed [8, B] so each parameter is one (1, TB) VREG row; the 6 state
-channels are six (1, TB) rows carried through the day loop as values (VREGs),
-not refs. `TB` defaults to 1024 lanes -> peak VMEM per cell ~ 200 KB, far
-under the ~16 MB/core budget, leaving room for multiple concurrent grid cells.
+transposed [n_params_pad, B] (sublane-padded to a multiple of 8) so each
+parameter is one (1, TB) VREG row; the n_state channels are (1, TB) rows
+carried through the day loop as values (VREGs), not refs. `TB` defaults to
+1024 lanes -> peak VMEM per cell ~ (n_state + n_params + n_trans) * 4 KB,
+far under the ~16 MB/core budget, leaving room for concurrent grid cells.
 
 The kernel returns per-sample distances; accept/compaction stays in XLA
 (lax.top_k / chunk flags) because it is O(B) cheap and the paper's two
@@ -33,24 +42,41 @@ host-return strategies live above the kernel (core/abc.py).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.epi import engine
+from repro.epi.spec import CompartmentalModel
 from repro.kernels import rng as krng
 
 # fconsts layout (f32): [population, a0, r0, d0, num_days, 0...]
 # iconsts layout (i32): [seed, 0...]
 _CONST_LANES = 128
+#: sublane granularity for f32 tiles — theta/obs rows are padded to this
+_SUBLANES = 8
 
 
-def _kernel(theta_ref, obs_ref, fconst_ref, iconst_ref, dist_ref, *, num_days: int, tile: int):
-    """Pallas kernel body. Shapes:
-    theta_ref  (8, TB)   — params x samples (transposed)
-    obs_ref    (8, Tp)   — rows 0..2 = observed A, R, D per day (padded)
+def sublane_pad(n: int) -> int:
+    """Round a row count up to the f32 sublane tile granularity (min 8)."""
+    return max(_SUBLANES, -(-n // _SUBLANES) * _SUBLANES)
+
+
+def _kernel(
+    theta_ref,
+    obs_ref,
+    fconst_ref,
+    iconst_ref,
+    dist_ref,
+    *,
+    model: CompartmentalModel,
+    num_days: int,
+    tile: int,
+):
+    """Generic Pallas kernel body, specialized per model spec. Shapes:
+    theta_ref  (Pp, TB)  — params x samples (transposed, sublane-padded)
+    obs_ref    (Op, Tp)  — rows 0..n_obs-1 = observed channels per day (padded)
     fconst_ref (1, 128)  — f32 scalars
     iconst_ref (1, 128)  — i32 scalars (seed)
     dist_ref   (1, TB)   — output Euclidean distances
@@ -67,90 +93,64 @@ def _kernel(theta_ref, obs_ref, fconst_ref, iconst_ref, dist_ref, *, num_days: i
     idx = lane + jnp.uint32(tile) * tile_idx.astype(jnp.uint32)
 
     # theta rows, each (1, TB)
-    alpha0 = theta_ref[0:1, :]
-    alpha = theta_ref[1:2, :]
-    n_exp = theta_ref[2:3, :]
-    beta = theta_ref[3:4, :]
-    gamma = theta_ref[4:5, :]
-    delta = theta_ref[5:6, :]
-    eta = theta_ref[6:7, :]
-    kappa = theta_ref[7:8, :]
+    pc = tuple(theta_ref[k : k + 1, :] for k in range(model.n_params))
 
-    # paper step 1: initial state
-    i_pop = kappa * a0
-    s_pop = population - (a0 + r0 + d0 + i_pop)
-    ones = jnp.ones_like(alpha0)
-    a_pop = ones * a0
-    r_pop = ones * r0
-    d_pop = ones * d0
-    ru_pop = jnp.zeros_like(alpha0)
-    acc = jnp.zeros_like(alpha0)
+    # spec step 1: initial state rows + distance accumulator
+    state0 = model.initial_rows(pc, population, a0, r0, d0)
+    acc0 = jnp.zeros_like(state0[0])
+
+    obs_idx = model.observed_idx
+    n_obs_rows = obs_ref.shape[0]
 
     def day_step(day, carry):
-        s, i, a, r, d, ru, acc = carry
-        # paper step 2: hazards (eq. 4-5)
-        ard = a + r + d
-        g = alpha0 + alpha / (1.0 + jnp.power(jnp.maximum(ard, 0.0), n_exp))
-        h1 = jnp.maximum(g * s * i / population, 0.0)  # S -> I
-        h2 = jnp.maximum(gamma * i, 0.0)  # I -> A
-        h3 = jnp.maximum(beta * a, 0.0)  # A -> R
-        h4 = jnp.maximum(delta * a, 0.0)  # A -> D
-        h5 = jnp.maximum(beta * eta * i, 0.0)  # I -> Ru
-
-        # paper step 3: Gaussian tau-leap noise, generated in-register
-        def draw(h, k):
+        sc = list(carry[: model.n_state])
+        acc = carry[model.n_state]
+        # spec step 2: hazards (rates cannot be negative)
+        h = [jnp.maximum(row, 0.0) for row in model.hazard_rows(sc, pc, population)]
+        # spec step 3: Gaussian tau-leap counts, generated in-register
+        raw = []
+        for k in range(model.n_transitions):
             z = krng.normal(seed, idx, krng.day_transition_ctr(day, k))
-            return jnp.floor(h + jnp.sqrt(h) * z)
-
-        n1 = jnp.clip(draw(h1, 0), 0.0, s)
-        n2 = jnp.clip(draw(h2, 1), 0.0, i)
-        n3 = jnp.clip(draw(h3, 2), 0.0, a)
-        n4 = jnp.clip(draw(h4, 3), 0.0, a - n3)
-        n5 = jnp.clip(draw(h5, 4), 0.0, i - n2)
-
-        # paper step 4: apply transitions
-        s = s - n1
-        i = i + n1 - n2 - n5
-        a = a + n2 - n3 - n4
-        r = r + n3
-        d = d + n4
-        ru = ru + n5
+            raw.append(jnp.floor(h[k] + jnp.sqrt(h[k]) * z))
+        # spec step 4: sequential source-draining clamp + stoichiometry —
+        # shared row-level code with the XLA engine (unrolls at trace time)
+        sc = engine.drain_and_apply(model, sc, raw)
 
         # running Euclidean accumulation (beyond-paper fusion, DESIGN.md §2)
-        obs_t = pl.load(obs_ref, (slice(0, 8), pl.dslice(day, 1)))  # (8, 1)
-        da = a - obs_t[0:1]
-        dr = r - obs_t[1:2]
-        dd = d - obs_t[2:3]
-        acc = acc + da * da + dr * dr + dd * dd
-        return (s, i, a, r, d, ru, acc)
+        obs_t = pl.load(obs_ref, (slice(0, n_obs_rows), pl.dslice(day, 1)))
+        for m, j in enumerate(obs_idx):
+            diff = sc[j] - obs_t[m : m + 1]
+            acc = acc + diff * diff
+        return (*sc, acc)
 
-    carry = (s_pop, i_pop, a_pop, r_pop, d_pop, ru_pop, acc)
-    carry = jax.lax.fori_loop(0, num_days, day_step, carry)
-    dist_ref[...] = jnp.sqrt(carry[6])
+    carry = jax.lax.fori_loop(0, num_days, day_step, (*state0, acc0))
+    dist_ref[...] = jnp.sqrt(carry[model.n_state])
 
 
 def abc_sim_distance_kernel(
-    theta_t: jax.Array,  # [8, B] f32 (transposed, B multiple of tile)
-    obs_pad: jax.Array,  # [8, Tp] f32 (rows 0..2 = A,R,D)
+    theta_t: jax.Array,  # [Pp, B] f32 (transposed, sublane-padded, B % tile == 0)
+    obs_pad: jax.Array,  # [Op, Tp] f32 (rows 0..n_obs-1 = observed channels)
     fconsts: jax.Array,  # [1, 128] f32
     iconsts: jax.Array,  # [1, 128] i32
     *,
+    model: CompartmentalModel,
     num_days: int,
     tile: int = 1024,
     interpret: bool = True,
 ) -> jax.Array:
     """Raw pallas_call wrapper; returns distances [1, B]. See ops.py for the
     user-facing API (padding, layout, backend selection)."""
-    n_params, batch = theta_t.shape
-    assert n_params == 8 and batch % tile == 0
-    t_pad = obs_pad.shape[1]
+    p_pad, batch = theta_t.shape
+    assert p_pad == sublane_pad(model.n_params) and batch % tile == 0
+    o_pad, t_pad = obs_pad.shape
+    assert o_pad == sublane_pad(model.n_observed)
     grid = (batch // tile,)
     return pl.pallas_call(
-        functools.partial(_kernel, num_days=num_days, tile=tile),
+        functools.partial(_kernel, model=model, num_days=num_days, tile=tile),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((8, tile), lambda i: (0, i)),  # theta tile
-            pl.BlockSpec((8, t_pad), lambda i: (0, 0)),  # full obs each cell
+            pl.BlockSpec((p_pad, tile), lambda i: (0, i)),  # theta tile
+            pl.BlockSpec((o_pad, t_pad), lambda i: (0, 0)),  # full obs each cell
             pl.BlockSpec((1, _CONST_LANES), lambda i: (0, 0)),
             pl.BlockSpec((1, _CONST_LANES), lambda i: (0, 0)),
         ],

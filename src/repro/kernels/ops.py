@@ -23,13 +23,10 @@ def _auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@functools.partial(
-    jax.jit, static_argnames=("population", "a0", "r0", "d0", "tile", "interpret")
-)
 def abc_sim_distance(
-    theta: jax.Array,  # [B, 8] f32
+    theta: jax.Array,  # [B, n_params] f32
     seed: jax.Array,  # uint32 scalar
-    observed: jax.Array,  # [3, T] f32
+    observed: jax.Array,  # [n_observed, T] f32
     *,
     population: float,
     a0: float,
@@ -37,24 +34,60 @@ def abc_sim_distance(
     d0: float = 0.0,
     tile: int = 1024,
     interpret: bool | None = None,
+    model=None,  # CompartmentalModel spec; defaults to the paper's SIARD
 ) -> jax.Array:
-    """Fused simulate+distance for a batch of parameter samples. Returns [B]."""
+    """Fused simulate+distance for a batch of parameter samples. Returns [B].
+
+    `model` is a static argument of the underlying jitted function: each spec
+    compiles its own specialized kernel with the stoichiometry and hazards
+    inlined (see kernels/abc_sim). Defaults are resolved HERE, outside the
+    jit boundary, so model=None and model=DEFAULT_MODEL share one cache entry.
+    """
+    if model is None:
+        from repro.epi.models import DEFAULT_MODEL as model  # noqa: N811
     if interpret is None:
         interpret = _auto_interpret()
+    return _abc_sim_distance_jit(
+        theta, seed, observed, population=population, a0=a0, r0=r0, d0=d0,
+        tile=tile, interpret=interpret, model=model,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("population", "a0", "r0", "d0", "tile", "interpret", "model"),
+)
+def _abc_sim_distance_jit(
+    theta: jax.Array,
+    seed: jax.Array,
+    observed: jax.Array,
+    *,
+    population: float,
+    a0: float,
+    r0: float,
+    d0: float,
+    tile: int,
+    interpret: bool,
+    model,
+) -> jax.Array:
     theta = jnp.asarray(theta, jnp.float32)
     batch, n_params = theta.shape
-    assert n_params == 8, theta.shape
+    assert n_params == model.n_params, (theta.shape, model.name)
+    assert observed.shape[0] == model.n_observed, (observed.shape, model.name)
     num_days = observed.shape[1]
 
     tile = min(tile, max(128, 1 << (batch - 1).bit_length()))
     pad_b = (-batch) % tile
-    theta_t = jnp.swapaxes(theta, 0, 1)  # [8, B]
-    if pad_b:
-        theta_t = jnp.pad(theta_t, ((0, 0), (0, pad_b)))
+    p_pad = abc_sim.sublane_pad(model.n_params)
+    theta_t = jnp.swapaxes(theta, 0, 1)  # [n_params, B]
+    theta_t = jnp.pad(theta_t, ((0, p_pad - n_params), (0, pad_b)))
 
+    o_pad = abc_sim.sublane_pad(model.n_observed)
     t_pad = int(np.ceil(num_days / 128) * 128)
-    obs_pad = jnp.zeros((8, t_pad), jnp.float32)
-    obs_pad = obs_pad.at[:3, :num_days].set(jnp.asarray(observed, jnp.float32))
+    obs_pad = jnp.zeros((o_pad, t_pad), jnp.float32)
+    obs_pad = obs_pad.at[: model.n_observed, :num_days].set(
+        jnp.asarray(observed, jnp.float32)
+    )
 
     fconsts = jnp.zeros((1, _CONST_LANES), jnp.float32)
     fconsts = fconsts.at[0, 0].set(population)
@@ -69,6 +102,7 @@ def abc_sim_distance(
         obs_pad,
         fconsts,
         iconsts,
+        model=model,
         num_days=num_days,
         tile=tile,
         interpret=interpret,

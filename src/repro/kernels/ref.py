@@ -1,9 +1,10 @@
 """Pure-jnp oracle for the fused ABC simulation kernel.
 
-Reuses the verified reference model (`repro.epi.model`) for the dynamics and
+Reuses the verified generic engine (`repro.epi.engine`) for the dynamics and
 the shared counter-based RNG primitive (`repro.kernels.rng`) for the noise,
 so kernel-vs-oracle tests check the kernel's tiling/looping/layout logic
-against an independent formulation of the same math.
+against an independent formulation of the same math — for ANY registered
+`CompartmentalModel` spec, not just the paper's SIARD.
 """
 
 from __future__ import annotations
@@ -11,7 +12,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.epi import model as epi_model
+from repro.epi import engine
+from repro.epi.spec import CompartmentalModel, EpiModelConfig
 from repro.kernels import rng as krng
 
 
@@ -24,32 +26,35 @@ def hash_normals(seed, idx: jax.Array, day, n_transitions: int = 5) -> jax.Array
 
 
 def abc_sim_distance_ref(
-    theta: jax.Array,  # [B, 8] f32
+    theta: jax.Array,  # [B, n_params] f32
     seed,  # uint32 scalar
-    observed: jax.Array,  # [3, T] f32
+    observed: jax.Array,  # [n_observed, T] f32
     *,
     population: float,
     a0: float,
     r0: float,
     d0: float,
+    model: CompartmentalModel | None = None,
 ) -> jax.Array:
     """Distances [B]: simulate T days with hash RNG, Euclidean vs observed."""
+    if model is None:
+        from repro.epi.models import DEFAULT_MODEL as model  # noqa: N811
     theta = jnp.asarray(theta, jnp.float32)
     batch = theta.shape[0]
     num_days = observed.shape[1]
-    cfg = epi_model.EpiModelConfig(
+    cfg = EpiModelConfig(
         population=population, num_days=num_days, a0=a0, r0=r0, d0=d0
     )
     idx = jnp.arange(batch, dtype=jnp.uint32)
-    state0 = epi_model.initial_state(theta, cfg)
-    obs_by_day = jnp.swapaxes(jnp.asarray(observed, jnp.float32), 0, 1)  # [T, 3]
+    state0 = engine.initial_state(model, theta, cfg)
+    obs_by_day = jnp.swapaxes(jnp.asarray(observed, jnp.float32), 0, 1)  # [T, n_obs]
 
     def step(carry, inp):
         state, acc = carry
         day, obs_t = inp
-        z = hash_normals(seed, idx, day)  # [B, 5]
-        nxt = epi_model.tau_leap_step(state, theta, z, cfg.population)
-        diff = nxt[..., epi_model.OBSERVED_IDX] - obs_t
+        z = hash_normals(seed, idx, day, model.n_transitions)  # [B, n_trans]
+        nxt = engine.tau_leap_step(model, state, theta, z, cfg.population)
+        diff = nxt[..., model.observed_idx] - obs_t
         return (nxt, acc + jnp.sum(diff * diff, axis=-1)), None
 
     days = jnp.arange(num_days, dtype=jnp.uint32)

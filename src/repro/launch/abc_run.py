@@ -6,6 +6,11 @@ model, with multi-device sharding, checkpoint/resume and backend selection.
 
     # paper §5 workflow (scaled): all three countries
     PYTHONPATH=src python -m repro.launch.abc_run --dataset italy --days 49 ...
+
+    # any registered compartmental model (see repro.epi.models); synthetic
+    # ground truth is generated from the chosen model's spec
+    PYTHONPATH=src python -m repro.launch.abc_run --model seir \
+        --dataset synthetic_small --auto-tolerance 1e-3 --batch 8192
 """
 
 from __future__ import annotations
@@ -14,16 +19,19 @@ import argparse
 
 import jax
 
-from repro.core.abc import ABCConfig, ABCState, make_simulator, run_abc
-from repro.core.distributed import make_shardmap_runner
-from repro.core.priors import paper_prior
+from repro.core.abc import ABCConfig, ABCState, run_abc
+from repro.core.distributed import make_runner
 from repro.epi.data import get_dataset
+from repro.epi.models import list_models
 from repro.launch.mesh import make_host_mesh
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="synthetic_small")
+    ap.add_argument("--model", default="siard", choices=list_models(),
+                    help="compartmental model to infer (registry name; the "
+                         "paper's SIARD model is the default)")
     ap.add_argument("--tolerance", type=float, default=1.6e4,
                     help="absolute epsilon; use --auto-tolerance to calibrate")
     ap.add_argument("--auto-tolerance", type=float, default=0.0, metavar="Q",
@@ -44,14 +52,14 @@ def main(argv=None):
                     help="shard_map over all host devices")
     args = ap.parse_args(argv)
 
-    ds = get_dataset(args.dataset, num_days=args.days)
+    ds = get_dataset(args.dataset, num_days=args.days, model=args.model)
     tolerance = args.tolerance
     if args.auto_tolerance:
         from repro.core.abc import calibrate_tolerance
 
         pilot_cfg = ABCConfig(batch_size=args.batch, tolerance=1.0,
                               num_days=args.days, backend=args.backend,
-                              strategy="topk", top_k=1)
+                              strategy="topk", top_k=1, model=args.model)
         tolerance = calibrate_tolerance(ds, pilot_cfg, key=args.seed,
                                         quantile=args.auto_tolerance)
         print(f"[abc] auto-calibrated tolerance = {tolerance:.4g} "
@@ -65,11 +73,12 @@ def main(argv=None):
         num_days=args.days,
         backend=args.backend,
         max_runs=args.max_runs,
+        model=args.model,
     )
     run_fn = None
     if args.multi_device:
         mesh = make_host_mesh(model=1)
-        run_fn = make_shardmap_runner(mesh, paper_prior(), make_simulator(ds, cfg), cfg)
+        run_fn = make_runner(mesh, ds, cfg)
 
     state = None
     if args.state:

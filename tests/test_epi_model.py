@@ -1,12 +1,12 @@
 """Unit + property tests for the stochastic epidemiology model (paper §2.1)."""
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+# degrades to skip-markers when hypothesis is absent (tier-1 container)
+from _hypothesis_compat import given, settings, st
 
 from repro.epi import model as em
 

@@ -1,12 +1,13 @@
 """Numerics of the shared layers: blockwise-vs-dense attention equivalence,
 SSD chunked-vs-recurrent equivalence, rope/softcap invariants (hypothesis)."""
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+# degrades to skip-markers when hypothesis is absent (tier-1 container)
+from _hypothesis_compat import given, settings, st
 
 from repro.models import common as cm
 from repro.models import ssm as ssm_lib

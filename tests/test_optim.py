@@ -1,11 +1,11 @@
 """AdamW, schedule, clipping, and int8 error-feedback gradient compression."""
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+
+# degrades to skip-markers when hypothesis is absent (tier-1 container)
+from _hypothesis_compat import given, settings, st
 
 from repro.optim import (
     AdamWConfig,

@@ -1,0 +1,80 @@
+"""Campaign throughput benchmark: the paper's multi-country study in one go.
+
+    PYTHONPATH=src python benchmarks/bench_campaign.py [--accept 50]
+
+Runs a fresh campaign over the three bundled countries x two (A,R,D)-observing
+models and records per-scenario wall clock, acceptance rates and the
+compile-reuse ratio (scenarios per compiled shape). The JSON artifact is the
+nightly-CI record of the multi-scenario workload's performance trajectory.
+"""
+
+import argparse
+import shutil
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from common import render_table, save_result  # noqa: E402
+
+from repro.core.campaign import CampaignConfig, run_campaign  # noqa: E402
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--accept", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8192)
+    ap.add_argument("--days", type=int, default=20)
+    ap.add_argument("--models", nargs="+", default=["siard", "seiard"])
+    ap.add_argument("--quantile", type=float, default=2e-3)
+    args = ap.parse_args(argv)
+
+    out_dir = tempfile.mkdtemp(prefix="bench_campaign_")
+    try:
+        cfg = CampaignConfig(
+            datasets=("italy", "new_zealand", "usa"),
+            models=tuple(args.models),
+            batch_size=args.batch,
+            num_days=args.days,
+            target_accepted=args.accept,
+            auto_quantile=args.quantile,
+            max_runs=2000,
+            out_dir=out_dir,
+            checkpoint_every=0,  # benchmark the uninterrupted path
+        )
+        report = run_campaign(cfg)
+    finally:
+        shutil.rmtree(out_dir, ignore_errors=True)
+
+    rows = []
+    for r in report.scenarios:
+        sims_per_s = r.simulations / max(r.wall_time_s, 1e-9)
+        rows.append([r.name, r.status, str(r.runs), f"{r.acceptance_rate:.2e}",
+                     f"{r.wall_time_s:.2f}", f"{sims_per_s:,.0f}"])
+    print(render_table(
+        ["scenario", "status", "runs", "acc_rate", "wall_s", "sims/s"], rows))
+
+    n_run = sum(1 for r in report.scenarios if r.status == "ok")
+    payload = {
+        "wall_time_s": report.wall_time_s,
+        "compiled_shapes": report.compiled_shapes,
+        "scenarios_per_shape": n_run / max(report.compiled_shapes, 1),
+        "total_simulations": sum(r.simulations for r in report.scenarios),
+        "scenarios": [
+            {
+                "name": r.name, "status": r.status, "runs": r.runs,
+                "simulations": r.simulations, "wall_time_s": r.wall_time_s,
+                "acceptance_rate": r.acceptance_rate,
+                "tolerance": r.tolerance,
+                "posterior_mean": r.posterior_mean,
+            }
+            for r in report.scenarios
+        ],
+    }
+    path = save_result("campaign", payload)
+    print(f"\nsaved {path}")
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Host wave loop vs device-resident wave loop: before/after throughput.
+
+    PYTHONPATH=src python benchmarks/bench_wave_loop.py [--batch 8192] [--waves 16]
+
+Runs the SAME wave budget (target_accepted unreachable, max_runs fixed)
+through both drivers of `run_abc`:
+
+  host   — one jitted wave per call, host harvest after every wave
+           (the per-wave host sync the paper's outfeed host code pays)
+  device — one jitted lax.while_loop over all waves with donated accept
+           buffers; a single host sync at the end
+
+Both see identical sample streams (pinned by tests/test_wave_loop.py), so the
+delta is pure loop/dispatch overhead. The JSON artifact also embeds the raw
+simulator throughput from experiments/bench/model_sweep.json (when present)
+so regressions against the `bench_model_sweep` baseline are visible in one
+place — wave-loop sims/s can approach but never exceed the raw simulator.
+"""
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from common import RESULTS_DIR, render_table, save_result  # noqa: E402
+
+from repro.core.abc import ABCConfig, make_simulator, run_abc  # noqa: E402
+from repro.epi.data import get_dataset  # noqa: E402
+from repro.epi.models import get_model  # noqa: E402
+
+DAYS = 20
+
+
+def calibrate(ds, model, backend, quantile=0.01):
+    """Per-model epsilon at ~1% acceptance so the accept path carries
+    realistic traffic for every model's distance scale."""
+    cfg = ABCConfig(batch_size=4096, num_days=DAYS, chunk_size=4096,
+                    backend=backend, model=model)
+    sim = jax.jit(make_simulator(ds, cfg))
+    th = get_model(model).prior().sample(jax.random.PRNGKey(42), (4096,))
+    d = np.asarray(sim(th, jax.random.PRNGKey(43)))
+    return float(np.quantile(d[np.isfinite(d)], quantile))
+
+
+def make_driver(ds, cfg):
+    """Pre-build the compiled runner so timing excludes trace/compile."""
+    import jax as _jax
+
+    from repro.core.abc import abc_run_batch, make_wave_runner
+
+    prior = get_model(cfg.model).prior()
+    sim = make_simulator(ds, cfg)
+    if cfg.wave_loop == "device":
+        runner = make_wave_runner(prior, sim, cfg)
+        return lambda key: run_abc(ds, cfg, key=key, wave_runner=runner)
+    run_fn = _jax.jit(abc_run_batch(prior, sim, cfg))
+    return lambda key: run_abc(ds, cfg, key=key, run_fn=run_fn)
+
+
+def run_once(driver, key=0):
+    t0 = time.perf_counter()
+    post = driver(key)
+    dt = time.perf_counter() - t0
+    return post, dt
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=8192)
+    ap.add_argument("--waves", type=int, default=16)
+    ap.add_argument("--models", nargs="+", default=["siard", "sir"])
+    ap.add_argument("--backends", nargs="+", default=["xla_fused"])
+    args = ap.parse_args(argv)
+
+    # unreachable target so both drivers burn the full wave budget, but small
+    # enough that the accept buffer (target + batch rows) stays device-sized
+    target = args.waves * args.batch + 1
+
+    rows, payload = [], {"batch": args.batch, "waves": args.waves, "runs": []}
+    for model in args.models:
+        ds = get_dataset("synthetic_small", num_days=DAYS, model=model)
+        for backend in args.backends:
+            tol = calibrate(ds, model, backend)
+            per_loop = {}
+            for loop in ("host", "device"):
+                cfg = ABCConfig(
+                    batch_size=args.batch, tolerance=tol,
+                    target_accepted=target, max_runs=args.waves,
+                    chunk_size=args.batch, num_days=DAYS, backend=backend,
+                    model=model, wave_loop=loop,
+                )
+                driver = make_driver(ds, cfg)
+                run_once(driver, key=0)  # warmup: compile + first wave set
+                post, dt = run_once(driver, key=1)
+                sims_per_s = post.simulations / dt
+                per_loop[loop] = {
+                    "wall_s": dt, "simulations": post.simulations,
+                    "sims_per_s": sims_per_s,
+                }
+                rows.append([model, backend, loop, f"{dt*1e3:.1f}",
+                             f"{sims_per_s:,.0f}"])
+            speedup = (per_loop["device"]["sims_per_s"]
+                       / per_loop["host"]["sims_per_s"])
+            payload["runs"].append({
+                "model": model, "backend": backend, **per_loop,
+                "device_over_host_speedup": speedup,
+            })
+            rows.append([model, backend, "speedup", "",
+                         f"{speedup:.2f}x"])
+
+    # embed the raw-simulator baseline so one artifact shows the trajectory
+    sweep_path = RESULTS_DIR / "model_sweep.json"
+    if sweep_path.exists():
+        payload["model_sweep_baseline"] = json.loads(sweep_path.read_text())
+
+    print(render_table(["model", "backend", "loop", "wall_ms", "sims/s"], rows))
+    path = save_result("wave_loop", payload)
+    print(f"\nsaved {path}")
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -4,13 +4,27 @@ Layers:
   priors       — vectorized priors with log-pdf (uniform box prior of the paper)
   distances    — batched distance functions (Euclidean of the paper + extras)
   abc          — batched rejection-ABC engine with the paper's two fixed-shape
-                 sample-return strategies (chunked outfeed / top-k), resumable
+                 sample-return strategies (chunked outfeed / top-k), resumable;
+                 host and device-resident (single lax.while_loop) wave drivers
   smc          — SMC-ABC (decreasing-tolerance sequential Monte Carlo)
   posterior    — accepted-sample containers + summaries
-  distributed  — shard_map multi-device / multi-pod driver
+  distributed  — shard_map multi-device / multi-pod driver (per-wave and
+                 device-resident wave-loop styles)
+  campaign     — multi-scenario grid runner (dataset x model x backend x seed)
+                 with compile reuse, checkpoint/resume and aggregated report
 """
 
 from repro.core.priors import UniformBoxPrior
 from repro.core.distances import euclidean_distance
-from repro.core.abc import ABCConfig, ABCState, run_abc, abc_run_batch
+from repro.core.abc import (
+    ABCConfig,
+    ABCState,
+    WaveRunner,
+    abc_run_batch,
+    build_wave_loop,
+    make_wave_runner,
+    run_abc,
+    wave_capacity,
+)
+from repro.core.campaign import CampaignConfig, CampaignReport, Scenario, run_campaign
 from repro.core.posterior import Posterior

@@ -18,6 +18,17 @@ In JAX the "transfer only flagged chunks" semantics fall out naturally:
 outputs are device arrays, and the host calls `jax.device_get` ONLY on the
 flagged chunk rows, so D2H traffic matches the paper's outfeed behaviour.
 
+Two wave-loop drivers share the per-wave math:
+
+  * host loop   — one jitted wave per call; the host harvests RunOutput after
+    every wave (the original paper-faithful structure).
+  * device loop — a single jitted `lax.while_loop` that runs simulate ->
+    compare -> compact-into-buffer for as many waves as needed, with donated
+    fixed-size accept buffers, and returns to the host only once the
+    acceptance target is met or the wave budget is exhausted. Same-seed
+    accepted-sample sets are identical to the host loop (pinned by
+    tests/test_wave_loop.py); the per-wave host sync disappears.
+
 The engine is resumable (ABCState) and backend-pluggable:
   backend="xla"        paper-faithful full-trajectory simulate + distance
   backend="xla_fused"  running-distance scan (no [B,3,T] materialization)
@@ -27,8 +38,11 @@ The engine is resumable (ABCState) and backend-pluggable:
 from __future__ import annotations
 
 import dataclasses
+import os
+import tempfile
 import time
-from typing import Callable, NamedTuple, Optional
+import zipfile
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -60,6 +74,12 @@ class ABCConfig:
     num_days: int = 49
     #: registry name of the compartmental model to infer (repro.epi.models)
     model: str = "siard"
+    #: wave-loop driver: "host" (per-wave host sync, the original structure),
+    #: "device" (one jitted lax.while_loop over waves with donated accept
+    #: buffers), or "auto" (device for "outfeed" when the buffer fits, else
+    #: host). The device loop yields the same same-seed accepted set as the
+    #: host outfeed path (pinned by tests/test_wave_loop.py).
+    wave_loop: str = "auto"
 
     def __post_init__(self):
         if self.strategy not in ("outfeed", "topk"):
@@ -68,6 +88,17 @@ class ABCConfig:
             raise ValueError("batch_size must be a multiple of chunk_size")
         if self.backend not in ("xla", "xla_fused", "pallas"):
             raise ValueError(f"unknown backend {self.backend!r}")
+        if self.wave_loop not in ("auto", "host", "device"):
+            raise ValueError(f"unknown wave_loop {self.wave_loop!r}")
+        if self.wave_loop == "device" and self.strategy == "topk":
+            # the device loop compacts EVERY sub-tolerance sample (outfeed
+            # harvest semantics); it has no per-wave k cap, so pairing it
+            # with topk would silently change the accepted set
+            raise ValueError(
+                "wave_loop='device' implements outfeed harvest semantics; "
+                "use strategy='outfeed' (or wave_loop='host' to keep the "
+                "top-k truncation caveat)"
+            )
 
     @property
     def num_chunks(self) -> int:
@@ -85,6 +116,58 @@ class RunOutput(NamedTuple):
 
 SimulatorFn = Callable[[Array, Array], Array]  # (theta [B,p], key) -> dist [B]
 
+#: traced per-scenario data threaded through a parametric simulator:
+#: (observed [n_obs, T], population, a0, r0, d0)
+ScenarioData = Tuple[Array, Array, Array, Array, Array]
+
+
+def make_parametric_simulator(spec, cfg: ABCConfig):
+    """theta -> distance with the *dataset as traced arguments*.
+
+    Returns `sim(theta [B,p], key, data: ScenarioData) -> dist [B]`. Because
+    the observed series and the (population, a0, r0, d0) scalars are inputs
+    rather than baked-in constants, one jitted computation serves every
+    dataset of the same (model, num_days, batch) shape — the campaign runner
+    relies on this to compile once per shape and sweep countries/seeds.
+
+    The "pallas" backend bakes its scalars as static kernel constants and
+    therefore cannot be parameterized this way (use `make_simulator`).
+    """
+    from repro.epi.spec import EpiModelConfig
+
+    dist_fn = DISTANCES[cfg.distance]
+    if cfg.backend == "pallas":
+        raise ValueError(
+            "pallas bakes (population, a0, r0, d0) into the kernel as static "
+            "constants; build a per-dataset simulator with make_simulator"
+        )
+    if cfg.backend == "xla_fused" and cfg.distance != "euclidean":
+        raise ValueError("xla_fused backend implements euclidean only")
+
+    def simulator(theta: Array, key: Array, data: ScenarioData) -> Array:
+        observed, population, a0, r0, d0 = data
+        mcfg = EpiModelConfig(
+            population=population, num_days=cfg.num_days, a0=a0, r0=r0, d0=d0
+        )
+        if cfg.backend == "xla":
+            sim = engine.simulate_observed(spec, theta, key, mcfg)
+            return dist_fn(sim, observed)
+        d, _ = engine.simulate_observed_lowmem(spec, theta, key, mcfg, observed)
+        return d
+
+    return simulator
+
+
+def scenario_data(dataset: CountryData, cfg: ABCConfig) -> ScenarioData:
+    """Pack a dataset into the traced-argument tuple of a parametric simulator."""
+    return (
+        jnp.asarray(dataset.observed[:, : cfg.num_days], jnp.float32),
+        jnp.float32(dataset.population),
+        jnp.float32(dataset.a0),
+        jnp.float32(dataset.r0),
+        jnp.float32(dataset.d0),
+    )
+
 
 def make_simulator(dataset: CountryData, cfg: ABCConfig) -> SimulatorFn:
     """Build the batched theta -> distance function for the chosen backend.
@@ -100,21 +183,13 @@ def make_simulator(dataset: CountryData, cfg: ABCConfig) -> SimulatorFn:
         )
     mcfg = dataset.model_config(cfg.num_days)
     observed = jnp.asarray(dataset.observed[:, : cfg.num_days], jnp.float32)
-    dist_fn = DISTANCES[cfg.distance]
 
-    if cfg.backend == "xla":
-
-        def simulator(theta: Array, key: Array) -> Array:
-            sim = engine.simulate_observed(spec, theta, key, mcfg)  # [B, n_obs, T]
-            return dist_fn(sim, observed)
-
-    elif cfg.backend == "xla_fused":
-        if cfg.distance != "euclidean":
-            raise ValueError("xla_fused backend implements euclidean only")
+    if cfg.backend in ("xla", "xla_fused"):
+        parametric = make_parametric_simulator(spec, cfg)
+        data = scenario_data(dataset, cfg)
 
         def simulator(theta: Array, key: Array) -> Array:
-            d, _ = engine.simulate_observed_lowmem(spec, theta, key, mcfg, observed)
-            return d
+            return parametric(theta, key, data)
 
     else:  # pallas
         if cfg.distance != "euclidean":
@@ -174,6 +249,246 @@ def abc_run_batch(
     return run
 
 
+# --------------------------------------------------------------------------
+# Device-resident wave loop
+# --------------------------------------------------------------------------
+
+class WaveLoopOutput(NamedTuple):
+    """Outputs of one device-resident wave-loop invocation.
+
+    The accept buffers are laid out as `shards` contiguous segments of
+    `capacity` rows each; segment i holds `fill_counts[i]` valid rows.
+    """
+
+    theta_buf: Array  # [shards * capacity, p]
+    dist_buf: Array  # [shards * capacity]
+    n_accepted: Array  # [] int32 — TOTAL accepted (may exceed buffer fill)
+    waves_done: Array  # [] int32 — waves executed by THIS invocation
+    fill_counts: Array  # [shards] int32 — valid rows per buffer segment
+
+
+#: auto mode only picks the device loop when the accept buffer stays small
+#: enough to live comfortably on one device (rows, not bytes)
+_AUTO_DEVICE_MAX_ROWS = 4_000_000
+
+
+def wave_capacity(cfg: ABCConfig, batch_size: Optional[int] = None) -> int:
+    """Accept-buffer rows per shard: never overflows within one wave.
+
+    The loop only enters a wave while accepted < target, and a wave adds at
+    most one batch, so `target + batch - 1` bounds the fill — the final
+    wave's overshoot is retained exactly like the host outfeed path.
+    """
+    return cfg.target_accepted + (batch_size or cfg.batch_size)
+
+
+def compact_accepted(th_buf, d_buf, fill, theta, dist, accept, capacity: int):
+    """Scatter accepted rows into the buffer's next free slots.
+
+    Fixed shapes throughout: rejected rows get an out-of-bounds slot and are
+    dropped by the scatter. Returns (th_buf, d_buf, new_fill). Shared by the
+    ABC wave loop and the SMC device round — the capacity-edge semantics
+    exist exactly once.
+    """
+    slot = fill + jnp.cumsum(accept.astype(jnp.int32)) - 1
+    slot = jnp.where(accept, slot, capacity)
+    th_buf = th_buf.at[slot].set(theta, mode="drop")
+    d_buf = d_buf.at[slot].set(dist, mode="drop")
+    return th_buf, d_buf, fill + jnp.sum(accept, dtype=jnp.int32)
+
+
+def wave_loop_body(
+    prior: UniformBoxPrior,
+    sim_call,  # (theta, key, data) -> dist
+    batch_size: int,
+    capacity: int,
+    *,
+    fold_axis=None,  # device index to fold into the run key (shard_map path)
+    count_all=None,  # per-wave local count -> global count (psum under shard_map)
+):
+    """One wave: sample -> simulate -> compare -> compact into the buffer.
+
+    Returns a `body(carry)` for `lax.while_loop` with carry
+    `(wave, n_global, fill, theta_buf, dist_buf)`; the extra run inputs
+    (key, run_idx0, tolerance, data) are closed over by the caller via
+    `functools.partial`-style nesting in `build_wave_loop`.
+    """
+
+    def body(carry, key, run_idx0, tolerance, data):
+        w, n_global, fill, th_buf, d_buf = carry
+        k = jax.random.fold_in(key, run_idx0 + w)
+        if fold_axis is not None:
+            k = jax.random.fold_in(k, fold_axis())
+        k_prior, k_sim = jax.random.split(k)
+        theta = prior.sample(k_prior, (batch_size,))
+        dist = sim_call(theta, k_sim, data)
+        dist = jnp.where(jnp.isnan(dist), jnp.inf, dist)
+        accept = dist <= tolerance
+        th_buf, d_buf, new_fill = compact_accepted(
+            th_buf, d_buf, fill, theta, dist, accept, capacity
+        )
+        c_local = new_fill - fill
+        c_global = count_all(c_local) if count_all is not None else c_local
+        return (w + 1, n_global + c_global, new_fill, th_buf, d_buf)
+
+    return body
+
+
+def build_wave_loop(
+    prior: UniformBoxPrior,
+    sim_call,  # (theta, key, data) -> dist
+    cfg: ABCConfig,
+    *,
+    batch_size: Optional[int] = None,
+    capacity: Optional[int] = None,
+    fold_axis=None,
+    count_all=None,
+    shard_hint=None,  # optional fn applied to per-wave batch arrays (pjit path)
+):
+    """Build the un-jitted device-resident wave loop.
+
+    loop(key, run_idx0, theta_buf, dist_buf, n0, fill0, max_waves,
+         tolerance, data) -> WaveLoopOutput
+
+    A single `lax.while_loop` runs waves until the GLOBAL accepted count
+    reaches `cfg.target_accepted` or `max_waves` waves have run. Sample
+    streams are identical to the host loop: wave w uses
+    `fold_in(key, run_idx0 + w)` (plus a device fold under shard_map),
+    exactly as `run_abc`/`make_shardmap_runner` key their runs.
+    """
+    B = batch_size or cfg.batch_size
+    cap = capacity or wave_capacity(cfg, B)
+    target = cfg.target_accepted
+    inner = sim_call
+    if shard_hint is not None:
+        def inner(theta, key, data):  # noqa: F811 — sharded wrapper
+            return shard_hint(sim_call(shard_hint(theta), key, data))
+    body_fn = wave_loop_body(
+        prior, inner, B, cap, fold_axis=fold_axis, count_all=count_all
+    )
+
+    def loop(key, run_idx0, theta_buf, dist_buf, n0, fill0, max_waves,
+             tolerance, data):
+        run_idx0 = jnp.asarray(run_idx0, jnp.int32)
+        max_waves = jnp.asarray(max_waves, jnp.int32)
+        n0 = jnp.asarray(n0, jnp.int32)
+        fill0 = jnp.asarray(fill0, jnp.int32)
+
+        def cond(carry):
+            w, n_global, *_ = carry
+            return jnp.logical_and(n_global < target, w < max_waves)
+
+        def body(carry):
+            return body_fn(carry, key, run_idx0, tolerance, data)
+
+        w, n, fill, th_buf, d_buf = jax.lax.while_loop(
+            cond, body, (jnp.int32(0), n0, fill0, theta_buf, dist_buf)
+        )
+        return WaveLoopOutput(
+            th_buf, d_buf, n, w, jnp.minimum(fill, cap)[None]
+        )
+
+    return loop
+
+
+@dataclasses.dataclass
+class WaveRunner:
+    """A compiled device-resident wave loop plus its buffer layout.
+
+    `fn(key, run_idx0, theta_buf, dist_buf, n0, fill0, max_waves, tolerance,
+    data)` is jitted with the buffers donated; `data` is the traced
+    per-scenario tuple (or None when the simulator baked the dataset in).
+    `shards` > 1 means the buffers are laid out as per-device segments
+    (distributed runners).
+    """
+
+    fn: Callable[..., WaveLoopOutput]
+    capacity: int  # rows per shard segment
+    shards: int
+    n_params: int
+    cfg: ABCConfig
+    data: Optional[ScenarioData] = None
+
+    def init(self, state: "ABCState"):
+        """Device buffers seeded from (possibly resumed) host state.
+
+        Returns the carry (theta_buf, dist_buf, n0, fill0). Existing accepted
+        samples are split evenly across shard segments (exact order is
+        preserved for shards == 1, the pinned single-device case).
+        """
+        theta, dist = state.to_arrays()
+        n = theta.shape[0]
+        th_buf = np.zeros((self.shards * self.capacity, self.n_params), np.float32)
+        d_buf = np.full((self.shards * self.capacity,), np.inf, np.float32)
+        fills = np.zeros((self.shards,), np.int32)
+        splits = np.array_split(np.arange(n), self.shards)
+        for s, idx in enumerate(splits):
+            if idx.size > self.capacity:
+                raise ValueError(
+                    f"resumed state ({n} accepted) overflows the wave buffer "
+                    f"({self.shards} x {self.capacity}); raise target/batch"
+                )
+            lo = s * self.capacity
+            th_buf[lo : lo + idx.size] = theta[idx]
+            d_buf[lo : lo + idx.size] = dist[idx]
+            fills[s] = idx.size
+        fill0 = fills if self.shards > 1 else np.int32(fills[0])
+        return (jnp.asarray(th_buf), jnp.asarray(d_buf), np.int32(n), fill0)
+
+    def __call__(self, key, run_idx0: int, carry, max_waves: int) -> WaveLoopOutput:
+        th_buf, d_buf, n0, fill0 = carry
+        return self.fn(
+            key, np.int32(run_idx0), th_buf, d_buf, n0, fill0,
+            np.int32(max_waves), np.float32(self.cfg.tolerance), self.data,
+        )
+
+    def carry_of(self, out: WaveLoopOutput):
+        fill = out.fill_counts if self.shards > 1 else out.fill_counts[0]
+        return (out.theta_buf, out.dist_buf, out.n_accepted, fill)
+
+    def harvest(self, out: WaveLoopOutput, state: "ABCState") -> None:
+        """Replace the state's accepted set with the buffers' contents.
+
+        Unlike the host loop's incremental appends, the buffers are
+        cumulative — they carry every accepted sample so far (including any
+        resumed prefix), so this *replaces* rather than extends.
+        """
+        th = np.asarray(out.theta_buf)
+        d = np.asarray(out.dist_buf)
+        fills = np.asarray(out.fill_counts)
+        state.accepted_theta = []
+        state.accepted_dist = []
+        for s, c in enumerate(fills):
+            c = int(c)
+            if c:
+                lo = s * self.capacity
+                state.accepted_theta.append(th[lo : lo + c])
+                state.accepted_dist.append(d[lo : lo + c])
+
+
+def make_wave_runner(
+    prior: UniformBoxPrior, simulator: SimulatorFn, cfg: ABCConfig
+) -> WaveRunner:
+    """Single-device wave runner over a dataset-baked simulator."""
+    loop = build_wave_loop(prior, lambda th, k, _data: simulator(th, k), cfg)
+    fn = jax.jit(loop, donate_argnums=(2, 3))
+    return WaveRunner(
+        fn=fn, capacity=wave_capacity(cfg), shards=1, n_params=prior.dim, cfg=cfg
+    )
+
+
+def _auto_device_loop(cfg: ABCConfig) -> bool:
+    """auto: device loop for outfeed runs whose accept buffer stays small."""
+    if cfg.wave_loop == "device":
+        return True
+    if cfg.wave_loop == "host":
+        return False
+    return (
+        cfg.strategy == "outfeed"
+        and wave_capacity(cfg) <= _AUTO_DEVICE_MAX_ROWS
+    )
+
+
 @dataclasses.dataclass
 class ABCState:
     """Resumable sampler state — the fault-tolerance unit for inference.
@@ -207,22 +522,66 @@ class ABCState:
         )
 
     def save(self, path: str) -> None:
+        """Atomic save: write to a temp file in the same directory, fsync,
+        then rename over the target. An interrupted save (crash, preemption
+        mid-campaign) can never leave a truncated checkpoint at `path` — the
+        previous complete file, if any, survives."""
         th, d = self.to_arrays()
-        np.savez(
-            path, run_idx=self.run_idx, simulations=self.simulations, theta=th, dist=d
+        directory = os.path.dirname(os.path.abspath(path)) or "."
+        fd, tmp = tempfile.mkstemp(
+            prefix=os.path.basename(path) + ".", suffix=".tmp", dir=directory
         )
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez(
+                    f, run_idx=self.run_idx, simulations=self.simulations,
+                    theta=th, dist=d,
+                )
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)  # atomic commit
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    _REQUIRED_KEYS = ("run_idx", "simulations", "theta", "dist")
 
     @staticmethod
     def load(path: str) -> "ABCState":
-        z = np.load(path)
-        st = ABCState(
-            run_idx=int(z["run_idx"]),
-            simulations=int(z["simulations"]),
-            n_params=int(z["theta"].shape[1]),
-        )
-        if z["theta"].shape[0]:
-            st.accepted_theta = [z["theta"]]
-            st.accepted_dist = [z["dist"]]
+        """Load a checkpoint, rejecting corrupt/partial files loudly.
+
+        A truncated or otherwise unreadable file raises ValueError with a
+        clear remediation message instead of surfacing a bare zipfile/KeyError
+        deep inside a resumed campaign. A missing file is NOT corruption —
+        FileNotFoundError propagates untouched."""
+        try:
+            z = np.load(path, allow_pickle=False)
+            missing = [k for k in ABCState._REQUIRED_KEYS if k not in z.files]
+            if missing:
+                raise ValueError(f"missing arrays {missing}")
+            theta = np.asarray(z["theta"], np.float32)
+            dist = np.asarray(z["dist"], np.float32)
+            if theta.ndim != 2 or dist.shape != (theta.shape[0],):
+                raise ValueError(
+                    f"inconsistent shapes theta={theta.shape} dist={dist.shape}"
+                )
+            st = ABCState(
+                run_idx=int(z["run_idx"]),
+                simulations=int(z["simulations"]),
+                n_params=int(theta.shape[1]),
+            )
+        except FileNotFoundError:
+            raise
+        except (zipfile.BadZipFile, OSError, KeyError, ValueError) as e:
+            raise ValueError(
+                f"corrupt or incomplete ABC checkpoint {path!r} ({e}); it was "
+                "probably truncated by an interrupted save — delete it to "
+                "restart this scenario from scratch"
+            ) from e
+        if theta.shape[0]:
+            st.accepted_theta = [theta]
+            st.accepted_dist = [dist]
         return st
 
 
@@ -265,14 +624,23 @@ def run_abc(
     prior: Optional[UniformBoxPrior] = None,
     state: Optional[ABCState] = None,
     run_fn: Optional[Callable[[Array], RunOutput]] = None,
+    wave_runner: Optional[WaveRunner] = None,
     checkpoint_every: int = 0,
     checkpoint_path: Optional[str] = None,
     verbose: bool = False,
 ) -> Posterior:
     """Host driver: iterate runs until `target_accepted` posterior samples.
 
-    `run_fn` may be a pre-sharded/jitted runner (multi-device); by default a
-    single-device jitted runner is built here.
+    Two drivers share the stream semantics (wave i == fold_in(key, i)):
+
+      * host loop  — `run_fn` (a jitted `abc_run_batch`, possibly pre-sharded
+        for multi-device) is invoked once per wave and harvested on the host.
+      * device loop — `wave_runner` keeps the whole accept/reject loop in one
+        jitted lax.while_loop with donated accept buffers; the host is only
+        re-entered when the target is met, the budget is exhausted, or a
+        checkpoint is due. Selected by `cfg.wave_loop` ("auto" picks it for
+        outfeed-strategy runs) or by passing `wave_runner` explicitly
+        (see core.distributed.make_wave_runner for the sharded styles).
     """
     spec = get_model(cfg.model)
     if isinstance(key, int):
@@ -285,6 +653,20 @@ def run_abc(
         raise ValueError(
             f"resumed state holds {state.n_params}-parameter samples but model "
             f"{spec.name!r} has {prior.dim} parameters — wrong checkpoint?"
+        )
+    if run_fn is not None and wave_runner is None and cfg.wave_loop == "device":
+        raise ValueError(
+            "cfg.wave_loop='device' conflicts with an explicit host-loop "
+            "run_fn; pass a wave_runner (see distributed.make_wave_runner) "
+            "or drop one of the two"
+        )
+    if wave_runner is None and run_fn is None and _auto_device_loop(cfg):
+        wave_runner = make_wave_runner(prior, make_simulator(dataset, cfg), cfg)
+    if wave_runner is not None:
+        return _run_abc_device(
+            cfg, key, state, wave_runner, spec,
+            checkpoint_every=checkpoint_every, checkpoint_path=checkpoint_path,
+            verbose=verbose,
         )
     if run_fn is None:
         simulator = make_simulator(dataset, cfg)
@@ -316,6 +698,62 @@ def run_abc(
     theta, dist = state.to_arrays()
     # every harvested sample is returned (a run may overshoot target_accepted;
     # the paper keeps the overshoot too — callers can slice with Posterior.top)
+    post = Posterior(
+        theta=theta,
+        distances=dist,
+        tolerance=cfg.tolerance,
+        param_names=spec.param_names,
+        runs=state.run_idx,
+        simulations=state.simulations,
+        wall_time_s=time.time() - t0,
+    )
+    post.postproc_time_s = postproc_s  # type: ignore[attr-defined]
+    return post
+
+
+def _run_abc_device(
+    cfg: ABCConfig,
+    key: Array,
+    state: ABCState,
+    wave_runner: WaveRunner,
+    spec,
+    checkpoint_every: int = 0,
+    checkpoint_path: Optional[str] = None,
+    verbose: bool = False,
+) -> Posterior:
+    """Device-loop driver: segments of waves between host syncs.
+
+    Without checkpointing there is exactly ONE device invocation — the
+    while_loop runs until the target is met or `max_runs` is exhausted, and
+    the buffers come back once. With checkpointing, each segment is bounded
+    by `checkpoint_every` waves so a crash loses at most one segment.
+    """
+    t0 = time.time()
+    postproc_s = 0.0
+    carry = wave_runner.init(state)
+    while state.n_accepted < cfg.target_accepted and state.run_idx < cfg.max_runs:
+        seg = cfg.max_runs - state.run_idx
+        if checkpoint_every and checkpoint_path:
+            seg = min(seg, checkpoint_every)
+        out = wave_runner(key, state.run_idx, carry, seg)
+        waves = int(out.waves_done)  # the segment's single host sync
+        tp = time.time()
+        wave_runner.harvest(out, state)
+        postproc_s += time.time() - tp
+        carry = wave_runner.carry_of(out)
+        state.run_idx += waves
+        state.simulations += waves * cfg.batch_size
+        if verbose:
+            print(
+                f"[abc] run {state.run_idx}: accepted {state.n_accepted}/"
+                f"{cfg.target_accepted} (device wave loop)"
+            )
+        if checkpoint_every and checkpoint_path:
+            state.save(checkpoint_path)
+        if waves == 0:  # budget/target already consumed; avoid a spin
+            break
+
+    theta, dist = state.to_arrays()
     post = Posterior(
         theta=theta,
         distances=dist,

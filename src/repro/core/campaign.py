@@ -1,0 +1,468 @@
+"""Multi-scenario ABC campaign runner (the paper's §5 study, industrialized).
+
+The paper demonstrates its throughput claims by running inference for three
+countries; doing that by hand means one process per (country, model) pair.
+A *campaign* fans a grid of scenarios — dataset x model x backend x seed —
+across the host's devices in one process:
+
+  * one compiled device-resident wave loop is REUSED for every scenario of
+    the same (model, num_days, batch_size, backend) shape: the observed
+    series and the (population, a0, r0, d0) scalars are traced arguments of
+    a parametric simulator (`abc.make_parametric_simulator`), so sweeping
+    countries and seeds never re-traces ("pallas" bakes its scalars into the
+    kernel and is the documented exception — it compiles per dataset);
+  * scenarios are placed round-robin over `jax.devices()` and advanced in
+    interleaved segments, so independent scenarios overlap on a multi-device
+    host while the per-scenario stream semantics stay identical to a solo
+    `run_abc` call with the same seed;
+  * every scenario checkpoints through the existing checkpointer
+    (`repro.checkpoint`) — fixed-shape accept buffers plus a metadata dict —
+    and resumes transparently: a finished scenario replays its recorded
+    summary instead of re-running;
+  * the aggregated report (JSON + table) carries per-scenario epsilon
+    schedules, acceptance rates, wall clock and posterior summaries.
+
+    from repro.core.campaign import CampaignConfig, run_campaign
+    report = run_campaign(CampaignConfig(
+        datasets=("italy", "new_zealand", "usa"),
+        models=("siard", "seiard"),
+    ))
+
+CLI: `python -m repro.launch.abc_run --campaign ...` (see README).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.core.abc import (
+    ABCConfig,
+    ABCState,
+    WaveRunner,
+    build_wave_loop,
+    make_parametric_simulator,
+    make_simulator,
+    scenario_data,
+    wave_capacity,
+)
+from repro.epi.data import get_dataset
+from repro.epi.models import get_model
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One cell of the campaign grid."""
+
+    dataset: str
+    model: str
+    backend: str = "xla_fused"
+    seed: int = 0
+
+    @property
+    def name(self) -> str:
+        return f"{self.dataset}__{self.model}__{self.backend}__s{self.seed}"
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignConfig:
+    """Grid spec + per-scenario ABC settings + campaign-level policy."""
+
+    datasets: Tuple[str, ...]
+    models: Tuple[str, ...] = ("siard",)
+    backends: Tuple[str, ...] = ("xla_fused",)
+    seeds: Tuple[int, ...] = (0,)
+    # per-scenario ABC shape (shared across the grid so compilations are
+    # reusable; the tolerance is per-scenario)
+    batch_size: int = 8192
+    num_days: int = 49
+    target_accepted: int = 100
+    max_runs: int = 10_000
+    #: fixed epsilon for every scenario; None auto-calibrates per scenario
+    tolerance: Optional[float] = None
+    #: pilot-quantile for auto-calibration (expected acceptance rate)
+    auto_quantile: float = 1e-3
+    pilot_size: int = 8192
+    # campaign policy
+    out_dir: str = "experiments/campaigns/default"
+    #: waves per device segment between checkpoints (0 = single segment,
+    #: i.e. checkpoint only on completion)
+    checkpoint_every: int = 32
+    keep_checkpoints: int = 2
+    #: grid cells whose model cannot fit the dataset's observed channels are
+    #: recorded as "skipped" instead of failing the whole campaign
+    skip_incompatible: bool = True
+
+    def scenarios(self) -> List[Scenario]:
+        return [
+            Scenario(dataset=d, model=m, backend=b, seed=s)
+            for d in self.datasets
+            for m in self.models
+            for b in self.backends
+            for s in self.seeds
+        ]
+
+    def abc_config(self, sc: Scenario, tolerance: float) -> ABCConfig:
+        return ABCConfig(
+            batch_size=self.batch_size,
+            tolerance=tolerance,
+            target_accepted=self.target_accepted,
+            strategy="outfeed",
+            chunk_size=self.batch_size,
+            max_runs=self.max_runs,
+            num_days=self.num_days,
+            backend=sc.backend,
+            model=sc.model,
+            wave_loop="device",
+        )
+
+
+@dataclasses.dataclass
+class ScenarioResult:
+    name: str
+    dataset: str
+    model: str
+    backend: str
+    seed: int
+    status: str  # "ok" | "budget_exhausted" | "skipped" | "resumed_complete"
+    tolerance: Optional[float] = None  # None until calibrated (skipped cells)
+    eps_schedule: Tuple[float, ...] = ()
+    n_accepted: int = 0
+    runs: int = 0
+    simulations: int = 0
+    acceptance_rate: float = 0.0
+    wall_time_s: float = 0.0
+    posterior_mean: Dict[str, float] = dataclasses.field(default_factory=dict)
+    posterior_std: Dict[str, float] = dataclasses.field(default_factory=dict)
+    checkpoint_dir: str = ""
+    device: str = ""
+    detail: str = ""
+
+
+def _jsonable(obj):
+    """Strict-JSON sanitizer: numpy scalars -> python, NaN/inf -> None."""
+    if isinstance(obj, dict):
+        return {k: _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, (np.floating, float)):
+        f = float(obj)
+        return f if np.isfinite(f) else None
+    if isinstance(obj, np.integer):
+        return int(obj)
+    return obj
+
+
+@dataclasses.dataclass
+class CampaignReport:
+    """Aggregated campaign outcome; serialized to one JSON artifact."""
+
+    config: Dict
+    scenarios: List[ScenarioResult]
+    wall_time_s: float = 0.0
+    compiled_shapes: int = 0
+
+    def save(self, path: str | Path) -> Path:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        payload = {
+            "config": self.config,
+            "wall_time_s": self.wall_time_s,
+            "compiled_shapes": self.compiled_shapes,
+            "scenarios": [dataclasses.asdict(r) for r in self.scenarios],
+        }
+        # allow_nan=False keeps the artifact strict JSON (a stray NaN/inf
+        # would otherwise serialize as a non-JSON literal and break every
+        # downstream consumer of the nightly artifact)
+        path.write_text(
+            json.dumps(_jsonable(payload), indent=1, allow_nan=False)
+        )
+        return path
+
+    def summary_table(self) -> str:
+        headers = [
+            "scenario", "status", "eps", "accepted", "runs", "acc_rate", "wall_s"
+        ]
+        rows = []
+        for r in self.scenarios:
+            rows.append([
+                r.name, r.status,
+                "-" if r.tolerance is None else f"{r.tolerance:.3g}",
+                str(r.n_accepted), str(r.runs),
+                f"{r.acceptance_rate:.2e}", f"{r.wall_time_s:.1f}",
+            ])
+        widths = [
+            max(len(h), max((len(row[i]) for row in rows), default=0))
+            for i, h in enumerate(headers)
+        ]
+
+        def fmt(row):
+            return " | ".join(c.ljust(w) for c, w in zip(row, widths))
+
+        lines = [fmt(headers), "-+-".join("-" * w for w in widths)]
+        lines += [fmt(r) for r in rows]
+        ok = sum(1 for r in self.scenarios if r.status in ("ok", "resumed_complete"))
+        lines.append(
+            f"{ok}/{len(self.scenarios)} scenarios complete, "
+            f"{self.compiled_shapes} compiled shapes, "
+            f"wall {self.wall_time_s:.1f}s"
+        )
+        return "\n".join(lines)
+
+
+class _ShapeCache:
+    """One compiled (wave loop, pilot) pair per unique scenario shape.
+
+    Parametric backends (xla / xla_fused) key on (model, num_days,
+    batch_size, backend) and take the dataset as traced arguments; pallas
+    bakes the dataset scalars into the kernel, so its cache key includes the
+    dataset and the entry closes over a per-dataset simulator.
+    """
+
+    def __init__(self, cfg: CampaignConfig):
+        self.cfg = cfg
+        self._entries: Dict[tuple, tuple] = {}
+
+    @property
+    def n_compiled(self) -> int:
+        return len(self._entries)
+
+    def key_of(self, sc: Scenario) -> tuple:
+        key = (sc.model, self.cfg.num_days, self.cfg.batch_size, sc.backend)
+        if sc.backend == "pallas":
+            key += (sc.dataset,)
+        return key
+
+    def get(self, sc: Scenario, dataset) -> tuple:
+        key = self.key_of(sc)
+        if key in self._entries:
+            return self._entries[key]
+        spec = get_model(sc.model)
+        prior = spec.prior()
+        # the loop's shape (batch, capacity, target) is tolerance-independent;
+        # epsilon is a traced argument, so one compile serves every scenario
+        shape_cfg = self.cfg.abc_config(sc, tolerance=1.0)
+        if sc.backend == "pallas":
+            sim = make_simulator(dataset, shape_cfg)
+            sim_call = lambda th, k, _data: sim(th, k)  # noqa: E731
+        else:
+            parametric = make_parametric_simulator(spec, shape_cfg)
+            sim_call = parametric
+        loop = build_wave_loop(prior, sim_call, shape_cfg)
+        fn = jax.jit(loop, donate_argnums=(2, 3))
+
+        def pilot(key, data):
+            theta = prior.sample(jax.random.fold_in(key, 0),
+                                 (self.cfg.pilot_size,))
+            return sim_call(theta, jax.random.fold_in(key, 1), data)
+
+        entry = (fn, jax.jit(pilot), prior, spec)
+        self._entries[key] = entry
+        return entry
+
+
+class _ScenarioRun:
+    """Driver state for one scenario: carry buffers, checkpointing, report."""
+
+    def __init__(self, sc: Scenario, cfg: CampaignConfig, cache: _ShapeCache,
+                 device, verbose: bool = False):
+        self.sc = sc
+        self.cfg = cfg
+        self.verbose = verbose
+        self.device = device
+        self.result = ScenarioResult(
+            name=sc.name, dataset=sc.dataset, model=sc.model,
+            backend=sc.backend, seed=sc.seed, status="pending",
+            device=str(device),
+        )
+        self.done = False
+        self._out = None
+        self._t0 = time.time()
+
+        try:
+            self.dataset = get_dataset(sc.dataset, num_days=cfg.num_days,
+                                       model=sc.model)
+        except (ValueError, KeyError) as e:
+            if not (cfg.skip_incompatible and isinstance(e, ValueError)):
+                raise
+            self.result.status = "skipped"
+            self.result.detail = str(e)
+            self.done = True
+            return
+        fn, pilot, prior, _ = cache.get(sc, self.dataset)
+        self._pilot = pilot
+        ckpt_dir = Path(cfg.out_dir) / "checkpoints" / sc.name
+        self.ckpt = Checkpointer(ckpt_dir, keep=cfg.keep_checkpoints)
+        self.result.checkpoint_dir = str(ckpt_dir)
+        self.key = jax.random.PRNGKey(sc.seed)
+
+        shape_cfg = cfg.abc_config(sc, tolerance=1.0)
+        data = (None if sc.backend == "pallas"
+                else scenario_data(self.dataset, shape_cfg))
+        self.state = ABCState(n_params=prior.dim)
+        self.eps_schedule: List[float] = []
+        restored_eps = self._try_restore(prior.dim, shape_cfg)
+        if self.done:
+            return  # finished scenario replayed from its checkpoint
+        if restored_eps is not None:
+            eps = restored_eps  # eps_schedule restored alongside
+        elif cfg.tolerance is not None:
+            eps = float(cfg.tolerance)
+        else:
+            eps = self._calibrate(data)
+        if not self.eps_schedule:
+            self.eps_schedule = [eps]
+        self.abc_cfg = cfg.abc_config(sc, tolerance=eps)
+        self.result.tolerance = eps
+        self.result.eps_schedule = tuple(self.eps_schedule)
+        self.runner = WaveRunner(
+            fn=fn, capacity=wave_capacity(self.abc_cfg), shards=1,
+            n_params=prior.dim, cfg=self.abc_cfg, data=data,
+        )
+        self.carry = jax.device_put(self.runner.init(self.state), device)
+        self.key = jax.device_put(self.key, device)
+
+    # ------------------------------------------------------------- restore
+    def _like_tree(self, n_params: int, shape_cfg: ABCConfig):
+        cap = wave_capacity(shape_cfg)
+        return {
+            "theta_buf": np.zeros((cap, n_params), np.float32),
+            "dist_buf": np.zeros((cap,), np.float32),
+        }
+
+    def _try_restore(self, n_params: int, shape_cfg: ABCConfig):
+        """Load the newest checkpoint, if any. Returns the stored epsilon
+        (resume) or None (fresh start); sets self.done for finished runs."""
+        if not self.ckpt.steps():
+            return None
+        tree, meta, _ = self.ckpt.restore(self._like_tree(n_params, shape_cfg))
+        self.state.run_idx = int(meta["run_idx"])
+        self.state.simulations = int(meta["simulations"])
+        fill = int(meta["fill"])
+        if fill:
+            self.state.accepted_theta = [tree["theta_buf"][:fill]]
+            self.state.accepted_dist = [tree["dist_buf"][:fill]]
+        self.eps_schedule = list(meta.get("eps_schedule", []))
+        if meta.get("done"):
+            self.result = ScenarioResult(**{
+                **dataclasses.asdict(self.result), **meta["result"],
+                "status": "resumed_complete", "device": str(self.device),
+            })
+            self.done = True
+        return float(meta["tolerance"])
+
+    def _calibrate(self, data) -> float:
+        """Pilot wave -> epsilon at the configured quantile (the campaign's
+        answer to the paper's hand-tuned per-country tolerances)."""
+        pk = jax.random.fold_in(self.key, 0x7FFFFFFF)  # never a wave index
+        d = np.asarray(self._pilot(pk, data))
+        d = d[np.isfinite(d)]
+        if d.size == 0:
+            raise ValueError(f"{self.sc.name}: pilot produced no finite distances")
+        return float(np.quantile(d, self.cfg.auto_quantile))
+
+    # ------------------------------------------------------------- driving
+    def launch(self):
+        """Dispatch one segment (async); syncs happen in complete_segment."""
+        seg = self.abc_cfg.max_runs - self.state.run_idx
+        if self.cfg.checkpoint_every:
+            seg = min(seg, self.cfg.checkpoint_every)
+        self._out = self.runner(self.key, self.state.run_idx, self.carry, seg)
+
+    def complete_segment(self):
+        out, self._out = self._out, None
+        waves = int(out.waves_done)
+        self.state.run_idx += waves
+        self.state.simulations += waves * self.cfg.batch_size
+        self.carry = self.runner.carry_of(out)
+        n_acc = int(out.n_accepted)
+        hit_target = n_acc >= self.cfg.target_accepted
+        exhausted = self.state.run_idx >= self.abc_cfg.max_runs
+        if hit_target or exhausted:
+            self.done = True
+            self.runner.harvest(out, self.state)
+            self._finalize(hit_target)
+        self._checkpoint(out, done=self.done)
+        if self.verbose:
+            print(f"[campaign] {self.sc.name}: run {self.state.run_idx}, "
+                  f"accepted {n_acc}/{self.cfg.target_accepted}")
+
+    def _finalize(self, hit_target: bool):
+        theta, dist = self.state.to_arrays()
+        spec = get_model(self.sc.model)
+        r = self.result
+        r.status = "ok" if hit_target else "budget_exhausted"
+        r.n_accepted = int(theta.shape[0])
+        r.runs = self.state.run_idx
+        r.simulations = self.state.simulations
+        r.acceptance_rate = r.n_accepted / max(r.simulations, 1)
+        r.wall_time_s = time.time() - self._t0
+        if theta.shape[0]:
+            r.posterior_mean = {
+                n: float(m) for n, m in zip(spec.param_names, theta.mean(axis=0))
+            }
+            r.posterior_std = {
+                n: float(s) for n, s in zip(spec.param_names, theta.std(axis=0))
+            }
+
+    def _checkpoint(self, out, done: bool):
+        fills = np.asarray(out.fill_counts)
+        meta = {
+            "scenario": dataclasses.asdict(self.sc),
+            "run_idx": self.state.run_idx,
+            "simulations": self.state.simulations,
+            "n_accepted": int(out.n_accepted),
+            "fill": int(fills[0]),
+            "tolerance": self.result.tolerance,
+            "eps_schedule": list(self.eps_schedule),
+            "done": done,
+        }
+        if done:
+            meta["result"] = dataclasses.asdict(self.result)
+        tree = {"theta_buf": out.theta_buf, "dist_buf": out.dist_buf}
+        # async: the D2H snapshot happens here, serialization + fsync on the
+        # checkpointer's writer thread — devices keep simulating the next
+        # segment while the previous one commits (run_campaign waits at the
+        # end so completion reports only cover durable checkpoints)
+        self.ckpt.save_async(self.state.run_idx, tree, meta)
+
+
+def run_campaign(cfg: CampaignConfig, verbose: bool = False) -> CampaignReport:
+    """Run (or resume) every scenario in the grid; returns the report and
+    writes it to `<out_dir>/campaign_report.json`."""
+    t0 = time.time()
+    devices = jax.devices()
+    cache = _ShapeCache(cfg)
+    runs = [
+        _ScenarioRun(sc, cfg, cache, devices[i % len(devices)], verbose=verbose)
+        for i, sc in enumerate(cfg.scenarios())
+    ]
+    active = [r for r in runs if not r.done]
+    while active:
+        for r in active:  # dispatch one segment each — overlaps across devices
+            r.launch()
+        for r in active:  # then sync in order
+            r.complete_segment()
+        active = [r for r in active if not r.done]
+    for r in runs:  # drain in-flight checkpoint writes (surfaces I/O errors)
+        if getattr(r, "ckpt", None) is not None:
+            r.ckpt.wait()
+
+    report = CampaignReport(
+        config=dataclasses.asdict(cfg),
+        scenarios=[r.result for r in runs],
+        wall_time_s=time.time() - t0,
+        compiled_shapes=cache.n_compiled,
+    )
+    path = report.save(Path(cfg.out_dir) / "campaign_report.json")
+    if verbose:
+        print(report.summary_table())
+        print(f"[campaign] report saved to {path}")
+    return report

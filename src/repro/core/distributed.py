@@ -28,7 +28,17 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.abc import ABCConfig, RunOutput, SimulatorFn, abc_run_batch, make_simulator
+from repro.core.abc import (
+    ABCConfig,
+    RunOutput,
+    SimulatorFn,
+    WaveLoopOutput,
+    WaveRunner,
+    abc_run_batch,
+    build_wave_loop,
+    make_simulator,
+    wave_capacity,
+)
 from repro.core.priors import UniformBoxPrior
 
 
@@ -47,6 +57,23 @@ def make_runner(mesh: Mesh, dataset, cfg: ABCConfig, style: str = "shard_map"):
     prior = get_model(cfg.model).prior()
     simulator = make_simulator(dataset, cfg)
     maker = make_shardmap_runner if style == "shard_map" else make_pjit_runner
+    return maker(mesh, prior, simulator, cfg)
+
+
+def make_wave_runner(mesh: Mesh, dataset, cfg: ABCConfig, style: str = "shard_map"):
+    """Sharded DEVICE-RESIDENT wave loop (the multi-device analogue of
+    `abc.make_wave_runner`): the whole accept/reject loop stays on the mesh,
+    and the host is re-entered only at target/budget/checkpoint boundaries.
+    """
+    from repro.epi.models import get_model
+
+    if style not in ("shard_map", "pjit"):
+        raise ValueError(f"unknown runner style {style!r}")
+    prior = get_model(cfg.model).prior()
+    simulator = make_simulator(dataset, cfg)
+    maker = (
+        make_shardmap_wave_runner if style == "shard_map" else make_pjit_wave_runner
+    )
     return maker(mesh, prior, simulator, cfg)
 
 
@@ -127,3 +154,105 @@ def make_shardmap_runner(
 
 def effective_chunk_flags(out: RunOutput) -> jax.Array:
     return out.chunk_flags
+
+
+# --------------------------------------------------------------------------
+# Device-resident wave loops, sharded
+# --------------------------------------------------------------------------
+
+def make_shardmap_wave_runner(
+    mesh: Mesh,
+    prior: UniformBoxPrior,
+    simulator: SimulatorFn,
+    cfg: ABCConfig,
+) -> WaveRunner:
+    """Per-device replica wave loop: each device runs its own while_loop over
+    local waves with a local accept buffer; the ONLY steady-state collective
+    is the per-wave psum of the scalar accept count that feeds the shared
+    stop condition. Keying matches the legacy shard_map runner exactly:
+    wave w on device d draws from fold_in(fold_in(key, run_idx0 + w), d).
+    """
+    axes = data_axes(mesh)
+    n_dev = 1
+    for a in axes:
+        n_dev *= mesh.shape[a]
+    if cfg.batch_size % n_dev:
+        raise ValueError(f"batch_size {cfg.batch_size} not divisible by {n_dev} devices")
+    local_b = cfg.batch_size // n_dev
+    # a device can soak up to (target - 1) of the global accepts plus its own
+    # final wave, so the per-shard capacity mirrors the single-device bound
+    cap = wave_capacity(cfg, local_b)
+
+    loop = build_wave_loop(
+        prior,
+        lambda th, k, _data: simulator(th, k),
+        cfg,
+        batch_size=local_b,
+        capacity=cap,
+        fold_axis=lambda: jax.lax.axis_index(axes),
+        count_all=lambda c: jax.lax.psum(c, axes),
+    )
+
+    @partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(P(), P(), P(axes), P(axes), P(), P(axes), P(), P(), P()),
+        out_specs=WaveLoopOutput(P(axes), P(axes), P(), P(), P(axes)),
+    )
+    def sharded(key, run_idx0, theta_buf, dist_buf, n0, fills, max_waves,
+                tolerance, data):
+        out = loop(
+            key, run_idx0, theta_buf, dist_buf, n0, fills[0], max_waves,
+            tolerance, data,
+        )
+        return out
+
+    def fn(key, run_idx0, theta_buf, dist_buf, n0, fills, max_waves,
+           tolerance, data):
+        # `data` is always None here (the simulator baked the dataset in);
+        # pass a dummy zero so every shard_map input is an array
+        return sharded(
+            key, run_idx0, theta_buf, dist_buf, n0, fills, max_waves,
+            tolerance, jnp.zeros((), jnp.int32),
+        )
+
+    return WaveRunner(
+        fn=jax.jit(fn, donate_argnums=(2, 3)),
+        capacity=cap,
+        shards=n_dev,
+        n_params=prior.dim,
+        cfg=cfg,
+    )
+
+
+def make_pjit_wave_runner(
+    mesh: Mesh,
+    prior: UniformBoxPrior,
+    simulator: SimulatorFn,
+    cfg: ABCConfig,
+) -> WaveRunner:
+    """GSPMD wave loop: one logical batch per wave, sharded over the mesh by
+    sharding hints on the per-wave batch arrays; the accept buffers stay
+    replicated. Sample values are identical to the single-device wave loop
+    (constraints never change values), so this style is stream-compatible
+    with `run_abc`'s default device loop.
+    """
+    axes = data_axes(mesh)
+
+    def shard_hint(x):
+        spec = P(axes, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    loop = build_wave_loop(
+        prior,
+        lambda th, k, _data: simulator(th, k),
+        cfg,
+        shard_hint=shard_hint,
+    )
+    return WaveRunner(
+        fn=jax.jit(loop, donate_argnums=(2, 3)),
+        capacity=wave_capacity(cfg),
+        shards=1,
+        n_params=prior.dim,
+        cfg=cfg,
+    )

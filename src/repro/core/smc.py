@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.abc import ABCConfig, make_simulator
+from repro.core.abc import ABCConfig, compact_accepted, make_simulator
 from repro.core.posterior import Posterior
 from repro.core.priors import UniformBoxPrior
 from repro.epi.data import CountryData
@@ -37,11 +37,71 @@ class SMCConfig:
     min_tolerance: float = 0.0
     #: registry name of the compartmental model to infer (repro.epi.models)
     model: str = "siard"
+    #: "host": numpy proposal loop with one device sync per wave (original
+    #: structure). "device": each round's propose -> simulate -> accept loop
+    #: is a single jitted lax.while_loop that fills the particle buffer
+    #: on-device and syncs once per round. Streams differ (jax vs numpy RNG)
+    #: but both are seeded and deterministic; statistical behaviour is pinned
+    #: by tests/test_posterior_recovery.py.
+    wave_loop: str = "host"
+
+    def __post_init__(self):
+        if self.wave_loop not in ("host", "device"):
+            raise ValueError(f"unknown wave_loop {self.wave_loop!r}")
 
 
 def _weighted_var(theta: np.ndarray, w: np.ndarray) -> np.ndarray:
     mu = np.average(theta, axis=0, weights=w)
     return np.average((theta - mu) ** 2, axis=0, weights=w) + 1e-12
+
+
+def make_smc_round_fn(simulator, prior: UniformBoxPrior, cfg: SMCConfig):
+    """Device-resident SMC proposal round (the SMC face of the ABC device
+    wave loop): a jitted lax.while_loop that resamples parents by weight,
+    perturbs, simulates and compacts acceptances into a fixed particle
+    buffer until `n_particles` proposals are accepted or the wave budget is
+    spent. Proposal semantics match the host loop (first-accepted-first, out
+    of bounds / NaN rejected); only the RNG stream differs (threefry here).
+
+    round_fn(key, particles [n,p], log_weights [n], sigma [p], eps,
+             max_waves) -> (theta_buf, dist_buf, n_accepted, waves_done)
+    """
+    B, n_p = cfg.batch_size, cfg.n_particles
+    lo = jnp.asarray(prior.lows, jnp.float32)
+    hi = jnp.asarray(prior.highs, jnp.float32)
+    cap = n_p + B  # a final wave's overshoot always fits
+
+    def round_fn(key, particles, log_weights, sigma, eps, max_waves):
+        p = particles.shape[1]
+
+        def cond(carry):
+            w, n, *_ = carry
+            return jnp.logical_and(n < n_p, w < max_waves)
+
+        def body(carry):
+            w, n, th_buf, d_buf = carry
+            k = jax.random.fold_in(key, w)
+            k_par, k_pert, k_sim = jax.random.split(k, 3)
+            parents = jax.random.categorical(k_par, log_weights, shape=(B,))
+            prop = particles[parents] + sigma * jax.random.normal(
+                k_pert, (B, p), jnp.float32
+            )
+            inside = jnp.all((prop >= lo) & (prop <= hi), axis=-1)
+            d = simulator(prop, k_sim)
+            d = jnp.where(jnp.isnan(d) | ~inside, jnp.inf, d)
+            th_buf, d_buf, n = compact_accepted(
+                th_buf, d_buf, n, prop, d, d <= eps, cap
+            )
+            return (w + 1, n, th_buf, d_buf)
+
+        th0 = jnp.zeros((cap, p), jnp.float32)
+        d0 = jnp.full((cap,), jnp.inf, jnp.float32)
+        w, n, th_buf, d_buf = jax.lax.while_loop(
+            cond, body, (jnp.int32(0), jnp.int32(0), th0, d0)
+        )
+        return th_buf, d_buf, n, w
+
+    return jax.jit(round_fn)
 
 
 def run_smc_abc(
@@ -68,6 +128,11 @@ def run_smc_abc(
     )
     simulator = make_simulator(dataset, abc_cfg)
     sim_jit = jax.jit(simulator)
+    round_fn = (
+        make_smc_round_fn(simulator, prior, cfg)
+        if cfg.wave_loop == "device"
+        else None
+    )
     lo = np.asarray(prior.lows, np.float32)
     hi = np.asarray(prior.highs, np.float32)
     t0 = time.time()
@@ -90,28 +155,45 @@ def run_smc_abc(
         sigma = np.sqrt(cfg.kernel_scale * _weighted_var(particles, weights))
         new_theta = np.zeros_like(particles)
         new_dist = np.full(cfg.n_particles, np.inf, np.float32)
-        new_parent_logk = np.zeros(cfg.n_particles, np.float32)
         n_done = 0
-        for wave in range(cfg.max_waves_per_round):
-            # propose a full batch: resample parents by weight, gaussian perturb
-            parents = rng.choice(cfg.n_particles, size=cfg.batch_size, p=weights)
-            prop = particles[parents] + rng.normal(
-                0.0, sigma, size=(cfg.batch_size, particles.shape[1])
-            ).astype(np.float32)
-            inside = np.all((prop >= lo) & (prop <= hi), axis=1)
-            key, kw = jax.random.split(key)
-            d = np.asarray(sim_jit(jnp.asarray(prop), kw))
-            d = np.where(np.isnan(d) | ~inside, np.inf, d)
-            sims += cfg.batch_size
-            ok = np.nonzero(d <= eps)[0]
-            take = ok[: cfg.n_particles - n_done]
-            if take.size:
-                sl = slice(n_done, n_done + take.size)
-                new_theta[sl] = prop[take]
-                new_dist[sl] = d[take]
-                n_done += take.size
-            if n_done >= cfg.n_particles:
-                break
+        if round_fn is not None:
+            # device-resident round: the whole propose/simulate/accept loop
+            # runs in one jitted while_loop; a single host sync per round
+            key, k_round = jax.random.split(key)
+            logw = np.log(np.maximum(weights, 1e-38)).astype(np.float32)
+            th_buf, d_buf, n_acc, waves = round_fn(
+                k_round,
+                jnp.asarray(particles),
+                jnp.asarray(logw),
+                jnp.asarray(sigma, jnp.float32),
+                np.float32(eps),
+                np.int32(cfg.max_waves_per_round),
+            )
+            n_done = min(int(n_acc), cfg.n_particles)
+            sims += int(waves) * cfg.batch_size
+            new_theta[:n_done] = np.asarray(th_buf)[:n_done]
+            new_dist[:n_done] = np.asarray(d_buf)[:n_done]
+        else:
+            for wave in range(cfg.max_waves_per_round):
+                # propose a full batch: resample parents by weight, perturb
+                parents = rng.choice(cfg.n_particles, size=cfg.batch_size, p=weights)
+                prop = particles[parents] + rng.normal(
+                    0.0, sigma, size=(cfg.batch_size, particles.shape[1])
+                ).astype(np.float32)
+                inside = np.all((prop >= lo) & (prop <= hi), axis=1)
+                key, kw = jax.random.split(key)
+                d = np.asarray(sim_jit(jnp.asarray(prop), kw))
+                d = np.where(np.isnan(d) | ~inside, np.inf, d)
+                sims += cfg.batch_size
+                ok = np.nonzero(d <= eps)[0]
+                take = ok[: cfg.n_particles - n_done]
+                if take.size:
+                    sl = slice(n_done, n_done + take.size)
+                    new_theta[sl] = prop[take]
+                    new_dist[sl] = d[take]
+                    n_done += take.size
+                if n_done >= cfg.n_particles:
+                    break
         if n_done < cfg.n_particles:
             # could not refresh the full population at this tolerance; keep
             # the best of old+new to stay robust (documented fallback)

@@ -136,6 +136,12 @@ def list_datasets() -> Tuple[str, ...]:
     return tuple(sorted(_COUNTRY_META)) + ("synthetic_small",)
 
 
+def list_countries() -> Tuple[str, ...]:
+    """The bundled country series (the paper's three-country study grid) —
+    the default dataset axis of a campaign (repro.core.campaign)."""
+    return tuple(sorted(_COUNTRY_META))
+
+
 def get_dataset(
     name: str,
     num_days: int = 49,

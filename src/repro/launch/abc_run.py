@@ -11,6 +11,13 @@ model, with multi-device sharding, checkpoint/resume and backend selection.
     # ground truth is generated from the chosen model's spec
     PYTHONPATH=src python -m repro.launch.abc_run --model seir \
         --dataset synthetic_small --auto-tolerance 1e-3 --batch 8192
+
+    # campaign mode: fan a dataset x model x backend x seed grid across the
+    # host's devices, one compiled wave loop per unique shape, per-scenario
+    # checkpoint/resume and one aggregated report (see README)
+    PYTHONPATH=src python -m repro.launch.abc_run --campaign \
+        --datasets italy new_zealand usa --models siard seiard \
+        --auto-tolerance 1e-3 --accept 100 --out experiments/campaigns/demo
 """
 
 from __future__ import annotations
@@ -20,10 +27,40 @@ import argparse
 import jax
 
 from repro.core.abc import ABCConfig, ABCState, run_abc
-from repro.core.distributed import make_runner
+from repro.core.distributed import make_runner, make_wave_runner
 from repro.epi.data import get_dataset
 from repro.epi.models import list_models
 from repro.launch.mesh import make_host_mesh
+
+
+def run_campaign_cli(args, parser):
+    from repro.core.campaign import CampaignConfig, run_campaign
+
+    # the campaign grid reads ONLY the plural flags; refuse the singular ones
+    # rather than silently running the wrong grid
+    for flag, value in (("--dataset", args.dataset), ("--model", args.model),
+                        ("--backend", args.backend), ("--seed", args.seed)):
+        if value != parser.get_default(flag.lstrip("-")):
+            parser.error(
+                f"{flag} has no effect with --campaign; use the grid flag "
+                f"{flag}s instead"
+            )
+    cfg = CampaignConfig(
+        datasets=tuple(args.datasets),
+        models=tuple(args.models),
+        backends=tuple(args.backends),
+        seeds=tuple(args.seeds),
+        batch_size=args.batch,
+        num_days=args.days,
+        target_accepted=args.accept,
+        max_runs=args.max_runs,
+        tolerance=None if args.auto_tolerance else args.tolerance,
+        auto_quantile=args.auto_tolerance or 1e-3,
+        out_dir=args.out,
+        checkpoint_every=args.checkpoint_every,
+    )
+    report = run_campaign(cfg, verbose=True)
+    return report
 
 
 def main(argv=None):
@@ -50,7 +87,31 @@ def main(argv=None):
     ap.add_argument("--save-posterior", default="")
     ap.add_argument("--multi-device", action="store_true",
                     help="shard_map over all host devices")
+    ap.add_argument("--wave-loop", default="auto",
+                    choices=["auto", "host", "device"],
+                    help="per-wave host sync (host) vs one device-resident "
+                         "lax.while_loop over all waves (device)")
+    # campaign mode -------------------------------------------------------
+    ap.add_argument("--campaign", action="store_true",
+                    help="run a dataset x model x backend x seed grid with "
+                         "per-scenario checkpoints and one aggregated report")
+    ap.add_argument("--datasets", nargs="+",
+                    default=["italy", "new_zealand", "usa"],
+                    help="campaign dataset grid axis")
+    ap.add_argument("--models", nargs="+", default=["siard"],
+                    help="campaign model grid axis")
+    ap.add_argument("--backends", nargs="+", default=["xla_fused"],
+                    help="campaign backend grid axis")
+    ap.add_argument("--seeds", nargs="+", type=int, default=[0],
+                    help="campaign seed grid axis")
+    ap.add_argument("--out", default="experiments/campaigns/default",
+                    help="campaign output directory (checkpoints + report)")
+    ap.add_argument("--checkpoint-every", type=int, default=32,
+                    help="waves per device segment between campaign checkpoints")
     args = ap.parse_args(argv)
+
+    if args.campaign:
+        return run_campaign_cli(args, ap)
 
     ds = get_dataset(args.dataset, num_days=args.days, model=args.model)
     tolerance = args.tolerance
@@ -74,11 +135,16 @@ def main(argv=None):
         backend=args.backend,
         max_runs=args.max_runs,
         model=args.model,
+        wave_loop=args.wave_loop,
     )
     run_fn = None
+    wave_runner = None
     if args.multi_device:
         mesh = make_host_mesh(model=1)
-        run_fn = make_runner(mesh, ds, cfg)
+        if args.wave_loop == "device":
+            wave_runner = make_wave_runner(mesh, ds, cfg)
+        else:
+            run_fn = make_runner(mesh, ds, cfg)
 
     state = None
     if args.state:
@@ -91,6 +157,7 @@ def main(argv=None):
 
     post = run_abc(
         ds, cfg, key=args.seed, state=state, run_fn=run_fn,
+        wave_runner=wave_runner,
         checkpoint_every=25 if args.state else 0,
         checkpoint_path=args.state or None, verbose=True,
     )

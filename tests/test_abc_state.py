@@ -1,0 +1,80 @@
+"""ABCState checkpoint durability: atomic save, loud rejection of corruption.
+
+A campaign interrupted mid-save must never leave a truncated checkpoint at
+the target path (satellite of the campaign subsystem: resume reads these
+files unattended, so a silent partial read would poison a whole scenario).
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.abc import ABCState
+
+
+def _state(n=7, p=4):
+    st = ABCState(run_idx=3, simulations=3000, n_params=p)
+    rng = np.random.default_rng(0)
+    st.accepted_theta = [rng.normal(size=(n, p)).astype(np.float32)]
+    st.accepted_dist = [rng.random(n).astype(np.float32)]
+    return st
+
+
+def test_save_load_roundtrip(tmp_path):
+    path = str(tmp_path / "state.npz")
+    st = _state()
+    st.save(path)
+    back = ABCState.load(path)
+    assert back.run_idx == 3 and back.simulations == 3000
+    np.testing.assert_array_equal(back.to_arrays()[0], st.to_arrays()[0])
+    np.testing.assert_array_equal(back.to_arrays()[1], st.to_arrays()[1])
+
+
+def test_save_leaves_no_temp_files(tmp_path):
+    path = str(tmp_path / "state.npz")
+    _state().save(path)
+    _state(n=9).save(path)  # overwrite goes through rename too
+    assert sorted(os.listdir(tmp_path)) == ["state.npz"]
+
+
+def test_truncated_checkpoint_rejected_with_clear_error(tmp_path):
+    path = str(tmp_path / "state.npz")
+    _state().save(path)
+    raw = open(path, "rb").read()
+    with open(path, "wb") as f:  # simulate a non-atomic partial write
+        f.write(raw[: len(raw) // 2])
+    with pytest.raises(ValueError, match="corrupt or incomplete"):
+        ABCState.load(path)
+
+
+def test_garbage_checkpoint_rejected(tmp_path):
+    path = str(tmp_path / "state.npz")
+    with open(path, "wb") as f:
+        f.write(b"this is not an npz file")
+    with pytest.raises(ValueError, match="corrupt or incomplete"):
+        ABCState.load(path)
+
+
+def test_missing_arrays_rejected(tmp_path):
+    path = str(tmp_path / "state.npz")
+    np.savez(open(path, "wb"), run_idx=1)  # valid zip, wrong contents
+    with pytest.raises(ValueError, match="corrupt or incomplete"):
+        ABCState.load(path)
+
+
+def test_crash_during_save_preserves_previous_checkpoint(tmp_path, monkeypatch):
+    """If serialization dies mid-way, the previous complete file survives and
+    the temp file is cleaned up."""
+    path = str(tmp_path / "state.npz")
+    _state(n=5).save(path)
+    good = open(path, "rb").read()
+
+    def boom(*a, **kw):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(np, "savez", boom)
+    with pytest.raises(OSError):
+        _state(n=9).save(path)
+    assert open(path, "rb").read() == good
+    assert sorted(os.listdir(tmp_path)) == ["state.npz"]

@@ -1,0 +1,128 @@
+"""Campaign subsystem: grid fan-out, compile reuse, checkpoint/resume,
+aggregated report (the acceptance surface of the multi-scenario runner)."""
+
+import dataclasses
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.campaign import CampaignConfig, Scenario, run_campaign
+from repro.core.abc import ABCConfig, run_abc
+from repro.epi.data import get_dataset
+
+
+def _cfg(tmp_path, **kw):
+    base = dict(
+        datasets=("italy", "new_zealand", "usa"),
+        models=("siard", "seiard"),
+        backends=("xla_fused",),
+        seeds=(0,),
+        batch_size=1024,
+        num_days=10,
+        target_accepted=6,
+        auto_quantile=0.02,
+        pilot_size=1024,
+        max_runs=40,
+        out_dir=str(tmp_path / "camp"),
+        checkpoint_every=8,
+    )
+    base.update(kw)
+    return CampaignConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def campaign(tmp_path_factory):
+    """One 3-countries x 2-models campaign shared by the assertions below."""
+    tmp = tmp_path_factory.mktemp("campaign")
+    cfg = _cfg(tmp)
+    report = run_campaign(cfg)
+    return cfg, report
+
+
+def test_campaign_completes_all_scenarios(campaign):
+    cfg, report = campaign
+    assert len(report.scenarios) == 6  # 3 countries x 2 models
+    for r in report.scenarios:
+        assert r.status == "ok", (r.name, r.status, r.detail)
+        assert r.n_accepted >= cfg.target_accepted
+        assert r.runs >= 1
+        assert r.simulations == r.runs * cfg.batch_size
+        assert r.posterior_mean and r.posterior_std
+        assert len(r.eps_schedule) >= 1 and r.tolerance == r.eps_schedule[-1]
+
+
+def test_campaign_reuses_compiled_shapes(campaign):
+    _, report = campaign
+    # 2 models x 1 (days, batch, backend) shape -> 2 compiles for 6 scenarios
+    assert report.compiled_shapes == 2
+
+
+def test_campaign_writes_report_and_checkpoints(campaign):
+    cfg, report = campaign
+    out = Path(cfg.out_dir)
+    payload = json.loads((out / "campaign_report.json").read_text())
+    assert len(payload["scenarios"]) == 6
+    for r in report.scenarios:
+        ckpt = Path(r.checkpoint_dir)
+        assert ckpt.is_dir() and list(ckpt.glob("step_*")), r.name
+    assert "scenario" in report.summary_table()
+    assert "6/6 scenarios complete" in report.summary_table()
+
+
+def test_campaign_resumes_completed_scenarios_instantly(campaign):
+    cfg, _ = campaign
+    report2 = run_campaign(cfg)
+    for r in report2.scenarios:
+        assert r.status == "resumed_complete", (r.name, r.status)
+        assert r.n_accepted >= cfg.target_accepted
+
+
+def test_campaign_scenario_matches_solo_run(campaign):
+    """A campaign cell is the SAME inference as a solo run_abc with that
+    scenario's seed and tolerance — fanning out must not change streams."""
+    cfg, report = campaign
+    r = next(s for s in report.scenarios if s.dataset == "italy"
+             and s.model == "siard")
+    ds = get_dataset("italy", num_days=cfg.num_days, model="siard")
+    solo = run_abc(
+        ds,
+        ABCConfig(
+            batch_size=cfg.batch_size, tolerance=r.tolerance,
+            target_accepted=cfg.target_accepted, strategy="outfeed",
+            chunk_size=cfg.batch_size, max_runs=cfg.max_runs,
+            num_days=cfg.num_days, backend="xla_fused", model="siard",
+            wave_loop="device",
+        ),
+        key=0,
+    )
+    assert len(solo) == r.n_accepted
+    assert solo.runs == r.runs
+    np.testing.assert_allclose(
+        solo.theta.mean(axis=0),
+        np.asarray(list(r.posterior_mean.values()), np.float32),
+        rtol=1e-5,
+    )
+
+
+def test_campaign_skips_incompatible_cells(tmp_path):
+    """sir observes (I, R); the bundled country series are (A, R, D) — the
+    cell must be recorded as skipped, not crash the campaign."""
+    cfg = _cfg(tmp_path, datasets=("italy",), models=("sir", "siard"),
+               max_runs=20)
+    report = run_campaign(cfg)
+    by_model = {r.model: r for r in report.scenarios}
+    assert by_model["sir"].status == "skipped"
+    assert "observes" in by_model["sir"].detail
+    assert by_model["siard"].status == "ok"
+
+
+def test_scenario_grid_expansion():
+    cfg = CampaignConfig(datasets=("a", "b"), models=("m",), seeds=(0, 1),
+                         backends=("xla", "xla_fused"))
+    grid = cfg.scenarios()
+    assert len(grid) == 2 * 1 * 2 * 2
+    assert grid[0] == Scenario(dataset="a", model="m", backend="xla", seed=0)
+    names = [s.name for s in grid]
+    assert len(set(names)) == len(names)

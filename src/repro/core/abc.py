@@ -50,10 +50,11 @@ import numpy as np
 
 from repro.core.distances import DISTANCES
 from repro.core.posterior import Posterior
-from repro.core.priors import UniformBoxPrior
+from repro.core.priors import UniformBoxPrior, schedule_prior
 from repro.epi import engine
 from repro.epi.data import CountryData
 from repro.epi.models import get_model
+from repro.epi.spec import InterventionSchedule
 
 Array = jax.Array
 
@@ -80,6 +81,15 @@ class ABCConfig:
     #: host). The device loop yields the same same-seed accepted set as the
     #: host outfeed path (pinned by tests/test_wave_loop.py).
     wave_loop: str = "auto"
+    #: optional piecewise-constant intervention schedule (repro.epi.spec):
+    #: theta widens with per-window scale columns and the simulators apply
+    #: the day-effective parameters; None keeps the constant-theta path
+    #: bit-identical to previous releases
+    schedule: Optional[InterventionSchedule] = None
+    #: Pallas dispatch: True forces the interpreter (CPU correctness mode),
+    #: False forces a compiled kernel, None auto-selects by backend
+    #: (interpret only when jax runs on CPU)
+    interpret: Optional[bool] = None
 
     def __post_init__(self):
         if self.strategy not in ("outfeed", "topk"):
@@ -114,21 +124,46 @@ class RunOutput(NamedTuple):
     accept_count: Array  # [] int32 — global accepted this run
 
 
+def run_param_names(cfg: ABCConfig, spec) -> Tuple[str, ...]:
+    """Posterior column names: the model's params plus any window scales."""
+    if cfg.schedule is not None and not cfg.schedule.is_empty:
+        return cfg.schedule.param_names(spec)
+    return spec.param_names
+
+
 SimulatorFn = Callable[[Array, Array], Array]  # (theta [B,p], key) -> dist [B]
 
-#: traced per-scenario data threaded through a parametric simulator:
-#: (observed [n_obs, T], population, a0, r0, d0)
-ScenarioData = Tuple[Array, Array, Array, Array, Array]
+
+class ScenarioData(NamedTuple):
+    """Traced per-scenario data threaded through a parametric simulator.
+
+    Everything here is a runtime value, never a compile constant: the wave
+    loop compiled for one scenario shape serves every (dataset, intervention
+    timing, scale bounds, tolerance) combination of that shape. The
+    intervention fields make lockdown-day x scale campaign grids share one
+    compilation: breakpoint days are an i32 vector, and the (possibly
+    pinned) per-window scale bounds ride in the prior box arrays.
+    """
+
+    observed: Array  # [n_obs, T] f32
+    population: Array  # f32 scalar
+    a0: Array  # f32 scalar
+    r0: Array  # f32 scalar
+    d0: Array  # f32 scalar
+    breakpoints: Array  # [n_windows] i32 (length 0 without a schedule)
+    prior_lows: Array  # [p_total] f32 — the (widened) sampling box
+    prior_highs: Array  # [p_total] f32
 
 
 def make_parametric_simulator(spec, cfg: ABCConfig):
     """theta -> distance with the *dataset as traced arguments*.
 
     Returns `sim(theta [B,p], key, data: ScenarioData) -> dist [B]`. Because
-    the observed series and the (population, a0, r0, d0) scalars are inputs
-    rather than baked-in constants, one jitted computation serves every
-    dataset of the same (model, num_days, batch) shape — the campaign runner
-    relies on this to compile once per shape and sweep countries/seeds.
+    the observed series, the (population, a0, r0, d0) scalars and any
+    intervention breakpoint days are inputs rather than baked-in constants,
+    one jitted computation serves every dataset/scenario of the same
+    (model, num_days, batch, schedule-shape) — the campaign runner relies on
+    this to compile once per shape and sweep countries/seeds/interventions.
 
     The "pallas" backend bakes its scalars as static kernel constants and
     therefore cannot be parameterized this way (use `make_simulator`).
@@ -143,29 +178,44 @@ def make_parametric_simulator(spec, cfg: ABCConfig):
         )
     if cfg.backend == "xla_fused" and cfg.distance != "euclidean":
         raise ValueError("xla_fused backend implements euclidean only")
+    schedule = cfg.schedule
 
     def simulator(theta: Array, key: Array, data: ScenarioData) -> Array:
-        observed, population, a0, r0, d0 = data
+        observed, population, a0, r0, d0 = data[:5]
+        breakpoints = data.breakpoints if isinstance(data, ScenarioData) else None
         mcfg = EpiModelConfig(
             population=population, num_days=cfg.num_days, a0=a0, r0=r0, d0=d0
         )
         if cfg.backend == "xla":
-            sim = engine.simulate_observed(spec, theta, key, mcfg)
+            sim = engine.simulate_observed(
+                spec, theta, key, mcfg, schedule, breakpoints
+            )
             return dist_fn(sim, observed)
-        d, _ = engine.simulate_observed_lowmem(spec, theta, key, mcfg, observed)
+        d, _ = engine.simulate_observed_lowmem(
+            spec, theta, key, mcfg, observed, schedule, breakpoints
+        )
         return d
 
     return simulator
 
 
-def scenario_data(dataset: CountryData, cfg: ABCConfig) -> ScenarioData:
+def scenario_data(
+    dataset: CountryData, cfg: ABCConfig, prior: Optional[UniformBoxPrior] = None
+) -> ScenarioData:
     """Pack a dataset into the traced-argument tuple of a parametric simulator."""
-    return (
-        jnp.asarray(dataset.observed[:, : cfg.num_days], jnp.float32),
-        jnp.float32(dataset.population),
-        jnp.float32(dataset.a0),
-        jnp.float32(dataset.r0),
-        jnp.float32(dataset.d0),
+    prior = prior or schedule_prior(get_model(cfg.model), cfg.schedule)
+    breakpoints = (
+        cfg.schedule.breakpoints if cfg.schedule is not None else ()
+    )
+    return ScenarioData(
+        observed=jnp.asarray(dataset.observed[:, : cfg.num_days], jnp.float32),
+        population=jnp.float32(dataset.population),
+        a0=jnp.float32(dataset.a0),
+        r0=jnp.float32(dataset.r0),
+        d0=jnp.float32(dataset.d0),
+        breakpoints=jnp.asarray(breakpoints, jnp.int32),
+        prior_lows=jnp.asarray(prior.lows, jnp.float32),
+        prior_highs=jnp.asarray(prior.highs, jnp.float32),
     )
 
 
@@ -173,7 +223,9 @@ def make_simulator(dataset: CountryData, cfg: ABCConfig) -> SimulatorFn:
     """Build the batched theta -> distance function for the chosen backend.
 
     The model spec comes from `cfg.model`; the dataset must hold series for
-    the same observed channels (checked here, not at run time).
+    the same observed channels (checked here, not at run time). With
+    `cfg.schedule`, theta must carry the widened scale columns
+    (`schedule_prior(spec, cfg.schedule)` samples the right layout).
     """
     spec = get_model(cfg.model)
     if not dataset.compatible_with(spec):
@@ -209,6 +261,8 @@ def make_simulator(dataset: CountryData, cfg: ABCConfig) -> SimulatorFn:
                 r0=mcfg.r0,
                 d0=mcfg.d0,
                 model=spec,
+                schedule=cfg.schedule,
+                interpret=cfg.interpret,
             )
 
     return simulator
@@ -320,7 +374,14 @@ def wave_loop_body(
         if fold_axis is not None:
             k = jax.random.fold_in(k, fold_axis())
         k_prior, k_sim = jax.random.split(k)
-        theta = prior.sample(k_prior, (batch_size,))
+        if isinstance(data, ScenarioData):
+            # sample inside the scenario's traced box (bit-identical math to
+            # the baked path) so one compiled loop serves every scenario of
+            # this shape, including swept intervention-scale bounds
+            theta = prior.sample(k_prior, (batch_size,),
+                                 data.prior_lows, data.prior_highs)
+        else:
+            theta = prior.sample(k_prior, (batch_size,))
         dist = sim_call(theta, k_sim, data)
         dist = jnp.where(jnp.isnan(dist), jnp.inf, dist)
         accept = dist <= tolerance
@@ -645,7 +706,7 @@ def run_abc(
     spec = get_model(cfg.model)
     if isinstance(key, int):
         key = jax.random.PRNGKey(key)
-    prior = prior or spec.prior()
+    prior = prior or schedule_prior(spec, cfg.schedule)
     state = state or ABCState()
     if state.n_params is None:
         state.n_params = prior.dim
@@ -702,7 +763,7 @@ def run_abc(
         theta=theta,
         distances=dist,
         tolerance=cfg.tolerance,
-        param_names=spec.param_names,
+        param_names=run_param_names(cfg, spec),
         runs=state.run_idx,
         simulations=state.simulations,
         wall_time_s=time.time() - t0,
@@ -758,7 +819,7 @@ def _run_abc_device(
         theta=theta,
         distances=dist,
         tolerance=cfg.tolerance,
-        param_names=spec.param_names,
+        param_names=run_param_names(cfg, spec),
         runs=state.run_idx,
         simulations=state.simulations,
         wall_time_s=time.time() - t0,
@@ -785,7 +846,7 @@ def calibrate_tolerance(
     """
     if isinstance(key, int):
         key = jax.random.PRNGKey(key)
-    prior = prior or get_model(cfg.model).prior()
+    prior = prior or schedule_prior(get_model(cfg.model), cfg.schedule)
     simulator = jax.jit(make_simulator(dataset, cfg))
     per_wave = min(n_pilot, cfg.batch_size)
     dists = []

@@ -46,15 +46,19 @@ from repro.checkpoint import Checkpointer
 from repro.core.abc import (
     ABCConfig,
     ABCState,
+    ScenarioData,
     WaveRunner,
     build_wave_loop,
     make_parametric_simulator,
     make_simulator,
+    run_param_names,
     scenario_data,
     wave_capacity,
 )
+from repro.core.priors import schedule_prior
 from repro.epi.data import get_dataset
 from repro.epi.models import get_model
+from repro.epi.spec import InterventionSchedule
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,10 +69,16 @@ class Scenario:
     model: str
     backend: str = "xla_fused"
     seed: int = 0
+    #: optional intervention schedule (lockdown-day x scale sweeps); cells
+    #: whose schedules share a SHAPE share one compiled wave loop
+    schedule: Optional[InterventionSchedule] = None
 
     @property
     def name(self) -> str:
-        return f"{self.dataset}__{self.model}__{self.backend}__s{self.seed}"
+        base = f"{self.dataset}__{self.model}__{self.backend}__s{self.seed}"
+        if self.schedule is not None and not self.schedule.is_empty:
+            base += f"__{self.schedule.tag()}"
+        return base
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +89,14 @@ class CampaignConfig:
     models: Tuple[str, ...] = ("siard",)
     backends: Tuple[str, ...] = ("xla_fused",)
     seeds: Tuple[int, ...] = (0,)
+    #: intervention-scenario grid axis: each entry is an InterventionSchedule
+    #: or None (the constant-theta cell). Schedules sharing a shape — same
+    #: window count and scaled params — share ONE compiled wave loop, because
+    #: breakpoint days and scale bounds are traced scenario data; sweeping
+    #: lockdown-day x post-lockdown-scale grids never re-traces.
+    interventions: Tuple[Optional[InterventionSchedule], ...] = (None,)
+    #: Pallas dispatch override for backend="pallas" cells (ABCConfig.interpret)
+    interpret: Optional[bool] = None
     # per-scenario ABC shape (shared across the grid so compilations are
     # reusable; the tolerance is per-scenario)
     batch_size: int = 8192
@@ -102,11 +120,12 @@ class CampaignConfig:
 
     def scenarios(self) -> List[Scenario]:
         return [
-            Scenario(dataset=d, model=m, backend=b, seed=s)
+            Scenario(dataset=d, model=m, backend=b, seed=s, schedule=iv)
             for d in self.datasets
             for m in self.models
             for b in self.backends
             for s in self.seeds
+            for iv in self.interventions
         ]
 
     def abc_config(self, sc: Scenario, tolerance: float) -> ABCConfig:
@@ -121,6 +140,8 @@ class CampaignConfig:
             backend=sc.backend,
             model=sc.model,
             wave_loop="device",
+            schedule=sc.schedule,
+            interpret=self.interpret,
         )
 
 
@@ -236,8 +257,15 @@ class _ShapeCache:
 
     def key_of(self, sc: Scenario) -> tuple:
         key = (sc.model, self.cfg.num_days, self.cfg.batch_size, sc.backend)
+        # only the schedule's SHAPE is compile-relevant: breakpoint days and
+        # scale bounds are traced, so a lockdown-day x scale sweep maps to
+        # one cache entry
+        if sc.schedule is not None and not sc.schedule.is_empty:
+            key += (sc.schedule.n_windows, sc.schedule.tv_params)
         if sc.backend == "pallas":
-            key += (sc.dataset,)
+            # pallas bakes the dataset scalars (and schedule constants) into
+            # the kernel — the documented per-dataset compile exception
+            key += (sc.dataset, sc.schedule)
         return key
 
     def get(self, sc: Scenario, dataset) -> tuple:
@@ -245,7 +273,7 @@ class _ShapeCache:
         if key in self._entries:
             return self._entries[key]
         spec = get_model(sc.model)
-        prior = spec.prior()
+        prior = schedule_prior(spec, sc.schedule)
         # the loop's shape (batch, capacity, target) is tolerance-independent;
         # epsilon is a traced argument, so one compile serves every scenario
         shape_cfg = self.cfg.abc_config(sc, tolerance=1.0)
@@ -259,8 +287,15 @@ class _ShapeCache:
         fn = jax.jit(loop, donate_argnums=(2, 3))
 
         def pilot(key, data):
+            # sample within the scenario's traced box (scale bounds may be
+            # swept across cells sharing this cache entry)
+            bounds = (
+                (data.prior_lows, data.prior_highs)
+                if isinstance(data, ScenarioData)
+                else (None, None)
+            )
             theta = prior.sample(jax.random.fold_in(key, 0),
-                                 (self.cfg.pilot_size,))
+                                 (self.cfg.pilot_size,), *bounds)
             return sim_call(theta, jax.random.fold_in(key, 1), data)
 
         entry = (fn, jax.jit(pilot), prior, spec)
@@ -304,8 +339,10 @@ class _ScenarioRun:
         self.key = jax.random.PRNGKey(sc.seed)
 
         shape_cfg = cfg.abc_config(sc, tolerance=1.0)
-        data = (None if sc.backend == "pallas"
-                else scenario_data(self.dataset, shape_cfg))
+        # every backend gets the traced scenario tuple: the pallas simulator
+        # ignores the dataset fields (they are baked into its kernel) but the
+        # wave loop still samples theta from the traced prior box
+        data = scenario_data(self.dataset, shape_cfg)
         self.state = ABCState(n_params=prior.dim)
         self.eps_schedule: List[float] = []
         restored_eps = self._try_restore(prior.dim, shape_cfg)
@@ -397,6 +434,7 @@ class _ScenarioRun:
     def _finalize(self, hit_target: bool):
         theta, dist = self.state.to_arrays()
         spec = get_model(self.sc.model)
+        names = run_param_names(self.abc_cfg, spec)
         r = self.result
         r.status = "ok" if hit_target else "budget_exhausted"
         r.n_accepted = int(theta.shape[0])
@@ -406,10 +444,10 @@ class _ScenarioRun:
         r.wall_time_s = time.time() - self._t0
         if theta.shape[0]:
             r.posterior_mean = {
-                n: float(m) for n, m in zip(spec.param_names, theta.mean(axis=0))
+                n: float(m) for n, m in zip(names, theta.mean(axis=0))
             }
             r.posterior_std = {
-                n: float(s) for n, s in zip(spec.param_names, theta.std(axis=0))
+                n: float(s) for n, s in zip(names, theta.std(axis=0))
             }
 
     def _checkpoint(self, out, done: bool):

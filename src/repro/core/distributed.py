@@ -28,6 +28,21 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# jax >= 0.5 exposes shard_map at the top level; 0.4.x keeps it experimental
+shard_map = getattr(jax, "shard_map", None)
+if shard_map is None:  # pragma: no cover - exercised on jax 0.4.x containers
+    from functools import wraps
+
+    from jax.experimental.shard_map import shard_map as _experimental_shard_map
+
+    @wraps(_experimental_shard_map)
+    def shard_map(*args, **kwargs):
+        # 0.4.x has no replication rule for lax.while_loop (the device wave
+        # loop); jax's documented workaround is to skip the static check.
+        # Our P() outputs are psum-replicated by construction either way.
+        kwargs.setdefault("check_rep", False)
+        return _experimental_shard_map(*args, **kwargs)
+
 from repro.core.abc import (
     ABCConfig,
     RunOutput,
@@ -39,7 +54,7 @@ from repro.core.abc import (
     make_simulator,
     wave_capacity,
 )
-from repro.core.priors import UniformBoxPrior
+from repro.core.priors import UniformBoxPrior, schedule_prior
 
 
 def make_runner(mesh: Mesh, dataset, cfg: ABCConfig, style: str = "shard_map"):
@@ -54,7 +69,8 @@ def make_runner(mesh: Mesh, dataset, cfg: ABCConfig, style: str = "shard_map"):
 
     if style not in ("shard_map", "pjit"):
         raise ValueError(f"unknown runner style {style!r}")
-    prior = get_model(cfg.model).prior()
+    # schedule-aware: theta must carry the scale columns the simulator expects
+    prior = schedule_prior(get_model(cfg.model), cfg.schedule)
     simulator = make_simulator(dataset, cfg)
     maker = make_shardmap_runner if style == "shard_map" else make_pjit_runner
     return maker(mesh, prior, simulator, cfg)
@@ -69,7 +85,8 @@ def make_wave_runner(mesh: Mesh, dataset, cfg: ABCConfig, style: str = "shard_ma
 
     if style not in ("shard_map", "pjit"):
         raise ValueError(f"unknown runner style {style!r}")
-    prior = get_model(cfg.model).prior()
+    # schedule-aware: theta must carry the scale columns the simulator expects
+    prior = schedule_prior(get_model(cfg.model), cfg.schedule)
     simulator = make_simulator(dataset, cfg)
     maker = (
         make_shardmap_wave_runner if style == "shard_map" else make_pjit_wave_runner
@@ -133,7 +150,7 @@ def make_shardmap_runner(
     local_run = abc_run_batch(prior, simulator, local_cfg)
 
     @partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=P(),
         out_specs=RunOutput(P(axes), P(axes), P(axes), P()),
@@ -194,7 +211,7 @@ def make_shardmap_wave_runner(
     )
 
     @partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(P(), P(), P(axes), P(axes), P(), P(axes), P(), P(), P()),
         out_specs=WaveLoopOutput(P(axes), P(axes), P(), P(), P(axes)),

@@ -32,9 +32,26 @@ class UniformBoxPrior:
             jnp.asarray(self.highs, jnp.float32),
         )
 
-    def sample(self, key: jax.Array, batch_shape: Sequence[int] = ()) -> jax.Array:
-        """Sample [*batch_shape, dim] parameter vectors."""
+    def sample(
+        self,
+        key: jax.Array,
+        batch_shape: Sequence[int] = (),
+        lows=None,
+        highs=None,
+    ) -> jax.Array:
+        """Sample [*batch_shape, dim] parameter vectors.
+
+        `lows`/`highs` optionally override the box bounds with TRACED arrays
+        of the same dim — the campaign runner threads per-scenario bounds
+        (e.g. pinned intervention scales) through one compiled wave loop this
+        way. The arithmetic is identical to the baked path, so same-seed
+        samples are bit-identical whichever way the bounds arrive.
+        """
         lo, hi = self._bounds()
+        if lows is not None:
+            lo = jnp.asarray(lows, jnp.float32)
+        if highs is not None:
+            hi = jnp.asarray(highs, jnp.float32)
         u = jax.random.uniform(key, tuple(batch_shape) + (self.dim,), jnp.float32)
         return lo + u * (hi - lo)
 
@@ -47,11 +64,24 @@ class UniformBoxPrior:
         return lo + u * (hi - lo)
 
     def log_pdf(self, theta: jax.Array) -> jax.Array:
-        """log p(theta) per sample; -inf outside the box. theta [..., dim]."""
+        """log p(theta) per sample; -inf outside the box. theta [..., dim].
+
+        Zero-width dimensions (low == high — pinned intervention scales)
+        are treated as point masses: they contribute nothing to the box
+        volume, and `inside` holds exactly at the pinned value.
+        """
         lo, hi = self._bounds()
         inside = jnp.all((theta >= lo) & (theta <= hi), axis=-1)
-        log_vol = jnp.sum(jnp.log(hi - lo))
+        width = hi - lo
+        log_vol = jnp.sum(
+            jnp.where(width > 0, jnp.log(jnp.maximum(width, 1e-38)), 0.0)
+        )
         return jnp.where(inside, -log_vol, -jnp.inf)
+
+    def free_dims(self) -> tuple:
+        """Boolean per dimension: True where the box has positive width
+        (False marks pinned values, e.g. fixed counterfactual scales)."""
+        return tuple(h > l for l, h in zip(self.lows, self.highs))
 
     def clip(self, theta: jax.Array) -> jax.Array:
         lo, hi = self._bounds()
@@ -63,3 +93,20 @@ def paper_prior() -> UniformBoxPrior:
     from repro.epi.model import PRIOR_HIGHS
 
     return UniformBoxPrior(highs=PRIOR_HIGHS)
+
+
+def schedule_prior(model, schedule=None) -> UniformBoxPrior:
+    """The widened box prior of a model under an intervention schedule.
+
+    Columns are the model's own parameters followed by the schedule's
+    window-major scale factors with their per-window bounds (pinned scales
+    become zero-width dimensions). With schedule=None (or an empty schedule)
+    this is exactly `model.prior()`.
+    """
+    base = model.prior()
+    if schedule is None or schedule.is_empty:
+        return base
+    return UniformBoxPrior(
+        highs=base.highs + tuple(h for row in schedule.scale_highs for h in row),
+        lows=base.lows + tuple(l for row in schedule.scale_lows for l in row),
+    )

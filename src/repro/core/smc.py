@@ -17,11 +17,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.abc import ABCConfig, compact_accepted, make_simulator
+from repro.core.abc import ABCConfig, compact_accepted, make_simulator, run_param_names
 from repro.core.posterior import Posterior
-from repro.core.priors import UniformBoxPrior
+from repro.core.priors import UniformBoxPrior, schedule_prior
 from repro.epi.data import CountryData
 from repro.epi.models import get_model
+from repro.epi.spec import InterventionSchedule
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,6 +38,11 @@ class SMCConfig:
     min_tolerance: float = 0.0
     #: registry name of the compartmental model to infer (repro.epi.models)
     model: str = "siard"
+    #: optional intervention schedule; particles widen with per-window scale
+    #: columns (pinned zero-width scale dims are never perturbed)
+    schedule: Optional[InterventionSchedule] = None
+    #: Pallas dispatch override for backend="pallas" (see ABCConfig.interpret)
+    interpret: Optional[bool] = None
     #: "host": numpy proposal loop with one device sync per wave (original
     #: structure). "device": each round's propose -> simulate -> accept loop
     #: is a single jitted lax.while_loop that fills the particle buffer
@@ -115,7 +121,7 @@ def run_smc_abc(
     spec = get_model(cfg.model)
     if isinstance(key, int):
         key = jax.random.PRNGKey(key)
-    prior = prior or spec.prior()
+    prior = prior or schedule_prior(spec, cfg.schedule)
     abc_cfg = ABCConfig(
         batch_size=cfg.batch_size,
         tolerance=np.inf,
@@ -125,6 +131,8 @@ def run_smc_abc(
         num_days=cfg.num_days,
         backend=cfg.backend,
         model=cfg.model,
+        schedule=cfg.schedule,
+        interpret=cfg.interpret,
     )
     simulator = make_simulator(dataset, abc_cfg)
     sim_jit = jax.jit(simulator)
@@ -135,6 +143,9 @@ def run_smc_abc(
     )
     lo = np.asarray(prior.lows, np.float32)
     hi = np.asarray(prior.highs, np.float32)
+    # zero-width prior dims are point masses (pinned intervention scales):
+    # they get no perturbation noise and stay out of the kernel density
+    free = np.asarray(prior.free_dims(), bool)
     t0 = time.time()
 
     # --- round 0: prior wave, keep the best n_particles --------------------
@@ -153,6 +164,7 @@ def run_smc_abc(
     for rnd in range(1, cfg.n_rounds + 1):
         eps = max(float(np.quantile(dists, cfg.quantile)), cfg.min_tolerance)
         sigma = np.sqrt(cfg.kernel_scale * _weighted_var(particles, weights))
+        sigma = np.where(free, sigma, 0.0).astype(np.float32)
         new_theta = np.zeros_like(particles)
         new_dist = np.full(cfg.n_particles, np.inf, np.float32)
         n_done = 0
@@ -202,9 +214,12 @@ def run_smc_abc(
             new_theta[n_done:] = particles[keep]
             new_dist[n_done:] = dists[keep]
         # weight update: w_i ∝ prior(theta_i) / sum_j w_j K(theta_i | theta_j)
-        diff = (new_theta[:, None, :] - particles[None, :, :]) / sigma[None, None, :]
+        # (pinned dims divide by 1 — their diffs are exactly 0 — and are
+        # excluded from the kernel normalization)
+        denom_sig = np.where(free, sigma, 1.0)
+        diff = (new_theta[:, None, :] - particles[None, :, :]) / denom_sig[None, None, :]
         log_k = -0.5 * np.sum(diff * diff, axis=-1)  # [new, old], up to const
-        log_k -= np.sum(np.log(sigma))  # kernel normalization (shared const)
+        log_k -= np.sum(np.log(sigma[free]))  # kernel normalization (shared const)
         mx = log_k.max(axis=1, keepdims=True)
         denom = (weights[None, :] * np.exp(log_k - mx)).sum(axis=1)
         log_prior = np.asarray(prior.log_pdf(jnp.asarray(new_theta)))
@@ -222,7 +237,7 @@ def run_smc_abc(
         theta=particles,
         distances=dists,
         tolerance=eps,
-        param_names=spec.param_names,
+        param_names=run_param_names(abc_cfg, spec),
         runs=cfg.n_rounds,
         simulations=sims,
         wall_time_s=time.time() - t0,

@@ -81,19 +81,38 @@ def synthetic_dataset(
     name: str = "synthetic",
     paper_tolerance: float | None = None,
     model: Union[str, CompartmentalModel] = "siard",
+    schedule=None,
 ) -> CountryData:
-    """Generate a ground-truth dataset by simulating with known parameters."""
+    """Generate a ground-truth dataset by simulating with known parameters.
+
+    `schedule` (an InterventionSchedule with FIXED scales) generates the
+    series under a known intervention — e.g. a mid-horizon contact-rate drop
+    — which is the validation target for intervention-aware inference.
+    `theta` is the base parameter vector; the schedule's pinned scales are
+    appended automatically (pass a full widened theta to override).
+    """
     spec = get_model(model)
     cfg = EpiModelConfig(
         population=population, num_days=num_days, a0=a0, r0=r0, d0=d0
     )
     th = np.asarray([theta], np.float32)
-    if th.shape[1] != spec.n_params:
+    width = spec.n_params
+    if schedule is not None and not schedule.is_empty:
+        width = schedule.param_width(spec)
+        if th.shape[1] == spec.n_params:
+            scales = np.asarray(
+                [s for row in schedule.fixed_scales() for s in row],
+                np.float32,
+            )
+            th = np.concatenate([th, scales[None, :]], axis=1)
+    if th.shape[1] != width:
         raise ValueError(
             f"theta has {th.shape[1]} entries; model {spec.name!r} "
-            f"expects {spec.n_params}"
+            f"expects {width}"
         )
-    obs = engine.simulate_observed(spec, th, jax.random.PRNGKey(seed), cfg)[0]
+    obs = engine.simulate_observed(
+        spec, th, jax.random.PRNGKey(seed), cfg, schedule
+    )[0]
     return CountryData(
         name=name,
         population=population,

@@ -16,16 +16,26 @@ Three entry points mirror the original module:
 
 The Pallas path (`repro.kernels.abc_sim`) inlines the same spec into a fused
 VMEM-resident kernel; this module is the paper-faithful XLA reference.
+
+All three entry points optionally take an `InterventionSchedule`: theta then
+carries extra per-window scale columns and each day's hazards are computed
+with that day's window-effective parameters (`effective_param_rows` — the
+row-level helper the Pallas kernel shares, like `drain_and_apply`).
 """
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.epi.spec import CompartmentalModel, EpiModelConfig
+from repro.epi.spec import (
+    CompartmentalModel,
+    EpiModelConfig,
+    InterventionSchedule,
+    ScheduleShape,
+)
 
 
 def initial_state(
@@ -42,6 +52,73 @@ def initial_state(
         jnp.asarray(cfg.d0, jnp.float32),
     )
     return jnp.stack(list(rows), axis=-1).astype(jnp.float32)
+
+
+def effective_param_rows(
+    model: CompartmentalModel,
+    shape: Optional[ScheduleShape],
+    pc: Sequence,
+    day,
+    breakpoints: Sequence,
+):
+    """Apply an intervention schedule's window scales to parameter rows.
+
+    `pc` holds the widened parameter channels (n_params base rows followed by
+    window-major scale rows); `day` is a (traced) scalar day index and
+    `breakpoints` a sequence of n_windows (traced or concrete) scalar days.
+    Returns the n_params EFFECTIVE rows for that day: window 0 is the base
+    parameters untouched, window w >= 1 multiplies each time-varying
+    parameter by its scale row.
+
+    Row-level like `drain_and_apply`, so the SAME code runs in the XLA
+    engine (rows are [...] slices) and inside the Pallas kernel body (rows
+    are (1, TB) VREGs); the Python loops unroll at trace time into
+    straight-line selects — the schedule never adds control flow.
+    """
+    if shape is None or shape.n_windows == 0:
+        return tuple(pc[: model.n_params])
+    day = jnp.asarray(day, jnp.int32)
+    w = jnp.zeros((), jnp.int32)  # window index: #{breakpoints <= day}
+    for b in breakpoints:
+        w = w + (day >= jnp.asarray(b, jnp.int32)).astype(jnp.int32)
+    out = list(pc[: model.n_params])
+    for j, pi in enumerate(shape.tv_indices):
+        scale = jnp.ones_like(out[pi])  # window 0: base params, scale 1
+        for win in range(shape.n_windows):
+            row = pc[model.n_params + win * shape.n_tv + j]
+            scale = jnp.where(w == win + 1, row, scale)
+        out[pi] = out[pi] * scale
+    return tuple(out)
+
+
+def effective_theta(
+    model: CompartmentalModel,
+    schedule: Optional[InterventionSchedule],
+    theta: jax.Array,
+    day,
+    breakpoints=None,
+) -> jax.Array:
+    """Tensor-layout wrapper: widened theta [..., n_params + n_scales] ->
+    day-effective theta [..., n_params]. `breakpoints` optionally overrides
+    the schedule's static days with traced scalars (campaign sweeps)."""
+    if schedule is None or schedule.is_empty:
+        return theta
+    shape = schedule.shape(model)
+    bp = schedule.breakpoints if breakpoints is None else breakpoints
+    width = schedule.param_width(model)
+    pc = tuple(theta[..., k] for k in range(width))
+    rows = effective_param_rows(model, shape, pc, day, bp)
+    return jnp.stack(list(rows), axis=-1)
+
+
+def _breakpoint_scalars(schedule, breakpoints):
+    """Resolve the per-window breakpoint scalars for the scan helpers."""
+    if schedule is None or schedule.is_empty:
+        return ()
+    if breakpoints is None:
+        return schedule.breakpoints
+    bp = jnp.asarray(breakpoints, jnp.int32)
+    return tuple(bp[i] for i in range(schedule.n_windows))
 
 
 def hazards(
@@ -111,15 +188,25 @@ def tau_leap_step(
 
 
 def simulate(
-    model: CompartmentalModel, theta: jax.Array, key: jax.Array, cfg: EpiModelConfig
+    model: CompartmentalModel,
+    theta: jax.Array,
+    key: jax.Array,
+    cfg: EpiModelConfig,
+    schedule: Optional[InterventionSchedule] = None,
+    breakpoints=None,
 ) -> jax.Array:
     """Full state trajectory [B, T, n_state] (state *after* each day's update).
 
     Noise is drawn with jax.random (threefry) — the paper-faithful path.
+    With a `schedule`, theta is the widened [..., n_params + n_scales] layout
+    and each day's hazards use that day's window-effective parameters; the
+    noise stream is unchanged, and schedule=None stays bit-identical to the
+    constant-theta path.
     """
     theta = jnp.asarray(theta, jnp.float32)
     batch_shape = theta.shape[:-1]
     state0 = initial_state(model, theta, cfg)
+    bp = _breakpoint_scalars(schedule, breakpoints)
 
     def step(state, day):
         # Per-day fold_in keeps this bit-identical with the fused low-memory
@@ -129,7 +216,8 @@ def simulate(
             batch_shape + (model.n_transitions,),
             jnp.float32,
         )
-        nxt = tau_leap_step(model, state, theta, z, cfg.population)
+        th_d = effective_theta(model, schedule, theta, day, bp)
+        nxt = tau_leap_step(model, state, th_d, z, cfg.population)
         return nxt, nxt
 
     _, traj = jax.lax.scan(step, state0, jnp.arange(cfg.num_days))
@@ -138,10 +226,15 @@ def simulate(
 
 
 def simulate_observed(
-    model: CompartmentalModel, theta: jax.Array, key: jax.Array, cfg: EpiModelConfig
+    model: CompartmentalModel,
+    theta: jax.Array,
+    key: jax.Array,
+    cfg: EpiModelConfig,
+    schedule: Optional[InterventionSchedule] = None,
+    breakpoints=None,
 ) -> jax.Array:
     """Observed channels only: [B, n_observed, T] (the paper's D_s layout)."""
-    traj = simulate(model, theta, key, cfg)  # [B, T, n_state]
+    traj = simulate(model, theta, key, cfg, schedule, breakpoints)
     obs = traj[..., model.observed_idx]  # [B, T, n_obs]
     return jnp.swapaxes(obs, -1, -2)  # [B, n_obs, T]
 
@@ -152,6 +245,8 @@ def simulate_observed_lowmem(
     key: jax.Array,
     cfg: EpiModelConfig,
     observed: jax.Array,
+    schedule: Optional[InterventionSchedule] = None,
+    breakpoints=None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Fused simulate + running squared-distance accumulation.
 
@@ -170,6 +265,7 @@ def simulate_observed_lowmem(
     # runs inside shard_map (scan carries must have uniform vma types)
     acc0 = state0[..., 0] * 0.0
     obs_by_day = jnp.swapaxes(jnp.asarray(observed, jnp.float32), 0, 1)  # [T, n_obs]
+    bp = _breakpoint_scalars(schedule, breakpoints)
 
     def step(carry, inp):
         state, acc = carry
@@ -179,7 +275,8 @@ def simulate_observed_lowmem(
             batch_shape + (model.n_transitions,),
             jnp.float32,
         )
-        nxt = tau_leap_step(model, state, theta, z, cfg.population)
+        th_d = effective_theta(model, schedule, theta, day, bp)
+        nxt = tau_leap_step(model, state, th_d, z, cfg.population)
         diff = nxt[..., obs_idx] - obs_t
         acc = acc + jnp.sum(diff * diff, axis=-1)
         return (nxt, acc), None

@@ -43,7 +43,7 @@ layout in kernels/abc_sim.py and `CountryData` together.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence, Tuple
+from typing import Callable, NamedTuple, Sequence, Tuple
 
 Rows = Sequence  # sequence of same-shape arrays, one per channel
 
@@ -150,6 +150,202 @@ class CompartmentalModel:
             dst = row.index(1)
             lines.append(f"  {self.compartments[src]} -> {self.compartments[dst]}")
         return "\n".join(lines)
+
+
+class ScheduleShape(NamedTuple):
+    """The compile-relevant part of an intervention schedule.
+
+    Two schedules with the same shape — same window count, same set of scaled
+    parameters — compile to the same kernel / wave loop: the breakpoint DAYS
+    and the per-window SCALES are runtime values (traced scalars / extra theta
+    columns), not constants. Campaigns rely on this to sweep lockdown-day x
+    scale grids with one compilation.
+    """
+
+    n_windows: int
+    tv_indices: Tuple[int, ...]  # positions of the scaled params in param_names
+
+    @property
+    def n_tv(self) -> int:
+        return len(self.tv_indices)
+
+    @property
+    def n_scales(self) -> int:
+        return self.n_windows * self.n_tv
+
+
+@dataclasses.dataclass(frozen=True)
+class InterventionSchedule:
+    """Piecewise-constant time-varying scaling of selected hazard parameters.
+
+    Models policy changes (lockdowns, reopenings) as per-window multiplicative
+    scales on a subset of the model's parameters. Day d falls in window
+    `w = #{i : d >= breakpoints[i]}`: window 0 (before the first breakpoint)
+    always uses the base parameters unscaled; window w >= 1 multiplies each
+    parameter named in `tv_params` by that window's scale factor.
+
+    The scales are ordinary inference parameters: theta widens from
+    [n_params] to [n_params + n_windows * n_tv], laid out as the base
+    parameters followed by window-major scale blocks
+    (w1: tv_0..tv_{n_tv-1}, w2: ..., ...). Each scale gets a uniform box
+    prior [scale_lows[w][j], scale_highs[w][j]]; a zero-width box
+    (low == high) pins the scale to a known value — that is how fixed
+    counterfactual scenarios ("alpha drops to 0.3 on day 20") are expressed
+    without a separate code path.
+
+    Frozen and hashable, so a schedule can ride along static jit arguments
+    (the Pallas kernel builder keys on `shape(model)` only, see ScheduleShape).
+    """
+
+    #: names of the scaled ("time-varying") parameters, subset of param_names
+    tv_params: Tuple[str, ...]
+    #: strictly increasing, positive day indices; window i+1 starts at day
+    #: breakpoints[i]. n_windows == len(breakpoints).
+    breakpoints: Tuple[int, ...]
+    #: per-window scale prior bounds, [n_windows][n_tv]
+    scale_lows: Tuple[Tuple[float, ...], ...]
+    scale_highs: Tuple[Tuple[float, ...], ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "tv_params", tuple(self.tv_params))
+        object.__setattr__(
+            self, "breakpoints", tuple(int(b) for b in self.breakpoints)
+        )
+        object.__setattr__(
+            self,
+            "scale_lows",
+            tuple(tuple(float(x) for x in row) for row in self.scale_lows),
+        )
+        object.__setattr__(
+            self,
+            "scale_highs",
+            tuple(tuple(float(x) for x in row) for row in self.scale_highs),
+        )
+        nw, nt = len(self.breakpoints), len(self.tv_params)
+        if nw and not nt:
+            raise ValueError("schedule has breakpoints but no tv_params")
+        if nt and not nw:
+            raise ValueError("schedule has tv_params but no breakpoints")
+        if any(b <= 0 for b in self.breakpoints):
+            raise ValueError(f"breakpoints must be positive days: {self.breakpoints}")
+        if any(
+            b2 <= b1 for b1, b2 in zip(self.breakpoints, self.breakpoints[1:])
+        ):
+            raise ValueError(
+                f"breakpoints must be strictly increasing: {self.breakpoints}"
+            )
+        if len(self.scale_lows) != nw or len(self.scale_highs) != nw:
+            raise ValueError(f"need {nw} scale bound rows, one per window")
+        for lo_row, hi_row in zip(self.scale_lows, self.scale_highs):
+            if len(lo_row) != nt or len(hi_row) != nt:
+                raise ValueError(f"each scale bound row must have {nt} entries")
+            if any(h < l for l, h in zip(lo_row, hi_row)):
+                raise ValueError("scale_highs must be >= scale_lows")
+        if nw > 16:
+            # the kernel packs breakpoints into iconst lanes 1..n_windows;
+            # 16 is far beyond any realistic policy timeline
+            raise ValueError(f"at most 16 intervention windows supported, got {nw}")
+
+    # ------------------------------------------------------------ constructors
+    @staticmethod
+    def fixed(tv_params, breakpoints, scales) -> "InterventionSchedule":
+        """Known (counterfactual) scales: `scales` is [n_windows][n_tv], or a
+        flat [n_windows] sequence when there is a single tv param."""
+        rows = tuple(
+            (float(s),) if not isinstance(s, (tuple, list)) else tuple(s)
+            for s in scales
+        )
+        return InterventionSchedule(
+            tv_params=tuple(tv_params),
+            breakpoints=tuple(breakpoints),
+            scale_lows=rows,
+            scale_highs=rows,
+        )
+
+    @staticmethod
+    def inferred(
+        tv_params, breakpoints, low: float = 0.0, high: float = 2.0
+    ) -> "InterventionSchedule":
+        """Unknown scales, inferred by ABC under U(low, high) per window."""
+        nt = len(tuple(tv_params))
+        return InterventionSchedule(
+            tv_params=tuple(tv_params),
+            breakpoints=tuple(breakpoints),
+            scale_lows=tuple((float(low),) * nt for _ in breakpoints),
+            scale_highs=tuple((float(high),) * nt for _ in breakpoints),
+        )
+
+    # ------------------------------------------------------------- dimensions
+    @property
+    def n_windows(self) -> int:
+        return len(self.breakpoints)
+
+    @property
+    def n_tv(self) -> int:
+        return len(self.tv_params)
+
+    @property
+    def n_scales(self) -> int:
+        return self.n_windows * self.n_tv
+
+    @property
+    def is_empty(self) -> bool:
+        return self.n_windows == 0
+
+    def shape(self, model: CompartmentalModel) -> ScheduleShape:
+        """Static (compile-key) part; validates tv_params against the model."""
+        idx = []
+        for name in self.tv_params:
+            if name not in model.param_names:
+                raise ValueError(
+                    f"schedule scales {name!r}, which is not a parameter of "
+                    f"model {model.name!r} ({model.param_names})"
+                )
+            idx.append(model.param_names.index(name))
+        return ScheduleShape(n_windows=self.n_windows, tv_indices=tuple(idx))
+
+    def param_width(self, model: CompartmentalModel) -> int:
+        return model.n_params + self.n_scales
+
+    def scale_param_names(self) -> Tuple[str, ...]:
+        """Names of the widened theta columns, window-major: alpha_w1, ..."""
+        return tuple(
+            f"{p}_w{w + 1}"
+            for w in range(self.n_windows)
+            for p in self.tv_params
+        )
+
+    def param_names(self, model: CompartmentalModel) -> Tuple[str, ...]:
+        return model.param_names + self.scale_param_names()
+
+    def fixed_scales(self) -> Tuple[Tuple[float, ...], ...]:
+        """The pinned scale values; raises if any window's scales are inferred."""
+        for lo_row, hi_row in zip(self.scale_lows, self.scale_highs):
+            if any(h > l for l, h in zip(lo_row, hi_row)):
+                raise ValueError(
+                    "schedule has inferred (non-degenerate) scale priors; "
+                    "fixed_scales() needs every low == high"
+                )
+        return self.scale_lows
+
+    def tag(self) -> str:
+        """Compact filesystem-safe label for scenario/checkpoint names."""
+        if self.is_empty:
+            return "none"
+        wins = []
+        for w, b in enumerate(self.breakpoints):
+            parts = []
+            for l, h in zip(self.scale_lows[w], self.scale_highs[w]):
+                parts.append(f"{l:g}" if l == h else f"{l:g}to{h:g}")
+            wins.append(f"d{b}s" + "+".join(parts))
+        return "iv_" + "+".join(self.tv_params) + "_" + "_".join(wins)
+
+
+#: the canonical no-op schedule — simulating under it is bit-identical to
+#: passing schedule=None (pinned by tests/test_interventions.py)
+EMPTY_SCHEDULE = InterventionSchedule(
+    tv_params=(), breakpoints=(), scale_lows=(), scale_highs=()
+)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -21,15 +21,21 @@ code, exactly like the previous hand-unrolled SIARD body. The spec is a
 static (hashable) argument, so each model compiles its own specialized
 kernel with VMEM tiles sized from its `n_state` / `n_params`.
 
-HBM traffic per sample: n_params floats of theta in + 1 float distance out
-(36 B for the paper model), versus the naive path's >= (T*n_trans noise +
+HBM traffic per sample: theta's row count in floats (n_params, plus
+n_windows*n_tv scale rows under a schedule) + 1 float distance out (36 B for
+the paper model unscheduled), versus the naive path's >= (T*n_trans noise +
 T*n_obs trajectory + T*n_state state round trips) * 4 B ~ 2.3 KB/sample at
 T=49. Arithmetic intensity rises ~60x, which is what moves the workload from
 the memory roofline to the compute roofline (EXPERIMENTS.md §Perf, ABC rows).
 
 Data layout: samples ride the 128-lane minor dimension; theta arrives
 transposed [n_params_pad, B] (sublane-padded to a multiple of 8) so each
-parameter is one (1, TB) VREG row; the n_state channels are (1, TB) rows
+parameter is one (1, TB) VREG row. Under an intervention schedule the theta
+block widens to [n_params + n_windows*n_tv, B]: the extra window-major scale
+rows are selected per day by unrolled VREG selects against the window index
+(breakpoint days arrive as iconst scalars, so they are runtime values — a
+lockdown-day sweep reuses one compiled kernel). The n_state channels are (1,
+TB) rows
 carried through the day loop as values (VREGs), not refs. `TB` defaults to
 1024 lanes -> peak VMEM per cell ~ (n_state + n_params + n_trans) * 4 KB,
 far under the ~16 MB/core budget, leaving room for concurrent grid cells.
@@ -48,11 +54,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.epi import engine
-from repro.epi.spec import CompartmentalModel
+from repro.epi.spec import CompartmentalModel, ScheduleShape
 from repro.kernels import rng as krng
 
 # fconsts layout (f32): [population, a0, r0, d0, num_days, 0...]
-# iconsts layout (i32): [seed, 0...]
+# iconsts layout (i32): [seed, breakpoint_0..breakpoint_{n_windows-1}, 0...]
 _CONST_LANES = 128
 #: sublane granularity for f32 tiles — theta/obs rows are padded to this
 _SUBLANES = 8
@@ -61,6 +67,18 @@ _SUBLANES = 8
 def sublane_pad(n: int) -> int:
     """Round a row count up to the f32 sublane tile granularity (min 8)."""
     return max(_SUBLANES, -(-n // _SUBLANES) * _SUBLANES)
+
+
+def auto_interpret() -> bool:
+    """Backend-aware Pallas dispatch: the interpreter is a CPU-only
+    correctness fallback — on TPU (and GPU/triton) the kernel must compile.
+    """
+    return jax.default_backend() == "cpu"
+
+
+def theta_width(model: CompartmentalModel, sched: ScheduleShape | None) -> int:
+    """Rows of the (possibly schedule-widened) transposed theta layout."""
+    return model.n_params + (sched.n_scales if sched is not None else 0)
 
 
 def _kernel(
@@ -73,12 +91,15 @@ def _kernel(
     model: CompartmentalModel,
     num_days: int,
     tile: int,
+    sched: ScheduleShape | None = None,
 ):
     """Generic Pallas kernel body, specialized per model spec. Shapes:
-    theta_ref  (Pp, TB)  — params x samples (transposed, sublane-padded)
+    theta_ref  (Pp, TB)  — params x samples (transposed, sublane-padded);
+                           rows n_params.. are window-major intervention
+                           scales when `sched` is set
     obs_ref    (Op, Tp)  — rows 0..n_obs-1 = observed channels per day (padded)
     fconst_ref (1, 128)  — f32 scalars
-    iconst_ref (1, 128)  — i32 scalars (seed)
+    iconst_ref (1, 128)  — i32 scalars (seed, then breakpoint days)
     dist_ref   (1, TB)   — output Euclidean distances
     """
     population = fconst_ref[0, 0]
@@ -86,17 +107,24 @@ def _kernel(
     r0 = fconst_ref[0, 2]
     d0 = fconst_ref[0, 3]
     seed = iconst_ref[0, 0].astype(jnp.uint32)
+    # breakpoint days ride iconst lanes, so lockdown-day sweeps NEVER
+    # recompile the kernel — only the schedule's shape is a compile key
+    n_windows = sched.n_windows if sched is not None else 0
+    breakpoints = tuple(iconst_ref[0, 1 + i] for i in range(n_windows))
 
     # global sample index of each lane in this tile
     tile_idx = pl.program_id(0)
     lane = jax.lax.broadcasted_iota(jnp.uint32, (1, tile), 1)
     idx = lane + jnp.uint32(tile) * tile_idx.astype(jnp.uint32)
 
-    # theta rows, each (1, TB)
-    pc = tuple(theta_ref[k : k + 1, :] for k in range(model.n_params))
+    # theta rows, each (1, TB): base params plus any per-window scale rows
+    pc = tuple(
+        theta_ref[k : k + 1, :] for k in range(theta_width(model, sched))
+    )
 
-    # spec step 1: initial state rows + distance accumulator
-    state0 = model.initial_rows(pc, population, a0, r0, d0)
+    # spec step 1: initial state rows + distance accumulator (base params
+    # only — interventions scale hazards, never the day-0 seeding)
+    state0 = model.initial_rows(pc[: model.n_params], population, a0, r0, d0)
     acc0 = jnp.zeros_like(state0[0])
 
     obs_idx = model.observed_idx
@@ -105,8 +133,11 @@ def _kernel(
     def day_step(day, carry):
         sc = list(carry[: model.n_state])
         acc = carry[model.n_state]
+        # day-effective params: the window selects unroll into straight-line
+        # VREG selects (shared row-level code with the XLA engine)
+        pc_d = engine.effective_param_rows(model, sched, pc, day, breakpoints)
         # spec step 2: hazards (rates cannot be negative)
-        h = [jnp.maximum(row, 0.0) for row in model.hazard_rows(sc, pc, population)]
+        h = [jnp.maximum(row, 0.0) for row in model.hazard_rows(sc, pc_d, population)]
         # spec step 3: Gaussian tau-leap counts, generated in-register
         raw = []
         for k in range(model.n_transitions):
@@ -131,22 +162,31 @@ def abc_sim_distance_kernel(
     theta_t: jax.Array,  # [Pp, B] f32 (transposed, sublane-padded, B % tile == 0)
     obs_pad: jax.Array,  # [Op, Tp] f32 (rows 0..n_obs-1 = observed channels)
     fconsts: jax.Array,  # [1, 128] f32
-    iconsts: jax.Array,  # [1, 128] i32
+    iconsts: jax.Array,  # [1, 128] i32 (seed + breakpoint days)
     *,
     model: CompartmentalModel,
     num_days: int,
     tile: int = 1024,
-    interpret: bool = True,
+    interpret: bool | None = None,
+    sched: ScheduleShape | None = None,
 ) -> jax.Array:
     """Raw pallas_call wrapper; returns distances [1, B]. See ops.py for the
-    user-facing API (padding, layout, backend selection)."""
+    user-facing API (padding, layout, backend selection).
+
+    `interpret=None` dispatches by backend (`auto_interpret`): the Python
+    interpreter only on CPU, a compiled kernel everywhere else.
+    """
+    if interpret is None:
+        interpret = auto_interpret()
     p_pad, batch = theta_t.shape
-    assert p_pad == sublane_pad(model.n_params) and batch % tile == 0
+    assert p_pad == sublane_pad(theta_width(model, sched)) and batch % tile == 0
     o_pad, t_pad = obs_pad.shape
     assert o_pad == sublane_pad(model.n_observed)
     grid = (batch // tile,)
     return pl.pallas_call(
-        functools.partial(_kernel, model=model, num_days=num_days, tile=tile),
+        functools.partial(
+            _kernel, model=model, num_days=num_days, tile=tile, sched=sched
+        ),
         grid=grid,
         in_specs=[
             pl.BlockSpec((p_pad, tile), lambda i: (0, i)),  # theta tile

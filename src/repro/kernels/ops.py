@@ -20,11 +20,11 @@ _CONST_LANES = abc_sim._CONST_LANES
 
 
 def _auto_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    return abc_sim.auto_interpret()
 
 
 def abc_sim_distance(
-    theta: jax.Array,  # [B, n_params] f32
+    theta: jax.Array,  # [B, n_params (+ n_scales)] f32
     seed: jax.Array,  # uint32 scalar
     observed: jax.Array,  # [n_observed, T] f32
     *,
@@ -35,6 +35,8 @@ def abc_sim_distance(
     tile: int = 1024,
     interpret: bool | None = None,
     model=None,  # CompartmentalModel spec; defaults to the paper's SIARD
+    schedule=None,  # InterventionSchedule; theta carries its scale columns
+    breakpoints=None,  # [n_windows] i32 traced override of schedule days
 ) -> jax.Array:
     """Fused simulate+distance for a batch of parameter samples. Returns [B].
 
@@ -42,25 +44,38 @@ def abc_sim_distance(
     compiles its own specialized kernel with the stoichiometry and hazards
     inlined (see kernels/abc_sim). Defaults are resolved HERE, outside the
     jit boundary, so model=None and model=DEFAULT_MODEL share one cache entry.
+    Of a `schedule`, only the SHAPE (window count, scaled params) is static:
+    breakpoint days are traced i32 scalars, so sweeping lockdown days reuses
+    one compiled kernel.
     """
     if model is None:
         from repro.epi.models import DEFAULT_MODEL as model  # noqa: N811
     if interpret is None:
         interpret = _auto_interpret()
+    sched = None
+    if schedule is not None and not schedule.is_empty:
+        sched = schedule.shape(model)
+        if breakpoints is None:
+            breakpoints = jnp.asarray(schedule.breakpoints, jnp.int32)
+    if breakpoints is None:
+        breakpoints = jnp.zeros((0,), jnp.int32)
     return _abc_sim_distance_jit(
-        theta, seed, observed, population=population, a0=a0, r0=r0, d0=d0,
-        tile=tile, interpret=interpret, model=model,
+        theta, seed, observed, breakpoints, population=population, a0=a0,
+        r0=r0, d0=d0, tile=tile, interpret=interpret, model=model, sched=sched,
     )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("population", "a0", "r0", "d0", "tile", "interpret", "model"),
+    static_argnames=(
+        "population", "a0", "r0", "d0", "tile", "interpret", "model", "sched"
+    ),
 )
 def _abc_sim_distance_jit(
     theta: jax.Array,
     seed: jax.Array,
     observed: jax.Array,
+    breakpoints: jax.Array,
     *,
     population: float,
     a0: float,
@@ -69,18 +84,22 @@ def _abc_sim_distance_jit(
     tile: int,
     interpret: bool,
     model,
+    sched,
 ) -> jax.Array:
     theta = jnp.asarray(theta, jnp.float32)
     batch, n_params = theta.shape
-    assert n_params == model.n_params, (theta.shape, model.name)
+    width = abc_sim.theta_width(model, sched)
+    assert n_params == width, (theta.shape, model.name, sched)
     assert observed.shape[0] == model.n_observed, (observed.shape, model.name)
     num_days = observed.shape[1]
+    n_windows = sched.n_windows if sched is not None else 0
+    assert breakpoints.shape == (n_windows,), (breakpoints.shape, sched)
 
     tile = min(tile, max(128, 1 << (batch - 1).bit_length()))
     pad_b = (-batch) % tile
-    p_pad = abc_sim.sublane_pad(model.n_params)
-    theta_t = jnp.swapaxes(theta, 0, 1)  # [n_params, B]
-    theta_t = jnp.pad(theta_t, ((0, p_pad - n_params), (0, pad_b)))
+    p_pad = abc_sim.sublane_pad(width)
+    theta_t = jnp.swapaxes(theta, 0, 1)  # [width, B]
+    theta_t = jnp.pad(theta_t, ((0, p_pad - width), (0, pad_b)))
 
     o_pad = abc_sim.sublane_pad(model.n_observed)
     t_pad = int(np.ceil(num_days / 128) * 128)
@@ -96,6 +115,10 @@ def _abc_sim_distance_jit(
     fconsts = fconsts.at[0, 3].set(d0)
     iconsts = jnp.zeros((1, _CONST_LANES), jnp.int32)
     iconsts = iconsts.at[0, 0].set(jnp.asarray(seed, jnp.uint32).astype(jnp.int32))
+    if n_windows:
+        iconsts = iconsts.at[0, 1 : 1 + n_windows].set(
+            jnp.asarray(breakpoints, jnp.int32)
+        )
 
     dist = abc_sim.abc_sim_distance_kernel(
         theta_t,
@@ -106,6 +129,7 @@ def _abc_sim_distance_jit(
         num_days=num_days,
         tile=tile,
         interpret=interpret,
+        sched=sched,
     )
     return dist[0, :batch]
 

@@ -26,7 +26,7 @@ def hash_normals(seed, idx: jax.Array, day, n_transitions: int = 5) -> jax.Array
 
 
 def abc_sim_distance_ref(
-    theta: jax.Array,  # [B, n_params] f32
+    theta: jax.Array,  # [B, n_params (+ n_scales)] f32
     seed,  # uint32 scalar
     observed: jax.Array,  # [n_observed, T] f32
     *,
@@ -35,6 +35,7 @@ def abc_sim_distance_ref(
     r0: float,
     d0: float,
     model: CompartmentalModel | None = None,
+    schedule=None,  # InterventionSchedule; theta carries its scale columns
 ) -> jax.Array:
     """Distances [B]: simulate T days with hash RNG, Euclidean vs observed."""
     if model is None:
@@ -53,7 +54,8 @@ def abc_sim_distance_ref(
         state, acc = carry
         day, obs_t = inp
         z = hash_normals(seed, idx, day, model.n_transitions)  # [B, n_trans]
-        nxt = engine.tau_leap_step(model, state, theta, z, cfg.population)
+        th_d = engine.effective_theta(model, schedule, theta, day)
+        nxt = engine.tau_leap_step(model, state, th_d, z, cfg.population)
         diff = nxt[..., model.observed_idx] - obs_t
         return (nxt, acc + jnp.sum(diff * diff, axis=-1)), None
 

@@ -23,14 +23,162 @@ model, with multi-device sharding, checkpoint/resume and backend selection.
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
 
 import jax
+import numpy as np
 
 from repro.core.abc import ABCConfig, ABCState, run_abc
 from repro.core.distributed import make_runner, make_wave_runner
 from repro.epi.data import get_dataset
-from repro.epi.models import list_models
+from repro.epi.models import get_model, list_models
+from repro.epi.spec import InterventionSchedule
 from repro.launch.mesh import make_host_mesh
+
+
+def parse_intervention(spec: str) -> InterventionSchedule | None:
+    """Parse an intervention schedule from its CLI string form.
+
+        PARAMS@WINDOW[,WINDOW...]
+        PARAMS := name[+name...]            scaled (time-varying) parameters
+        WINDOW := day[=SCALES]              new window starting at `day`
+        SCALES := entry[+entry...]          one entry, or one per tv param
+        entry  := x (pinned scale) | lo:hi (inferred under U(lo, hi))
+
+    A bare `day` infers that window's scales under the default U(0, 2).
+    Examples: "alpha@25=0.3" (contact rate pinned to 0.3x from day 25),
+    "alpha@25=0.1:1,40" (inferred lockdown window, then a second inferred
+    reopening window), "alpha+gamma@30=0.5+0.8".
+    """
+    spec = (spec or "").strip()
+    if not spec or spec.lower() == "none":
+        return None
+    if "@" not in spec:
+        raise ValueError(
+            f"intervention {spec!r}: expected PARAMS@day[=scale][,day...]"
+        )
+    params_s, windows_s = spec.split("@", 1)
+    tv_params = tuple(p.strip() for p in params_s.split("+") if p.strip())
+    if not tv_params:
+        raise ValueError(f"intervention {spec!r}: no parameter names before '@'")
+    breakpoints, lows, highs = [], [], []
+    for win in windows_s.split(","):
+        win = win.strip()
+        day_s, _, scales_s = win.partition("=")
+        breakpoints.append(int(day_s))
+        if not scales_s:
+            entries = ["0:2"] * len(tv_params)
+        else:
+            entries = scales_s.split("+")
+            if len(entries) == 1:
+                entries = entries * len(tv_params)
+        if len(entries) != len(tv_params):
+            raise ValueError(
+                f"intervention {spec!r}: window {win!r} has {len(entries)} "
+                f"scales for {len(tv_params)} parameters"
+            )
+        lo_row, hi_row = [], []
+        for e in entries:
+            lo_s, _, hi_s = e.partition(":")
+            lo_row.append(float(lo_s))
+            hi_row.append(float(hi_s) if hi_s else float(lo_s))
+        lows.append(tuple(lo_row))
+        highs.append(tuple(hi_row))
+    return InterventionSchedule(
+        tv_params=tv_params,
+        breakpoints=tuple(breakpoints),
+        scale_lows=tuple(lows),
+        scale_highs=tuple(highs),
+    )
+
+
+def posterior_forecast(
+    theta,
+    dataset,
+    cfg: ABCConfig,
+    horizon: int,
+    schedule: InterventionSchedule | None = None,
+    key=0,
+    quantiles=(0.05, 0.25, 0.5, 0.75, 0.95),
+    max_particles: int = 512,
+) -> dict:
+    """Posterior-predictive forecast: simulate accepted particles forward
+    past the fitting horizon under a chosen schedule; returns credible bands.
+
+    `theta` is the accepted sample set [N, p]; `schedule` defaults to the
+    FIT schedule (cfg.schedule) — pass a different fixed-scale schedule for
+    a counterfactual ("what if the lockdown lifts on day 60 instead"). The
+    result is a strict-JSON-serializable dict: per observed channel, the
+    mean and the requested quantiles over particles for every day of
+    `cfg.num_days + horizon`.
+    """
+    from repro.core.campaign import _jsonable
+    from repro.epi import engine
+    from repro.epi.spec import EpiModelConfig
+
+    spec = get_model(cfg.model)
+    counterfactual = schedule is not None
+    fc_sched = schedule if counterfactual else cfg.schedule
+    theta = np.asarray(theta, np.float32)
+    if theta.shape[0] == 0:
+        raise ValueError("no accepted samples to forecast from")
+    if theta.shape[0] > max_particles:
+        theta = theta[:max_particles]
+    if counterfactual:
+        # replace the fitted scale columns with the counterfactual's pinned
+        # scales; the base parameters stay the posterior's
+        base = theta[:, : spec.n_params]
+        if fc_sched is None or fc_sched.is_empty:
+            theta = base
+        else:
+            scales = np.asarray(
+                [s for row in fc_sched.fixed_scales() for s in row], np.float32
+            )
+            theta = np.concatenate(
+                [base, np.broadcast_to(scales, (base.shape[0], scales.size))],
+                axis=1,
+            )
+    total_days = cfg.num_days + int(horizon)
+    mcfg = EpiModelConfig(
+        population=dataset.population,
+        num_days=total_days,
+        a0=dataset.a0,
+        r0=dataset.r0,
+        d0=dataset.d0,
+    )
+    if isinstance(key, int):
+        key = jax.random.PRNGKey(key)
+    traj = np.asarray(
+        engine.simulate_observed(spec, theta, key, mcfg, fc_sched)
+    )  # [N, n_obs, T]
+    channels = {}
+    for m, name in enumerate(spec.observed):
+        ch = traj[:, m, :]  # [N, T]
+        bands = {"mean": ch.mean(axis=0).tolist()}
+        for q in quantiles:
+            bands[f"q{int(round(q * 100)):02d}"] = np.quantile(
+                ch, q, axis=0
+            ).tolist()
+        channels[name] = bands
+    payload = {
+        "model": spec.name,
+        "dataset": dataset.name,
+        "fit_days": cfg.num_days,
+        "horizon_days": int(horizon),
+        "total_days": total_days,
+        "n_particles": int(theta.shape[0]),
+        "schedule": None
+        if fc_sched is None or fc_sched.is_empty
+        else dataclasses.asdict(fc_sched),
+        "quantiles": list(quantiles),
+        "channels": channels,
+        "observed": {
+            name: dataset.observed[m, : cfg.num_days].tolist()
+            for m, name in enumerate(spec.observed)
+        },
+    }
+    return _jsonable(payload)
 
 
 def run_campaign_cli(args, parser):
@@ -39,8 +187,9 @@ def run_campaign_cli(args, parser):
     # the campaign grid reads ONLY the plural flags; refuse the singular ones
     # rather than silently running the wrong grid
     for flag, value in (("--dataset", args.dataset), ("--model", args.model),
-                        ("--backend", args.backend), ("--seed", args.seed)):
-        if value != parser.get_default(flag.lstrip("-")):
+                        ("--backend", args.backend), ("--seed", args.seed),
+                        ("--intervention", args.intervention)):
+        if value != parser.get_default(flag.lstrip("-").replace("-", "_")):
             parser.error(
                 f"{flag} has no effect with --campaign; use the grid flag "
                 f"{flag}s instead"
@@ -50,6 +199,10 @@ def run_campaign_cli(args, parser):
         models=tuple(args.models),
         backends=tuple(args.backends),
         seeds=tuple(args.seeds),
+        interventions=tuple(
+            parse_intervention(s) for s in args.interventions
+        ),
+        interpret=_interpret_flag(args.interpret),
         batch_size=args.batch,
         num_days=args.days,
         target_accepted=args.accept,
@@ -61,6 +214,11 @@ def run_campaign_cli(args, parser):
     )
     report = run_campaign(cfg, verbose=True)
     return report
+
+
+def _interpret_flag(value: str):
+    """'auto' -> None (backend-aware), 'on'/'off' -> forced mode."""
+    return {"auto": None, "on": True, "off": False}[value]
 
 
 def main(argv=None):
@@ -81,6 +239,15 @@ def main(argv=None):
     ap.add_argument("--strategy", default="outfeed", choices=["outfeed", "topk"])
     ap.add_argument("--backend", default="xla_fused",
                     choices=["xla", "xla_fused", "pallas"])
+    ap.add_argument("--interpret", default="auto", choices=["auto", "on", "off"],
+                    help="Pallas dispatch for backend=pallas: 'auto' runs the "
+                         "interpreter only on CPU and compiled kernels on "
+                         "accelerators; 'on'/'off' force a mode")
+    ap.add_argument("--intervention", default="",
+                    help="piecewise-constant intervention schedule, e.g. "
+                         "'alpha@25=0.3' (contact rate pinned to 0.3x from "
+                         "day 25) or 'alpha@25=0.1:1' (scale inferred under "
+                         "U(0.1, 1)); see parse_intervention for the grammar")
     ap.add_argument("--max-runs", type=int, default=10_000)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--state", default="", help="checkpoint path (resume if exists)")
@@ -108,19 +275,39 @@ def main(argv=None):
                     help="campaign output directory (checkpoints + report)")
     ap.add_argument("--checkpoint-every", type=int, default=32,
                     help="waves per device segment between campaign checkpoints")
+    ap.add_argument("--interventions", nargs="+", default=["none"],
+                    help="campaign intervention grid axis (schedule strings; "
+                         "'none' is the constant-theta cell). Schedules "
+                         "sharing a shape share one compiled wave loop, so "
+                         "lockdown-day x scale sweeps never re-trace")
+    # forecast mode --------------------------------------------------------
+    ap.add_argument("--forecast", type=int, default=0, metavar="DAYS",
+                    help="after fitting, simulate the accepted particles "
+                         "DAYS past the horizon and emit posterior-"
+                         "predictive credible bands as strict JSON")
+    ap.add_argument("--forecast-schedule", default="",
+                    help="counterfactual schedule for the forecast (fixed "
+                         "scales only); default: forecast under the FIT "
+                         "schedule; 'none': forecast with interventions "
+                         "lifted")
+    ap.add_argument("--forecast-out", default="",
+                    help="path for the forecast JSON (default: stdout)")
     args = ap.parse_args(argv)
 
     if args.campaign:
         return run_campaign_cli(args, ap)
 
     ds = get_dataset(args.dataset, num_days=args.days, model=args.model)
+    schedule = parse_intervention(args.intervention)
+    interpret = _interpret_flag(args.interpret)
     tolerance = args.tolerance
     if args.auto_tolerance:
         from repro.core.abc import calibrate_tolerance
 
         pilot_cfg = ABCConfig(batch_size=args.batch, tolerance=1.0,
                               num_days=args.days, backend=args.backend,
-                              strategy="topk", top_k=1, model=args.model)
+                              strategy="topk", top_k=1, model=args.model,
+                              schedule=schedule, interpret=interpret)
         tolerance = calibrate_tolerance(ds, pilot_cfg, key=args.seed,
                                         quantile=args.auto_tolerance)
         print(f"[abc] auto-calibrated tolerance = {tolerance:.4g} "
@@ -136,6 +323,8 @@ def main(argv=None):
         max_runs=args.max_runs,
         model=args.model,
         wave_loop=args.wave_loop,
+        schedule=schedule,
+        interpret=interpret,
     )
     run_fn = None
     wave_runner = None
@@ -165,6 +354,28 @@ def main(argv=None):
     if args.save_posterior:
         post.save(args.save_posterior)
         print(f"[abc] posterior saved to {args.save_posterior}")
+    if args.forecast:
+        from repro.epi.spec import EMPTY_SCHEDULE
+
+        if args.forecast_schedule:
+            # an explicit counterfactual; "none" lifts every intervention
+            fc_sched = parse_intervention(args.forecast_schedule) or EMPTY_SCHEDULE
+        else:
+            fc_sched = None  # forecast under the fit schedule
+        bands = posterior_forecast(
+            post.theta, ds, cfg, args.forecast, schedule=fc_sched,
+            key=args.seed + 1,
+        )
+        text = json.dumps(bands, indent=1, allow_nan=False)
+        if args.forecast_out:
+            import os
+
+            os.makedirs(os.path.dirname(args.forecast_out) or ".", exist_ok=True)
+            with open(args.forecast_out, "w") as f:
+                f.write(text)
+            print(f"[abc] forecast bands saved to {args.forecast_out}")
+        else:
+            print(text)
     return post
 
 

@@ -1,28 +1,44 @@
 """Production mesh construction.
 
 A FUNCTION, not a module-level constant, so importing this module never
-touches jax device state (dry-run contract)."""
+touches jax device state (dry-run contract).
+
+Version compatibility: `jax.sharding.AxisType` only exists on newer jax
+releases (>= 0.5.x); on older versions (e.g. the 0.4.37 in this container)
+`jax.make_mesh` takes no `axis_types` and every axis is implicitly the
+auto-sharded kind we request anyway. `make_compat_mesh` hides the difference
+for every mesh built in this repo (and in tests).
+"""
 
 from __future__ import annotations
 
 import jax
 
 
+def axis_types_kwargs(n_axes: int) -> dict:
+    """`{"axis_types": (AxisType.Auto,) * n}` where supported, else `{}`."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:  # jax < 0.5: no explicit axis types; Auto is implied
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def make_compat_mesh(shape, axes):
+    """`jax.make_mesh` with Auto axis types where the jax version has them."""
+    shape = tuple(shape)
+    axes = tuple(axes)
+    return jax.make_mesh(shape, axes, **axis_types_kwargs(len(axes)))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 chips per pod; two pods for the multi-pod dry run."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_compat_mesh(shape, axes)
 
 
 def make_host_mesh(n_devices: int | None = None, model: int = 1):
     """Small mesh over this host's devices (tests / CPU demos)."""
     n = n_devices or len(jax.devices())
     assert n % model == 0
-    return jax.make_mesh(
-        (n // model, model),
-        ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_compat_mesh((n // model, model), ("data", "model"))

@@ -38,14 +38,38 @@ class MoEConfig:
     shard_constraints: bool = os.environ.get("REPRO_MOE_CONSTRAIN", "1") == "1"
 
 
+def _ambient_mesh():
+    """The mesh in scope, or None — version-guarded.
+
+    Newer jax exposes `jax.sharding.get_abstract_mesh()` (set by
+    `jax.set_mesh` / `use_mesh`); jax < 0.5 has neither, but the physical
+    mesh installed by a `with Mesh(...):` context is available through the
+    thread-resources environment. Either way an empty/absent mesh returns
+    None so constraints are skipped (single-process smoke tests).
+    """
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        mesh = get()
+    else:  # jax < 0.5: the mesh threaded by `with Mesh(...):`
+        try:
+            from jax._src.mesh import thread_resources
+
+            mesh = thread_resources.env.physical_mesh
+        except Exception:  # very old/new private layout — no ambient mesh
+            return None
+    if mesh is None or not mesh.axis_names:
+        return None
+    return mesh
+
+
 def _constrain(x, *logical):
-    """Best-effort sharding constraint using the ambient abstract mesh.
+    """Best-effort sharding constraint using the ambient (abstract) mesh.
 
     logical entries: 'tokens' -> data axes, 'experts' -> model axis, None.
     Skipped entirely when no mesh is set (smoke tests) or dims don't divide.
     """
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or not mesh.axis_names:
+    mesh = _ambient_mesh()
+    if mesh is None:
         return x
     names = set(mesh.axis_names)
     dp = tuple(a for a in ("pod", "data") if a in names)
@@ -109,8 +133,8 @@ def capacity(n_tokens: int, cfg: MoEConfig) -> int:
 
 def _dp_group_count(n_tokens: int) -> int:
     """Number of data shards (dispatch groups) from the ambient mesh."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or not mesh.axis_names:
+    mesh = _ambient_mesh()
+    if mesh is None:
         return 1
     g = 1
     for a in ("pod", "data"):

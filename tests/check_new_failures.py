@@ -1,0 +1,98 @@
+#!/usr/bin/env python
+"""Tier-1 gate that fails only on NEW test failures.
+
+Runs pytest over the tier-1 suite, collects the set of failed test ids, and
+compares it against the checked-in baseline `tests/known_failures.txt` (the
+pre-existing seed failures). The job:
+
+  * FAILS (exit 1) if any test outside the baseline fails — a regression is
+    caught at PR time instead of silently joining the pile;
+  * PASSES if the only failures are baseline entries;
+  * WARNS about baseline entries that now pass — delete them from the
+    baseline so they can never regress silently again;
+  * propagates pytest's own hard errors (collection error, internal error,
+    usage error) verbatim.
+
+Usage (what CI runs):
+
+    PYTHONPATH=src python tests/check_new_failures.py [extra pytest args]
+
+Extra args are forwarded to pytest (e.g. `-m "not slow"` or a subset path).
+"""
+
+from __future__ import annotations
+
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+HERE = Path(__file__).resolve().parent
+BASELINE = HERE / "known_failures.txt"
+
+# pytest summary lines look like:  FAILED tests/test_x.py::test_y[p] - Msg
+_FAILED_RE = re.compile(r"^(?:FAILED|ERROR) +(\S+)")
+
+
+def load_baseline() -> set:
+    known = set()
+    for line in BASELINE.read_text().splitlines():
+        line = line.strip()
+        if line and not line.startswith("#"):
+            known.add(line)
+    return known
+
+
+def run_pytest(extra_args) -> tuple:
+    cmd = [
+        sys.executable, "-m", "pytest", "-q", "--tb=no", "-rfE",
+        "--continue-on-collection-errors", *extra_args,
+    ]
+    print("[check_new_failures] $", " ".join(cmd), flush=True)
+    proc = subprocess.run(
+        cmd, cwd=HERE.parent, capture_output=True, text=True
+    )
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr)
+    failed = set()
+    for line in proc.stdout.splitlines():
+        m = _FAILED_RE.match(line.strip())
+        if m:
+            failed.add(m.group(1))
+    return proc.returncode, failed
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    known = load_baseline()
+    code, failed = run_pytest(argv)
+    if code == 0:
+        stale = known  # everything passed; the whole baseline is stale
+        new = set()
+    elif code == 1:
+        new = failed - known
+        stale = known - failed
+    else:
+        print(f"[check_new_failures] pytest exited {code} (hard error; "
+              "collection problem or internal error) — failing outright")
+        return code
+    if stale and not argv:
+        # only meaningful on an unfiltered run: with -m/-k/path filters a
+        # baseline entry may simply not have been collected
+        print("[check_new_failures] WARNING: baseline entries now pass — "
+              "delete them from tests/known_failures.txt:")
+        for t in sorted(stale):
+            print(f"  {t}")
+    if new:
+        print(f"[check_new_failures] {len(new)} NEW failure(s) beyond the "
+              "known baseline:")
+        for t in sorted(new):
+            print(f"  {t}")
+        return 1
+    print(f"[check_new_failures] OK: {len(failed)} failure(s), all in the "
+          f"known baseline ({len(known)} entries)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

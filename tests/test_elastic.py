@@ -36,8 +36,8 @@ from repro.models.registry import get_model
 from repro.optim import adamw_init
 
 assert len(jax.devices()) == 8
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_compat_mesh
+mesh = make_compat_mesh((2, 4), ("data", "model"))
 with jax.set_mesh(mesh):
     model = get_model("gemma2-27b", smoke=True)
     like_p = model.param_shapes()

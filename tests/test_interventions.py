@@ -1,0 +1,432 @@
+"""Time-varying intervention schedules through the whole stack.
+
+Covers the contract pinned in ISSUE 3:
+  * kernel-vs-oracle parity for multiple schedules on sir AND siard,
+  * the no-window path is bit-identical to the constant-theta path
+    (engine trajectories and the full run_abc accepted set),
+  * an intervention-enabled fit recovers a mid-horizon contact-rate drop,
+  * a campaign sweeps lockdown-day x scale scenarios with ONE compiled
+    wave loop,
+  * the forecast entry point emits strict-JSON credible bands,
+  * interpret dispatch is backend-aware and plumbed through ABCConfig.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.abc import ABCConfig, run_abc
+from repro.core.priors import schedule_prior
+from repro.epi import engine
+from repro.epi.data import get_dataset, synthetic_dataset
+from repro.epi.models import get_model
+from repro.epi.spec import EMPTY_SCHEDULE, EpiModelConfig, InterventionSchedule
+from repro.kernels import abc_sim, ops, ref
+
+POP = 1e6
+KW = dict(population=POP, a0=100.0, r0=5.0, d0=1.0)
+
+
+def _observed(model, days, seed=0):
+    cfg = EpiModelConfig(population=POP, num_days=days, a0=100.0, r0=5.0, d0=1.0)
+    th = jnp.asarray([model.default_theta], jnp.float32)
+    return engine.simulate_observed(model, th, jax.random.PRNGKey(seed), cfg)[0]
+
+
+# --------------------------------------------------------------- spec layer
+
+def test_schedule_validation():
+    with pytest.raises(ValueError, match="strictly increasing"):
+        InterventionSchedule.inferred(("alpha",), (10, 10))
+    with pytest.raises(ValueError, match="positive"):
+        InterventionSchedule.inferred(("alpha",), (0,))
+    with pytest.raises(ValueError, match="no tv_params"):
+        InterventionSchedule((), (5,), ((0.5,),), ((0.5,),))
+    with pytest.raises(ValueError, match="not a parameter"):
+        InterventionSchedule.inferred(("nope",), (5,)).shape(get_model("sir"))
+    s = InterventionSchedule.fixed(("alpha",), (10, 20), (0.3, 0.8))
+    assert s.n_windows == 2 and s.n_tv == 1 and s.n_scales == 2
+    assert s.fixed_scales() == ((0.3,), (0.8,))
+    assert s.scale_param_names() == ("alpha_w1", "alpha_w2")
+    m = get_model("siard")
+    assert s.param_width(m) == m.n_params + 2
+    assert s.shape(m).tv_indices == (m.param_names.index("alpha"),)
+
+
+def test_schedule_prior_widens_and_pins():
+    m = get_model("siard")
+    s = InterventionSchedule(
+        ("alpha",), (10, 20), ((0.4,), (0.2,)), ((0.4,), (1.0,))
+    )
+    p = schedule_prior(m, s)
+    assert p.dim == m.n_params + 2
+    assert p.lows[-2:] == (0.4, 0.2) and p.highs[-2:] == (0.4, 1.0)
+    assert p.free_dims()[-2:] == (False, True)
+    th = p.sample(jax.random.PRNGKey(0), (64,))
+    # pinned dim samples exactly its value; log_pdf stays finite there
+    assert np.all(np.asarray(th[:, -2]) == np.float32(0.4))
+    assert np.all(np.isfinite(np.asarray(p.log_pdf(th))))
+    assert schedule_prior(m, None).dim == m.n_params
+    assert schedule_prior(m, EMPTY_SCHEDULE).dim == m.n_params
+
+
+# ------------------------------------------------------------- engine layer
+
+def test_engine_empty_schedule_bit_identical():
+    m = get_model("siard")
+    cfg = EpiModelConfig(population=POP, num_days=15, a0=100.0)
+    th = m.prior().sample(jax.random.PRNGKey(1), (16,))
+    key = jax.random.PRNGKey(2)
+    base = np.asarray(engine.simulate(m, th, key, cfg))
+    for sched in (None, EMPTY_SCHEDULE):
+        out = np.asarray(engine.simulate(m, th, key, cfg, sched))
+        np.testing.assert_array_equal(base, out)
+    obs = _observed(m, 15)
+    d0, _ = engine.simulate_observed_lowmem(m, th, key, cfg, obs)
+    d1, _ = engine.simulate_observed_lowmem(m, th, key, cfg, obs, EMPTY_SCHEDULE)
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+
+
+def test_engine_unit_scales_bit_identical():
+    """A schedule whose scales are pinned at 1.0 must not change a bit."""
+    m = get_model("siard")
+    cfg = EpiModelConfig(population=POP, num_days=15, a0=100.0)
+    th = m.prior().sample(jax.random.PRNGKey(1), (16,))
+    key = jax.random.PRNGKey(2)
+    sched = InterventionSchedule.fixed(("alpha", "gamma"), (5, 10), ((1.0, 1.0), (1.0, 1.0)))
+    thw = jnp.concatenate([th, jnp.ones((16, 4), jnp.float32)], axis=1)
+    base = np.asarray(engine.simulate(m, th, key, cfg))
+    out = np.asarray(engine.simulate(m, thw, key, cfg, sched))
+    np.testing.assert_array_equal(base, out)
+
+
+def test_engine_contact_drop_suppresses_epidemic():
+    """Scaling the contact-rate params to ~0 mid-horizon must flatten the
+    infected trajectory relative to the unscaled run."""
+    m = get_model("siard")
+    days = 30
+    cfg = EpiModelConfig(population=POP, num_days=days, a0=100.0)
+    th = jnp.asarray([m.default_theta], jnp.float32)
+    key = jax.random.PRNGKey(0)
+    base = np.asarray(engine.simulate(m, th, key, cfg))  # [1, T, n_state]
+    sched = InterventionSchedule.fixed(("alpha0", "alpha"), (10,), ((0.0, 0.0),))
+    thw = jnp.concatenate([th, jnp.zeros((1, 2), jnp.float32)], axis=1)
+    locked = np.asarray(engine.simulate(m, thw, key, cfg, sched))
+    s_idx = m.compartments.index("S")
+    # before the breakpoint the trajectories agree exactly (same noise)
+    np.testing.assert_array_equal(base[:, :10], locked[:, :10])
+    # with zero infection hazard, S stops draining after the breakpoint
+    assert locked[0, -1, s_idx] == pytest.approx(locked[0, 10, s_idx])
+    assert base[0, -1, s_idx] < locked[0, -1, s_idx]
+
+
+def test_traced_breakpoints_match_static():
+    m = get_model("sir")
+    cfg = EpiModelConfig(population=POP, num_days=12, a0=50.0)
+    sched = InterventionSchedule.fixed(("beta",), (6,), (0.5,))
+    p = schedule_prior(m, sched)
+    th = p.sample(jax.random.PRNGKey(3), (8,))
+    key = jax.random.PRNGKey(4)
+    a = engine.simulate_observed(m, th, key, cfg, sched)
+    b = engine.simulate_observed(
+        m, th, key, cfg, sched, breakpoints=jnp.asarray([6], jnp.int32)
+    )
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------- kernel layer
+
+_SCHEDULES = {
+    "one_window_fixed": lambda tv: InterventionSchedule.fixed((tv,), (4,), (0.3,)),
+    "two_window_inferred": lambda tv: InterventionSchedule.inferred(
+        (tv,), (3, 8), low=0.2, high=1.5
+    ),
+}
+
+
+@pytest.mark.parametrize("model_name,tv", [("siard", "alpha"), ("sir", "beta")])
+@pytest.mark.parametrize("sched_name", sorted(_SCHEDULES))
+def test_kernel_matches_ref_under_schedule(model_name, tv, sched_name):
+    m = get_model(model_name)
+    sched = _SCHEDULES[sched_name](tv)
+    obs = _observed(m, 12)
+    th = schedule_prior(m, sched).sample(jax.random.PRNGKey(11), (300,))
+    d_k = ops.abc_sim_distance(
+        th, jnp.uint32(7), obs, tile=128, interpret=True, model=m,
+        schedule=sched, **KW
+    )
+    d_r = ref.abc_sim_distance_ref(
+        th, jnp.uint32(7), obs, model=m, schedule=sched, **KW
+    )
+    np.testing.assert_allclose(
+        np.asarray(d_k), np.asarray(d_r), rtol=2e-6, atol=1e-3
+    )
+
+
+def test_kernel_schedule_tile_invariance():
+    m = get_model("siard")
+    sched = InterventionSchedule.inferred(("alpha",), (5,))
+    obs = _observed(m, 10)
+    th = schedule_prior(m, sched).sample(jax.random.PRNGKey(5), (512,))
+    d1 = ops.abc_sim_distance(th, jnp.uint32(9), obs, tile=128,
+                              interpret=True, model=m, schedule=sched, **KW)
+    d2 = ops.abc_sim_distance(th, jnp.uint32(9), obs, tile=512,
+                              interpret=True, model=m, schedule=sched, **KW)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-6)
+
+
+def test_kernel_traced_breakpoints_share_compile():
+    """Sweeping the lockdown day must not grow the jit cache: breakpoints
+    ride the iconst lanes, so only the schedule SHAPE is a compile key."""
+    m = get_model("siard")
+    obs = _observed(m, 10)
+    base = ops._abc_sim_distance_jit._cache_size()
+    for day in (3, 5, 7):
+        sched = InterventionSchedule.fixed(("alpha",), (day,), (0.5,))
+        th = schedule_prior(m, sched).sample(jax.random.PRNGKey(day), (128,))
+        ops.abc_sim_distance(th, jnp.uint32(1), obs, tile=128,
+                             interpret=True, model=m, schedule=sched, **KW)
+    assert ops._abc_sim_distance_jit._cache_size() == base + 1
+
+
+# ---------------------------------------------------------------- ABC layer
+
+def _abc_cfg(**kw):
+    base = dict(
+        batch_size=2048, tolerance=5e3, target_accepted=20, strategy="outfeed",
+        chunk_size=2048, max_runs=20, num_days=12, backend="xla_fused",
+        model="siard",
+    )
+    base.update(kw)
+    return ABCConfig(**base)
+
+
+def test_run_abc_empty_schedule_same_accepted_set():
+    """Regression pin: schedule=None (the pre-intervention code path) and an
+    EMPTY schedule produce the SAME accepted set for the same seed."""
+    ds = get_dataset("synthetic_small", num_days=12)
+    for wave_loop in ("host", "device"):
+        p_none = run_abc(ds, _abc_cfg(wave_loop=wave_loop), key=0)
+        p_empty = run_abc(
+            ds, _abc_cfg(wave_loop=wave_loop, schedule=EMPTY_SCHEDULE), key=0
+        )
+        np.testing.assert_array_equal(p_none.theta, p_empty.theta)
+        np.testing.assert_array_equal(p_none.distances, p_empty.distances)
+        assert p_none.runs == p_empty.runs
+        assert tuple(p_empty.param_names) == tuple(p_none.param_names)
+
+
+def test_intervention_fit_recovers_contact_drop():
+    """The acceptance scenario: a SIARD country-style dataset generated WITH
+    a mid-horizon contact-rate drop (alpha0 x0.1 from day 10) is fitted with
+    an inferred single-window schedule. Differential check: the same fit
+    pipeline on the SAME dynamics without the drop must place the scale
+    posterior clearly higher — the intervention is detected from data."""
+    import dataclasses as dc
+
+    from repro.core.abc import calibrate_tolerance
+
+    days = 24
+    theta = (0.4, 30.0, 0.8, 0.05, 0.3, 0.01, 0.5, 1.0)
+    fit_sched = InterventionSchedule.inferred(("alpha0",), (10,), 0.0, 2.0)
+    means = {}
+    for label, gen_sched in (
+        ("drop", InterventionSchedule.fixed(("alpha0",), (10,), (0.1,))),
+        ("flat", None),
+    ):
+        ds = synthetic_dataset(
+            theta=theta, population=POP, num_days=days, a0=100.0, seed=11,
+            name=f"synthetic_{label}", model="siard", schedule=gen_sched,
+        )
+        cfg = _abc_cfg(
+            batch_size=8192, num_days=days, schedule=fit_sched,
+            target_accepted=40, max_runs=40, chunk_size=8192,
+        )
+        eps = calibrate_tolerance(ds, cfg, key=1, quantile=1e-3, n_pilot=16384)
+        post = run_abc(ds, dc.replace(cfg, tolerance=eps), key=1)
+        assert len(post) >= 40
+        assert post.param_names[-1] == "alpha0_w1"
+        means[label] = float(post.theta[:, -1].mean())
+    # prior mean is 1.0, generating value 0.1: the lockdown posterior sits
+    # well below both the prior mean and the no-lockdown posterior
+    assert means["drop"] < 0.9, means
+    assert means["flat"] > means["drop"] + 0.2, means
+
+
+def test_campaign_intervention_sweep_one_compile(tmp_path):
+    """lockdown-day x scale grid: 4 scenarios, ONE compiled wave loop."""
+    from repro.core.campaign import CampaignConfig, run_campaign
+
+    ivs = tuple(
+        InterventionSchedule.fixed(("alpha",), (day,), (scale,))
+        for day in (5, 8)
+        for scale in (0.4, 0.8)
+    )
+    cfg = CampaignConfig(
+        datasets=("synthetic_small",), models=("siard",),
+        backends=("xla_fused",), seeds=(0,), interventions=ivs,
+        batch_size=1024, num_days=12, target_accepted=5,
+        auto_quantile=0.02, pilot_size=1024, max_runs=30,
+        out_dir=str(tmp_path / "iv_campaign"), checkpoint_every=8,
+    )
+    report = run_campaign(cfg)
+    assert len(report.scenarios) == 4
+    assert report.compiled_shapes == 1
+    names = set()
+    for r in report.scenarios:
+        assert r.status == "ok", (r.name, r.status, r.detail)
+        names.add(r.name)
+        # the pinned scale comes back exactly (zero-width prior dim)
+        sc = [s for s in ivs if s.tag() in r.name][0]
+        want = sc.fixed_scales()[0][0]
+        assert r.posterior_mean["alpha_w1"] == pytest.approx(want, rel=1e-5)
+    assert len(names) == 4  # schedule tag disambiguates scenario names
+    payload = json.loads(
+        (tmp_path / "iv_campaign" / "campaign_report.json").read_text()
+    )
+    assert len(payload["scenarios"]) == 4
+
+
+@pytest.mark.slow
+def test_distributed_runners_use_widened_prior():
+    """Sharded runner factories must sample the schedule-widened prior: a
+    base-width prior would silently clamp the scale-column read (wrong
+    distances) and then crash building the Posterior."""
+    from conftest import run_in_subprocess
+
+    out = run_in_subprocess(
+        """
+import jax
+from repro.core.abc import ABCConfig, run_abc
+from repro.core.distributed import make_runner, make_wave_runner
+from repro.epi.data import get_dataset
+from repro.epi.spec import InterventionSchedule
+from repro.launch.mesh import make_host_mesh
+
+ds = get_dataset("synthetic_small", num_days=12)
+cfg = ABCConfig(batch_size=1024, tolerance=5e3, target_accepted=10,
+                strategy="outfeed", chunk_size=256, max_runs=10, num_days=12,
+                backend="xla_fused", model="siard",
+                schedule=InterventionSchedule.inferred(("alpha0",), (6,)))
+mesh = make_host_mesh(model=1)
+p1 = run_abc(ds, cfg, key=0, run_fn=make_runner(mesh, ds, cfg))
+p2 = run_abc(ds, cfg, key=0, wave_runner=make_wave_runner(mesh, ds, cfg))
+assert p1.theta.shape[1] == 9 and p2.theta.shape[1] == 9
+assert p1.param_names[-1] == "alpha0_w1"
+print("OK", len(p1), len(p2))
+""",
+        n_devices=4,
+    )
+    assert "OK" in out
+
+
+def test_smc_schedule_pinned_dims_survive_perturbation():
+    """SMC with a mixed inferred+pinned schedule: pinned scale columns get
+    zero perturbation noise and stay exactly at their value through every
+    round; weights remain a valid distribution."""
+    from repro.core.smc import SMCConfig, run_smc_abc
+
+    ds = get_dataset("synthetic_small", num_days=12)
+    sched = InterventionSchedule(
+        ("alpha0",), (4, 8), ((0.0,), (0.5,)), ((2.0,), (0.5,))
+    )
+    cfg = SMCConfig(
+        n_particles=32, batch_size=1024, n_rounds=2, num_days=12,
+        schedule=sched,
+    )
+    post = run_smc_abc(ds, cfg, key=0)
+    assert post.param_names[-2:] == ("alpha0_w1", "alpha0_w2")
+    assert np.all(post.theta[:, -1] == np.float32(0.5))
+    assert np.isfinite(post.weights).all() and post.weights.sum() > 0
+
+
+# ------------------------------------------------------------ forecast + CLI
+
+def test_posterior_forecast_strict_json():
+    from repro.launch.abc_run import posterior_forecast
+
+    ds = get_dataset("synthetic_small", num_days=12)
+    cfg = _abc_cfg()
+    post = run_abc(ds, cfg, key=0)
+    bands = posterior_forecast(post.theta, ds, cfg, horizon=6, key=5)
+    text = json.dumps(bands, allow_nan=False)  # strict JSON round-trip
+    back = json.loads(text)
+    assert back["total_days"] == 18 and back["fit_days"] == 12
+    for name in ("A", "R", "D"):
+        ch = back["channels"][name]
+        assert len(ch["mean"]) == 18
+        for lo, mid, hi in zip(ch["q05"], ch["q50"], ch["q95"]):
+            assert lo <= mid <= hi
+        assert len(back["observed"][name]) == 12
+
+
+def test_posterior_forecast_counterfactual_schedule():
+    """Forecasting under a DIFFERENT fixed schedule replaces the fitted
+    scale columns with the counterfactual's pinned values."""
+    from repro.launch.abc_run import posterior_forecast
+
+    ds = get_dataset("synthetic_small", num_days=12)
+    fit_sched = InterventionSchedule.inferred(("alpha",), (6,))
+    cfg = _abc_cfg(schedule=fit_sched, tolerance=8e3)
+    post = run_abc(ds, cfg, key=0)
+    assert len(post) > 0
+    cf = InterventionSchedule.fixed(("alpha",), (6,), (0.0,))
+    bands = posterior_forecast(post.theta, ds, cfg, horizon=4, schedule=cf, key=2)
+    assert bands["schedule"]["scale_lows"] == [[0.0]]
+    json.dumps(bands, allow_nan=False)
+
+
+def test_parse_intervention_grammar():
+    from repro.launch.abc_run import parse_intervention
+
+    assert parse_intervention("") is None
+    assert parse_intervention("none") is None
+    s = parse_intervention("alpha@25=0.3")
+    assert s.breakpoints == (25,) and s.fixed_scales() == ((0.3,),)
+    s = parse_intervention("alpha@25=0.1:1,40")
+    assert s.breakpoints == (25, 40)
+    assert s.scale_lows == ((0.1,), (0.0,))
+    assert s.scale_highs == ((1.0,), (2.0,))
+    s = parse_intervention("alpha+gamma@30=0.5+0.8")
+    assert s.tv_params == ("alpha", "gamma")
+    assert s.fixed_scales() == ((0.5, 0.8),)
+    with pytest.raises(ValueError):
+        parse_intervention("alpha25")
+
+
+# ----------------------------------------------------------- interpret flag
+
+def test_auto_interpret_is_backend_aware():
+    # on this CPU container auto mode must pick the interpreter...
+    assert jax.default_backend() == "cpu"
+    assert abc_sim.auto_interpret() is True
+    # ...and the auto decision is what a None flag resolves to
+    assert ops._auto_interpret() is abc_sim.auto_interpret()
+
+
+def test_abcconfig_interpret_plumbs_to_kernel(monkeypatch):
+    from repro.core.abc import make_simulator
+    from repro.kernels import ops as kernel_ops
+
+    seen = {}
+    real = kernel_ops.abc_sim_distance
+
+    def spy(*a, **kw):
+        seen["interpret"] = kw.get("interpret")
+        return real(*a, **kw)
+
+    monkeypatch.setattr(kernel_ops, "abc_sim_distance", spy)
+    ds = get_dataset("synthetic_small", num_days=8)
+    sim = make_simulator(ds, _abc_cfg(backend="pallas", interpret=True))
+    d = sim(get_model("siard").prior().sample(jax.random.PRNGKey(0), (128,)),
+            jax.random.PRNGKey(1))
+    assert seen["interpret"] is True
+    assert np.isfinite(np.asarray(d)).all()
+    # None flows through so the kernel wrapper applies the backend default
+    sim = make_simulator(ds, _abc_cfg(backend="pallas"))
+    sim(get_model("siard").prior().sample(jax.random.PRNGKey(0), (128,)),
+        jax.random.PRNGKey(1))
+    assert seen["interpret"] is None

@@ -16,8 +16,8 @@ from repro.launch.steps import build_train_step, build_prefill_step, build_decod
 from repro.models.registry import get_model
 from repro.optim import adamw_init
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_compat_mesh
+mesh = make_compat_mesh((2, 4), ("data", "model"))
 results = []
 with jax.set_mesh(mesh):
     for arch in ("gemma2-27b", "qwen3-moe-30b-a3b", "mamba2-130m"):

@@ -1,6 +1,10 @@
 """Host wave loop vs device-resident wave loop: before/after throughput.
 
     PYTHONPATH=src python benchmarks/bench_wave_loop.py [--batch 8192] [--waves 16]
+    # nightly (backend, summary, distance) sweep:
+    PYTHONPATH=src python benchmarks/bench_wave_loop.py \
+        --backends xla_fused pallas --summaries identity weekly log_weekly \
+        --distances euclidean mae normalized_euclidean
 
 Runs the SAME wave budget (target_accepted unreachable, max_runs fixed)
 through both drivers of `run_abc`:
@@ -11,10 +15,16 @@ through both drivers of `run_abc`:
            buffers; a single host sync at the end
 
 Both see identical sample streams (pinned by tests/test_wave_loop.py), so the
-delta is pure loop/dispatch overhead. The JSON artifact also embeds the raw
-simulator throughput from experiments/bench/model_sweep.json (when present)
-so regressions against the `bench_model_sweep` baseline are visible in one
-place — wave-loop sims/s can approach but never exceed the raw simulator.
+delta is pure loop/dispatch overhead. The grid additionally sweeps the
+summary-statistic and distance axes (core.summaries): every cell records
+`cost_vs_identity_euclidean`, the device-loop throughput of that
+(summary, distance) pair relative to the identity+euclidean cell of the same
+(model, backend) — the number that tracks what non-euclidean statistics cost
+the fused paths over time (the nightly JSON artifact carries it). The JSON
+artifact also embeds the raw simulator throughput from
+experiments/bench/model_sweep.json (when present) so regressions against the
+`bench_model_sweep` baseline are visible in one place — wave-loop sims/s can
+approach but never exceed the raw simulator.
 """
 
 import argparse
@@ -23,8 +33,6 @@ import sys
 import time
 from pathlib import Path
 
-import jax
-import numpy as np
 
 sys.path.insert(0, str(Path(__file__).resolve().parent))
 from common import RESULTS_DIR, render_table, save_result  # noqa: E402
@@ -36,15 +44,17 @@ from repro.epi.models import get_model  # noqa: E402
 DAYS = 20
 
 
-def calibrate(ds, model, backend, quantile=0.01):
-    """Per-model epsilon at ~1% acceptance so the accept path carries
-    realistic traffic for every model's distance scale."""
+def calibrate(ds, model, backend, summary, distance, quantile=0.01):
+    """Per-cell epsilon at ~1% acceptance so the accept path carries
+    realistic traffic for every (model, summary, distance) scale — the
+    production pilot-wave calibration, not a benchmark-local copy."""
+    from repro.core.abc import calibrate_tolerance
+
     cfg = ABCConfig(batch_size=4096, num_days=DAYS, chunk_size=4096,
-                    backend=backend, model=model)
-    sim = jax.jit(make_simulator(ds, cfg))
-    th = get_model(model).prior().sample(jax.random.PRNGKey(42), (4096,))
-    d = np.asarray(sim(th, jax.random.PRNGKey(43)))
-    return float(np.quantile(d[np.isfinite(d)], quantile))
+                    backend=backend, model=model, summary=summary,
+                    distance=distance)
+    return calibrate_tolerance(ds, cfg, key=42, quantile=quantile,
+                               n_pilot=4096)
 
 
 def make_driver(ds, cfg):
@@ -62,11 +72,17 @@ def make_driver(ds, cfg):
     return lambda key: run_abc(ds, cfg, key=key, run_fn=run_fn)
 
 
-def run_once(driver, key=0):
-    t0 = time.perf_counter()
-    post = driver(key)
-    dt = time.perf_counter() - t0
-    return post, dt
+def run_once(driver, key=0, reps=1):
+    """Best-of-`reps` wall time: single-run noise on this workload (~5-10%
+    between identical runs) would otherwise swamp exactly the fused-path
+    cost deltas the nightly sweep tracks."""
+    best, post = None, None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        post = driver(key)
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+    return post, best
 
 
 def main(argv=None):
@@ -75,51 +91,87 @@ def main(argv=None):
     ap.add_argument("--waves", type=int, default=16)
     ap.add_argument("--models", nargs="+", default=["siard", "sir"])
     ap.add_argument("--backends", nargs="+", default=["xla_fused"])
+    ap.add_argument("--summaries", nargs="+", default=["identity"],
+                    help="summary-statistic sweep axis (core.summaries names)")
+    ap.add_argument("--distances", nargs="+", default=["euclidean"],
+                    help="distance-kind sweep axis (core.summaries names)")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="timed repetitions per cell (best-of; warmup "
+                         "excluded) — single runs are too noisy to track "
+                         "the summary-statistic cost")
+    ap.add_argument("--out-name", default="wave_loop",
+                    help="artifact basename under experiments/bench/ (the "
+                         "nightly job writes the default run and the summary "
+                         "sweep to separate JSON files)")
     args = ap.parse_args(argv)
 
     # unreachable target so both drivers burn the full wave budget, but small
     # enough that the accept buffer (target + batch rows) stays device-sized
     target = args.waves * args.batch + 1
 
-    rows, payload = [], {"batch": args.batch, "waves": args.waves, "runs": []}
+    rows, payload = [], {"batch": args.batch, "waves": args.waves,
+                         "reps": args.reps, "runs": []}
+    # identity+euclidean device-loop sims/s per (model, backend): the
+    # baseline the sweep cells are costed against
+    baseline: dict = {}
+    grid = [(s, d) for s in args.summaries for d in args.distances]
+    # the baseline cell must run FIRST (every other cell is costed against
+    # it), wherever — or whether — it appeared in the requested grid
+    base_pair = ("identity", "euclidean")
+    if base_pair in grid:
+        grid.remove(base_pair)
+    grid.insert(0, base_pair)
     for model in args.models:
         ds = get_dataset("synthetic_small", num_days=DAYS, model=model)
         for backend in args.backends:
-            tol = calibrate(ds, model, backend)
-            per_loop = {}
-            for loop in ("host", "device"):
-                cfg = ABCConfig(
-                    batch_size=args.batch, tolerance=tol,
-                    target_accepted=target, max_runs=args.waves,
-                    chunk_size=args.batch, num_days=DAYS, backend=backend,
-                    model=model, wave_loop=loop,
-                )
-                driver = make_driver(ds, cfg)
-                run_once(driver, key=0)  # warmup: compile + first wave set
-                post, dt = run_once(driver, key=1)
-                sims_per_s = post.simulations / dt
-                per_loop[loop] = {
-                    "wall_s": dt, "simulations": post.simulations,
-                    "sims_per_s": sims_per_s,
-                }
-                rows.append([model, backend, loop, f"{dt*1e3:.1f}",
-                             f"{sims_per_s:,.0f}"])
-            speedup = (per_loop["device"]["sims_per_s"]
-                       / per_loop["host"]["sims_per_s"])
-            payload["runs"].append({
-                "model": model, "backend": backend, **per_loop,
-                "device_over_host_speedup": speedup,
-            })
-            rows.append([model, backend, "speedup", "",
-                         f"{speedup:.2f}x"])
+            for summary, distance in grid:
+                tol = calibrate(ds, model, backend, summary, distance)
+                per_loop = {}
+                for loop in ("host", "device"):
+                    cfg = ABCConfig(
+                        batch_size=args.batch, tolerance=tol,
+                        target_accepted=target, max_runs=args.waves,
+                        chunk_size=args.batch, num_days=DAYS, backend=backend,
+                        model=model, wave_loop=loop,
+                        summary=summary, distance=distance,
+                    )
+                    driver = make_driver(ds, cfg)
+                    run_once(driver, key=0)  # warmup: compile + first wave set
+                    post, dt = run_once(driver, key=1, reps=args.reps)
+                    sims_per_s = post.simulations / dt
+                    per_loop[loop] = {
+                        "wall_s": dt, "simulations": post.simulations,
+                        "sims_per_s": sims_per_s,
+                    }
+                    rows.append([model, backend, summary, distance, loop,
+                                 f"{dt*1e3:.1f}", f"{sims_per_s:,.0f}"])
+                speedup = (per_loop["device"]["sims_per_s"]
+                           / per_loop["host"]["sims_per_s"])
+                if (summary, distance) == ("identity", "euclidean"):
+                    baseline[(model, backend)] = per_loop["device"]["sims_per_s"]
+                base = baseline.get((model, backend))
+                cost = (per_loop["device"]["sims_per_s"] / base) if base else None
+                payload["runs"].append({
+                    "model": model, "backend": backend, "summary": summary,
+                    "distance": distance, **per_loop,
+                    "device_over_host_speedup": speedup,
+                    # < 1.0 = this statistic costs fused throughput vs the
+                    # paper's raw euclidean; the nightly artifact tracks it
+                    "cost_vs_identity_euclidean": cost,
+                })
+                rows.append([model, backend, summary, distance, "speedup", "",
+                             f"{speedup:.2f}x"])
 
     # embed the raw-simulator baseline so one artifact shows the trajectory
     sweep_path = RESULTS_DIR / "model_sweep.json"
     if sweep_path.exists():
         payload["model_sweep_baseline"] = json.loads(sweep_path.read_text())
 
-    print(render_table(["model", "backend", "loop", "wall_ms", "sims/s"], rows))
-    path = save_result("wave_loop", payload)
+    print(render_table(
+        ["model", "backend", "summary", "distance", "loop", "wall_ms",
+         "sims/s"], rows))
+    # basename only: the artifact always lands under experiments/bench/
+    path = save_result(Path(args.out_name).name, payload)
     print(f"\nsaved {path}")
     return payload
 

@@ -33,6 +33,13 @@ The engine is resumable (ABCState) and backend-pluggable:
   backend="xla"        paper-faithful full-trajectory simulate + distance
   backend="xla_fused"  running-distance scan (no [B,3,T] materialization)
   backend="pallas"     fused VMEM-resident Pallas kernel (repro.kernels)
+
+Every backend accepts every registered (summary, distance) pair
+(ABCConfig.summary / ABCConfig.distance, see repro.core.summaries): the
+"xla" path applies the summary post hoc, "xla_fused" folds it into the
+running scan, and "pallas" lowers it into the kernel's per-day accumulator
+with the weights/selectors riding scalar const lanes. The default
+(identity, euclidean) is bit-identical to pre-summary releases.
 """
 
 from __future__ import annotations
@@ -51,6 +58,14 @@ import numpy as np
 from repro.core.distances import DISTANCES
 from repro.core.posterior import Posterior
 from repro.core.priors import UniformBoxPrior, schedule_prior
+from repro.core.summaries import (
+    SummarySpec,
+    apply_summary,
+    get_distance_kind,
+    get_summary,
+    lower_summary,
+    summary_distance,
+)
 from repro.epi import engine
 from repro.epi.data import CountryData
 from repro.epi.models import get_model
@@ -90,6 +105,12 @@ class ABCConfig:
     #: False forces a compiled kernel, None auto-selects by backend
     #: (interpret only when jax runs on CPU)
     interpret: Optional[bool] = None
+    #: summary statistic compared by `distance`: a registry name
+    #: (core.summaries.SUMMARIES), a SummarySpec, or None for the paper's raw
+    #: daily trajectories. Every backend lowers every (summary, distance)
+    #: pair; the default (None, "euclidean") is bit-identical to pre-summary
+    #: releases on all three backends (pinned by tests/test_summaries.py).
+    summary: Optional[object] = None
 
     def __post_init__(self):
         if self.strategy not in ("outfeed", "topk"):
@@ -98,6 +119,8 @@ class ABCConfig:
             raise ValueError("batch_size must be a multiple of chunk_size")
         if self.backend not in ("xla", "xla_fused", "pallas"):
             raise ValueError(f"unknown backend {self.backend!r}")
+        get_distance_kind(self.distance)  # raises on unknown names
+        get_summary(self.summary)
         if self.wave_loop not in ("auto", "host", "device"):
             raise ValueError(f"unknown wave_loop {self.wave_loop!r}")
         if self.wave_loop == "device" and self.strategy == "topk":
@@ -113,6 +136,11 @@ class ABCConfig:
     @property
     def num_chunks(self) -> int:
         return self.batch_size // self.chunk_size
+
+    @property
+    def summary_spec(self) -> SummarySpec:
+        """The resolved SummarySpec (None -> identity)."""
+        return get_summary(self.summary)
 
 
 class RunOutput(NamedTuple):
@@ -170,15 +198,17 @@ def make_parametric_simulator(spec, cfg: ABCConfig):
     """
     from repro.epi.spec import EpiModelConfig
 
-    dist_fn = DISTANCES[cfg.distance]
     if cfg.backend == "pallas":
         raise ValueError(
             "pallas bakes (population, a0, r0, d0) into the kernel as static "
             "constants; build a per-dataset simulator with make_simulator"
         )
-    if cfg.backend == "xla_fused" and cfg.distance != "euclidean":
-        raise ValueError("xla_fused backend implements euclidean only")
     schedule = cfg.schedule
+    summary = cfg.summary_spec
+    # identity summaries keep the legacy full-trajectory distance functions
+    # (bit-compat for all three registered distances); a real summary lowers
+    # as a post-hoc transform on the paper-faithful path
+    dist_fn = DISTANCES[cfg.distance] if summary.is_identity else None
 
     def simulator(theta: Array, key: Array, data: ScenarioData) -> Array:
         observed, population, a0, r0, d0 = data[:5]
@@ -190,9 +220,15 @@ def make_parametric_simulator(spec, cfg: ABCConfig):
             sim = engine.simulate_observed(
                 spec, theta, key, mcfg, schedule, breakpoints
             )
-            return dist_fn(sim, observed)
+            if dist_fn is not None:
+                return dist_fn(sim, observed)
+            lowered = lower_summary(summary, cfg.distance, observed)
+            return summary_distance(
+                cfg.distance, lowered, apply_summary(summary, sim)
+            )
         d, _ = engine.simulate_observed_lowmem(
-            spec, theta, key, mcfg, observed, schedule, breakpoints
+            spec, theta, key, mcfg, observed, schedule, breakpoints,
+            summary=summary, distance=cfg.distance,
         )
         return d
 
@@ -244,8 +280,6 @@ def make_simulator(dataset: CountryData, cfg: ABCConfig) -> SimulatorFn:
             return parametric(theta, key, data)
 
     else:  # pallas
-        if cfg.distance != "euclidean":
-            raise ValueError("pallas backend implements euclidean only")
         from repro.kernels import ops as kernel_ops
 
         def simulator(theta: Array, key: Array) -> Array:
@@ -263,6 +297,8 @@ def make_simulator(dataset: CountryData, cfg: ABCConfig) -> SimulatorFn:
                 model=spec,
                 schedule=cfg.schedule,
                 interpret=cfg.interpret,
+                summary=cfg.summary_spec,
+                distance=cfg.distance,
             )
 
     return simulator

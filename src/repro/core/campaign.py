@@ -56,6 +56,7 @@ from repro.core.abc import (
     wave_capacity,
 )
 from repro.core.priors import schedule_prior
+from repro.core.summaries import get_summary
 from repro.epi.data import get_dataset
 from repro.epi.models import get_model
 from repro.epi.spec import InterventionSchedule
@@ -72,12 +73,24 @@ class Scenario:
     #: optional intervention schedule (lockdown-day x scale sweeps); cells
     #: whose schedules share a SHAPE share one compiled wave loop
     schedule: Optional[InterventionSchedule] = None
+    #: summary statistic compared by `distance` (SummarySpec / registry
+    #: name / None = the paper's raw daily trajectories)
+    summary: Optional[object] = None
+    #: distance kind (core.summaries.DISTANCE_KINDS); part of the scenario's
+    #: identity so campaigns differing only in distance can never share a
+    #: checkpoint directory
+    distance: str = "euclidean"
 
     @property
     def name(self) -> str:
         base = f"{self.dataset}__{self.model}__{self.backend}__s{self.seed}"
         if self.schedule is not None and not self.schedule.is_empty:
             base += f"__{self.schedule.tag()}"
+        spec = get_summary(self.summary)
+        if not spec.is_identity:
+            base += f"__{spec.tag()}"
+        if self.distance != "euclidean":
+            base += f"__{self.distance}"
         return base
 
 
@@ -95,6 +108,15 @@ class CampaignConfig:
     #: breakpoint days and scale bounds are traced scenario data; sweeping
     #: lockdown-day x post-lockdown-scale grids never re-traces.
     interventions: Tuple[Optional[InterventionSchedule], ...] = (None,)
+    #: summary-statistic grid axis: SummarySpec instances or registry names
+    #: (core.summaries.SUMMARIES); None is the raw-trajectory cell. The
+    #: Pallas kernel itself compiles once across summary cells (weights and
+    #: selectors are runtime lanes); the surrounding wave loop bakes the
+    #: static spec into its closure, so each distinct summary gets its own
+    #: (cheap) wave-loop trace — one shape-cache entry per summary cell.
+    summaries: Tuple[Optional[object], ...] = (None,)
+    #: distance kind shared by every cell (core.summaries.DISTANCE_KINDS)
+    distance: str = "euclidean"
     #: Pallas dispatch override for backend="pallas" cells (ABCConfig.interpret)
     interpret: Optional[bool] = None
     # per-scenario ABC shape (shared across the grid so compilations are
@@ -120,12 +142,14 @@ class CampaignConfig:
 
     def scenarios(self) -> List[Scenario]:
         return [
-            Scenario(dataset=d, model=m, backend=b, seed=s, schedule=iv)
+            Scenario(dataset=d, model=m, backend=b, seed=s, schedule=iv,
+                     summary=su, distance=self.distance)
             for d in self.datasets
             for m in self.models
             for b in self.backends
             for s in self.seeds
             for iv in self.interventions
+            for su in self.summaries
         ]
 
     def abc_config(self, sc: Scenario, tolerance: float) -> ABCConfig:
@@ -142,6 +166,8 @@ class CampaignConfig:
             wave_loop="device",
             schedule=sc.schedule,
             interpret=self.interpret,
+            summary=sc.summary,
+            distance=sc.distance,
         )
 
 
@@ -262,6 +288,11 @@ class _ShapeCache:
         # one cache entry
         if sc.schedule is not None and not sc.schedule.is_empty:
             key += (sc.schedule.n_windows, sc.schedule.tv_params)
+        # the summary spec is baked (static) into the simulator closure, so
+        # each summary cell owns a wave-loop entry; inside the pallas entry
+        # the kernel itself still compiles once across summary cells because
+        # weights/selectors ride runtime lanes
+        key += (get_summary(sc.summary), sc.distance)
         if sc.backend == "pallas":
             # pallas bakes the dataset scalars (and schedule constants) into
             # the kernel — the documented per-dataset compile exception

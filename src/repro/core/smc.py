@@ -38,6 +38,11 @@ class SMCConfig:
     min_tolerance: float = 0.0
     #: registry name of the compartmental model to infer (repro.epi.models)
     model: str = "siard"
+    #: distance kind over summary values (core.summaries.DISTANCE_KINDS)
+    distance: str = "euclidean"
+    #: summary statistic (SummarySpec / registry name / None = raw daily);
+    #: lowered by every backend exactly as in rejection ABC
+    summary: Optional[object] = None
     #: optional intervention schedule; particles widen with per-window scale
     #: columns (pinned zero-width scale dims are never perturbed)
     schedule: Optional[InterventionSchedule] = None
@@ -133,6 +138,8 @@ def run_smc_abc(
         model=cfg.model,
         schedule=cfg.schedule,
         interpret=cfg.interpret,
+        distance=cfg.distance,
+        summary=cfg.summary,
     )
     simulator = make_simulator(dataset, abc_cfg)
     sim_jit = jax.jit(simulator)

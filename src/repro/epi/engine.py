@@ -247,29 +247,50 @@ def simulate_observed_lowmem(
     observed: jax.Array,
     schedule: Optional[InterventionSchedule] = None,
     breakpoints=None,
+    summary=None,
+    distance: str = "euclidean",
 ) -> Tuple[jax.Array, jax.Array]:
-    """Fused simulate + running squared-distance accumulation.
+    """Fused simulate + running summary-distance accumulation.
 
     The beyond-paper memory optimization (DESIGN.md §2): never materialize
-    the [B, n_obs, T] trajectory; accumulate sum-of-squares against
-    `observed` [n_obs, T] per day. Returns (distance [B], final state).
+    the [B, n_obs, T] trajectory; fold the (summary, distance) pair into the
+    day scan via the generalized running accumulator (core.summaries).
+    Returns (distance [B], final state).
+
+    `summary` is a SummarySpec / registry name / None; the default
+    (identity, "euclidean") reduces to exactly the legacy running
+    sum-of-squares — flush and weights are constant 1.0 and every transform
+    select is constant-false, so outputs stay bit-identical to pre-summary
+    releases (pinned by tests/test_summaries.py).
 
     This is the pure-XLA analogue of the Pallas kernel; the kernel
     additionally keeps the whole loop in VMEM.
     """
+    from repro.core.summaries import (
+        get_distance_kind,
+        get_summary,
+        lower_summary,
+        running_day,
+        running_finalize,
+    )
+
+    spec = get_summary(summary)
+    kind = get_distance_kind(distance)
+    lowered = lower_summary(spec, distance, observed)
     theta = jnp.asarray(theta, jnp.float32)
     batch_shape = theta.shape[:-1]
     obs_idx = model.observed_idx
     state0 = initial_state(model, theta, cfg)
-    # derive from state0 so the carry inherits its varying mesh axes when this
-    # runs inside shard_map (scan carries must have uniform vma types)
+    # derive from state0 so the carries inherit its varying mesh axes when
+    # this runs inside shard_map (scan carries must have uniform vma types)
     acc0 = state0[..., 0] * 0.0
-    obs_by_day = jnp.swapaxes(jnp.asarray(observed, jnp.float32), 0, 1)  # [T, n_obs]
+    chan0 = state0[..., obs_idx] * 0.0  # [..., n_obs] cum/bin carries
+    obs_by_day = jnp.swapaxes(lowered.obs_summary, 0, 1)  # [T, n_obs]
     bp = _breakpoint_scalars(schedule, breakpoints)
 
     def step(carry, inp):
-        state, acc = carry
-        day, obs_t = inp
+        state, cum, binv, acc = carry
+        day, obs_t, flush_t = inp
         z = jax.random.normal(
             jax.random.fold_in(key, day),
             batch_shape + (model.n_transitions,),
@@ -277,10 +298,14 @@ def simulate_observed_lowmem(
         )
         th_d = effective_theta(model, schedule, theta, day, bp)
         nxt = tau_leap_step(model, state, th_d, z, cfg.population)
-        diff = nxt[..., obs_idx] - obs_t
-        acc = acc + jnp.sum(diff * diff, axis=-1)
-        return (nxt, acc), None
+        cum, binv, acc = running_day(
+            spec, kind, lowered.weights, nxt[..., obs_idx], obs_t, flush_t,
+            cum, binv, acc,
+        )
+        return (nxt, cum, binv, acc), None
 
     days = jnp.arange(cfg.num_days)
-    (state_f, acc_f), _ = jax.lax.scan(step, (state0, acc0), (days, obs_by_day))
-    return jnp.sqrt(acc_f), state_f
+    (state_f, _, _, acc_f), _ = jax.lax.scan(
+        step, (state0, chan0, chan0, acc0), (days, obs_by_day, lowered.flush)
+    )
+    return running_finalize(kind, lowered.mean_scale, acc_f), state_f

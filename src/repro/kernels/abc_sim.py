@@ -37,8 +37,18 @@ rows are selected per day by unrolled VREG selects against the window index
 lockdown-day sweep reuses one compiled kernel). The n_state channels are (1,
 TB) rows
 carried through the day loop as values (VREGs), not refs. `TB` defaults to
-1024 lanes -> peak VMEM per cell ~ (n_state + n_params + n_trans) * 4 KB,
-far under the ~16 MB/core budget, leaving room for concurrent grid cells.
+1024 lanes -> peak VMEM per cell ~ (n_state + n_params + n_trans +
+2*n_obs) * 4 KB (the 2*n_obs rows are the summary accumulator's cum/bin
+carries), far under the ~16 MB/core budget, leaving room for concurrent
+grid cells.
+
+The per-day distance accumulation is the traced-select lowering of the
+generalized summary accumulator (repro.core.summaries): the observed block
+arrives PRE-SUMMARIZED, and the channel weights / transform selectors /
+distance finalizer ride fconst+iconst lanes exactly like the intervention
+breakpoints — so a (summary, distance) sweep shares one compiled kernel,
+and the default identity+euclidean lanes reproduce the legacy running
+Euclidean bit-for-bit.
 
 The kernel returns per-sample distances; accept/compaction stays in XLA
 (lax.top_k / chunk flags) because it is O(B) cheap and the paper's two
@@ -57,11 +67,22 @@ from repro.epi import engine
 from repro.epi.spec import CompartmentalModel, ScheduleShape
 from repro.kernels import rng as krng
 
-# fconsts layout (f32): [population, a0, r0, d0, num_days, 0...]
-# iconsts layout (i32): [seed, breakpoint_0..breakpoint_{n_windows-1}, 0...]
+# fconsts layout (f32): [population, a0, r0, d0, mean_scale, 0...,
+#                        summary channel weights at lanes 8..8+n_obs]
+# iconsts layout (i32): [seed, breakpoint_0..breakpoint_{n_windows-1}, 0...,
+#                        summary flags at lanes _SUM_ILANE.._SUM_ILANE+4]
 _CONST_LANES = 128
 #: sublane granularity for f32 tiles — theta/obs rows are padded to this
 _SUBLANES = 8
+#: first iconst lane of the summary selector vector (core.summaries.FLAG_*:
+#: cumulative, log1p, power, root, bin_days). Selectors and weights are
+#: RUNTIME values, exactly like the intervention breakpoints: a summary /
+#: distance sweep reuses one compiled kernel (pinned by a jit-cache test).
+_SUM_ILANE = 120
+#: fconst lane of the distance finalizer's mean scale (1/n_terms or 1.0)
+_MEAN_SCALE_LANE = 4
+#: first fconst lane of the per-channel summary weights
+_WEIGHT_LANE = 8
 
 
 def sublane_pad(n: int) -> int:
@@ -97,10 +118,11 @@ def _kernel(
     theta_ref  (Pp, TB)  — params x samples (transposed, sublane-padded);
                            rows n_params.. are window-major intervention
                            scales when `sched` is set
-    obs_ref    (Op, Tp)  — rows 0..n_obs-1 = observed channels per day (padded)
-    fconst_ref (1, 128)  — f32 scalars
-    iconst_ref (1, 128)  — i32 scalars (seed, then breakpoint days)
-    dist_ref   (1, TB)   — output Euclidean distances
+    obs_ref    (Op, Tp)  — rows 0..n_obs-1 = OBSERVED-SIDE SUMMARY values
+                           per day (running-bin layout, padded)
+    fconst_ref (1, 128)  — f32 scalars (incl. summary weights / mean scale)
+    iconst_ref (1, 128)  — i32 scalars (seed, breakpoint days, summary flags)
+    dist_ref   (1, TB)   — output summary distances
     """
     population = fconst_ref[0, 0]
     a0 = fconst_ref[0, 1]
@@ -111,6 +133,18 @@ def _kernel(
     # recompile the kernel — only the schedule's shape is a compile key
     n_windows = sched.n_windows if sched is not None else 0
     breakpoints = tuple(iconst_ref[0, 1 + i] for i in range(n_windows))
+    # summary/distance selectors + weights are runtime lanes too (one
+    # compiled kernel serves every (summary, distance) pair): the kernel
+    # body below is the traced-select twin of core.summaries.running_day
+    mean_scale = fconst_ref[0, _MEAN_SCALE_LANE]
+    weights = tuple(
+        fconst_ref[0, _WEIGHT_LANE + m] for m in range(model.n_observed)
+    )
+    cumulative = iconst_ref[0, _SUM_ILANE + 0]
+    use_log1p = iconst_ref[0, _SUM_ILANE + 1]
+    power = iconst_ref[0, _SUM_ILANE + 2]
+    root = iconst_ref[0, _SUM_ILANE + 3]
+    bin_days = iconst_ref[0, _SUM_ILANE + 4]
 
     # global sample index of each lane in this tile
     tile_idx = pl.program_id(0)
@@ -122,17 +156,23 @@ def _kernel(
         theta_ref[k : k + 1, :] for k in range(theta_width(model, sched))
     )
 
-    # spec step 1: initial state rows + distance accumulator (base params
-    # only — interventions scale hazards, never the day-0 seeding)
+    # spec step 1: initial state rows + summary carries (cum/bin per observed
+    # channel) + distance accumulator (base params only — interventions scale
+    # hazards, never the day-0 seeding)
     state0 = model.initial_rows(pc[: model.n_params], population, a0, r0, d0)
     acc0 = jnp.zeros_like(state0[0])
+    n_obs = model.n_observed
+    chan0 = tuple(jnp.zeros_like(state0[0]) for _ in range(2 * n_obs))
 
     obs_idx = model.observed_idx
     n_obs_rows = obs_ref.shape[0]
+    ns = model.n_state
 
     def day_step(day, carry):
-        sc = list(carry[: model.n_state])
-        acc = carry[model.n_state]
+        sc = list(carry[:ns])
+        cum = list(carry[ns : ns + n_obs])
+        binr = list(carry[ns + n_obs : ns + 2 * n_obs])
+        acc = carry[ns + 2 * n_obs]
         # day-effective params: the window selects unroll into straight-line
         # VREG selects (shared row-level code with the XLA engine)
         pc_d = engine.effective_param_rows(model, sched, pc, day, breakpoints)
@@ -147,15 +187,32 @@ def _kernel(
         # shared row-level code with the XLA engine (unrolls at trace time)
         sc = engine.drain_and_apply(model, sc, raw)
 
-        # running Euclidean accumulation (beyond-paper fusion, DESIGN.md §2)
+        # running summary-distance accumulation (beyond-paper fusion,
+        # DESIGN.md §2): the traced-select form of summaries.running_day.
+        # Identity + euclidean (all-false selects, weights 1.0) is bit-
+        # identical to the legacy per-channel squared accumulation.
         obs_t = pl.load(obs_ref, (slice(0, n_obs_rows), pl.dslice(day, 1)))
+        flush = jnp.logical_or(
+            (day + 1) % bin_days == 0, day == num_days - 1
+        ).astype(jnp.float32)
         for m, j in enumerate(obs_idx):
-            diff = sc[j] - obs_t[m : m + 1]
-            acc = acc + diff * diff
-        return (*sc, acc)
+            x = sc[j]
+            c = cum[m] + x
+            v = jnp.where(cumulative == 1, c, x)
+            # cumulative channels bin by their latest LEVEL, rates by the
+            # running within-bin sum (see summaries module docstring)
+            b = jnp.where(cumulative == 1, v, binr[m] + v)
+            s = jnp.where(use_log1p == 1, jnp.log1p(jnp.maximum(b, 0.0)), b)
+            diff = s - obs_t[m : m + 1]
+            term = jnp.where(power == 1, jnp.abs(diff), diff * diff)
+            acc = acc + flush * (weights[m] * term)
+            cum[m] = c
+            binr[m] = b * (1.0 - flush)
+        return (*sc, *cum, *binr, acc)
 
-    carry = jax.lax.fori_loop(0, num_days, day_step, (*state0, acc0))
-    dist_ref[...] = jnp.sqrt(carry[model.n_state])
+    carry = jax.lax.fori_loop(0, num_days, day_step, (*state0, *chan0, acc0))
+    acc = carry[ns + 2 * n_obs] * mean_scale
+    dist_ref[...] = jnp.where(root == 1, jnp.sqrt(acc), acc)
 
 
 def abc_sim_distance_kernel(

@@ -46,8 +46,14 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, q_block: int, kv_block: int,
 
     def body(ki, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, 0, pl.dslice(ki * kv_block, kv_block), slice(None)))
-        v = pl.load(v_ref, (0, 0, pl.dslice(ki * kv_block, kv_block), slice(None)))
+        # Leading unit dims are indexed with size-1 dslices, NOT bare ints:
+        # with a traced slice start (ki), jax 0.4.x's interpret-mode load
+        # discharge assumes every non-Slice index is an array and calls
+        # `.shape` on it — a python int there crashes the interpreter.
+        kv = pl.dslice(ki * kv_block, kv_block)
+        unit = pl.dslice(0, 1)
+        k = pl.load(k_ref, (unit, unit, kv, slice(None)))[0, 0]
+        v = pl.load(v_ref, (unit, unit, kv, slice(None)))[0, 0]
         s = jnp.dot(q, k[...].astype(jnp.float32).T)  # [q_block, kv_block]
         if softcap is not None:
             s = softcap * jnp.tanh(s / softcap)

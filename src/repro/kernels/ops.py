@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.summaries import N_FLAGS, get_summary, lower_summary
 from repro.kernels import abc_sim
 
 _CONST_LANES = abc_sim._CONST_LANES
@@ -37,6 +38,8 @@ def abc_sim_distance(
     model=None,  # CompartmentalModel spec; defaults to the paper's SIARD
     schedule=None,  # InterventionSchedule; theta carries its scale columns
     breakpoints=None,  # [n_windows] i32 traced override of schedule days
+    summary=None,  # SummarySpec / registry name / None (identity)
+    distance: str = "euclidean",  # core.summaries.DISTANCE_KINDS name
 ) -> jax.Array:
     """Fused simulate+distance for a batch of parameter samples. Returns [B].
 
@@ -46,7 +49,11 @@ def abc_sim_distance(
     jit boundary, so model=None and model=DEFAULT_MODEL share one cache entry.
     Of a `schedule`, only the SHAPE (window count, scaled params) is static:
     breakpoint days are traced i32 scalars, so sweeping lockdown days reuses
-    one compiled kernel.
+    one compiled kernel. The (summary, distance) pair is lowered the same
+    way: the observed side is pre-summarized here and the selector flags /
+    channel weights / mean scale are traced scalar-lane values, so a summary
+    or distance sweep also reuses one compiled kernel (pinned by a jit-cache
+    test in tests/test_summaries.py).
     """
     if model is None:
         from repro.epi.models import DEFAULT_MODEL as model  # noqa: N811
@@ -59,8 +66,10 @@ def abc_sim_distance(
             breakpoints = jnp.asarray(schedule.breakpoints, jnp.int32)
     if breakpoints is None:
         breakpoints = jnp.zeros((0,), jnp.int32)
+    lowered = lower_summary(get_summary(summary), distance, observed)
     return _abc_sim_distance_jit(
-        theta, seed, observed, breakpoints, population=population, a0=a0,
+        theta, seed, lowered.obs_summary, breakpoints, lowered.weights,
+        lowered.mean_scale, lowered.flags, population=population, a0=a0,
         r0=r0, d0=d0, tile=tile, interpret=interpret, model=model, sched=sched,
     )
 
@@ -74,8 +83,11 @@ def abc_sim_distance(
 def _abc_sim_distance_jit(
     theta: jax.Array,
     seed: jax.Array,
-    observed: jax.Array,
+    observed: jax.Array,  # PRE-SUMMARIZED observed side (running-bin layout)
     breakpoints: jax.Array,
+    weights: jax.Array,  # [n_obs] f32 summary channel weights
+    mean_scale: jax.Array,  # [] f32 distance finalizer scale
+    flags: jax.Array,  # [N_FLAGS] i32 summary/distance selectors
     *,
     population: float,
     a0: float,
@@ -94,6 +106,12 @@ def _abc_sim_distance_jit(
     num_days = observed.shape[1]
     n_windows = sched.n_windows if sched is not None else 0
     assert breakpoints.shape == (n_windows,), (breakpoints.shape, sched)
+    assert weights.shape == (model.n_observed,), (weights.shape, model.name)
+    assert flags.shape == (N_FLAGS,), flags.shape
+    # lane-budget guards: breakpoints grow up from lane 1, summary flags sit
+    # at fixed tail lanes, weights live above the four model scalars
+    assert 1 + n_windows <= abc_sim._SUM_ILANE, n_windows
+    assert abc_sim._WEIGHT_LANE + model.n_observed <= _CONST_LANES
 
     tile = min(tile, max(128, 1 << (batch - 1).bit_length()))
     pad_b = (-batch) % tile
@@ -113,12 +131,21 @@ def _abc_sim_distance_jit(
     fconsts = fconsts.at[0, 1].set(a0)
     fconsts = fconsts.at[0, 2].set(r0)
     fconsts = fconsts.at[0, 3].set(d0)
+    fconsts = fconsts.at[0, abc_sim._MEAN_SCALE_LANE].set(
+        jnp.asarray(mean_scale, jnp.float32)
+    )
+    wl = abc_sim._WEIGHT_LANE
+    fconsts = fconsts.at[0, wl : wl + model.n_observed].set(
+        jnp.asarray(weights, jnp.float32)
+    )
     iconsts = jnp.zeros((1, _CONST_LANES), jnp.int32)
     iconsts = iconsts.at[0, 0].set(jnp.asarray(seed, jnp.uint32).astype(jnp.int32))
     if n_windows:
         iconsts = iconsts.at[0, 1 : 1 + n_windows].set(
             jnp.asarray(breakpoints, jnp.int32)
         )
+    sl = abc_sim._SUM_ILANE
+    iconsts = iconsts.at[0, sl : sl + N_FLAGS].set(jnp.asarray(flags, jnp.int32))
 
     dist = abc_sim.abc_sim_distance_kernel(
         theta_t,

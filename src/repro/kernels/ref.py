@@ -12,6 +12,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.summaries import (
+    get_distance_kind,
+    get_summary,
+    lower_summary,
+    running_day,
+    running_finalize,
+)
 from repro.epi import engine
 from repro.epi.spec import CompartmentalModel, EpiModelConfig
 from repro.kernels import rng as krng
@@ -36,10 +43,19 @@ def abc_sim_distance_ref(
     d0: float,
     model: CompartmentalModel | None = None,
     schedule=None,  # InterventionSchedule; theta carries its scale columns
+    summary=None,  # SummarySpec / registry name / None (identity)
+    distance: str = "euclidean",  # core.summaries.DISTANCE_KINDS name
 ) -> jax.Array:
-    """Distances [B]: simulate T days with hash RNG, Euclidean vs observed."""
+    """Distances [B]: simulate T days with hash RNG, summary distance vs
+    observed. Default (identity, euclidean) is the paper's raw Euclidean and
+    reduces bit-exactly to the legacy running sum-of-squares; any other pair
+    uses the same generalized running accumulator the kernel lowers
+    (core.summaries.running_day), pinning kernel-vs-oracle parity per pair."""
     if model is None:
         from repro.epi.models import DEFAULT_MODEL as model  # noqa: N811
+    spec = get_summary(summary)
+    kind = get_distance_kind(distance)
+    lowered = lower_summary(spec, distance, observed)
     theta = jnp.asarray(theta, jnp.float32)
     batch = theta.shape[0]
     num_days = observed.shape[1]
@@ -48,19 +64,25 @@ def abc_sim_distance_ref(
     )
     idx = jnp.arange(batch, dtype=jnp.uint32)
     state0 = engine.initial_state(model, theta, cfg)
-    obs_by_day = jnp.swapaxes(jnp.asarray(observed, jnp.float32), 0, 1)  # [T, n_obs]
+    obs_by_day = jnp.swapaxes(lowered.obs_summary, 0, 1)  # [T, n_obs]
 
     def step(carry, inp):
-        state, acc = carry
-        day, obs_t = inp
+        state, cum, binv, acc = carry
+        day, obs_t, flush_t = inp
         z = hash_normals(seed, idx, day, model.n_transitions)  # [B, n_trans]
         th_d = engine.effective_theta(model, schedule, theta, day)
         nxt = engine.tau_leap_step(model, state, th_d, z, cfg.population)
-        diff = nxt[..., model.observed_idx] - obs_t
-        return (nxt, acc + jnp.sum(diff * diff, axis=-1)), None
+        cum, binv, acc = running_day(
+            spec, kind, lowered.weights, nxt[..., model.observed_idx], obs_t,
+            flush_t, cum, binv, acc,
+        )
+        return (nxt, cum, binv, acc), None
 
     days = jnp.arange(num_days, dtype=jnp.uint32)
     acc0 = state0[..., 0] * 0.0  # inherits varying mesh axes under shard_map
-    (state_f, acc), _ = jax.lax.scan(step, (state0, acc0), (days, obs_by_day))
+    chan0 = state0[..., model.observed_idx] * 0.0
+    (state_f, _, _, acc), _ = jax.lax.scan(
+        step, (state0, chan0, chan0, acc0), (days, obs_by_day, lowered.flush)
+    )
     del state_f
-    return jnp.sqrt(acc)
+    return running_finalize(kind, lowered.mean_scale, acc)

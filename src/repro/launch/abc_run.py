@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.core.abc import ABCConfig, ABCState, run_abc
 from repro.core.distributed import make_runner, make_wave_runner
+from repro.core.summaries import DISTANCE_KINDS, list_summaries
 from repro.epi.data import get_dataset
 from repro.epi.models import get_model, list_models
 from repro.epi.spec import InterventionSchedule
@@ -188,7 +189,8 @@ def run_campaign_cli(args, parser):
     # rather than silently running the wrong grid
     for flag, value in (("--dataset", args.dataset), ("--model", args.model),
                         ("--backend", args.backend), ("--seed", args.seed),
-                        ("--intervention", args.intervention)):
+                        ("--intervention", args.intervention),
+                        ("--summary", args.summary)):
         if value != parser.get_default(flag.lstrip("-").replace("-", "_")):
             parser.error(
                 f"{flag} has no effect with --campaign; use the grid flag "
@@ -202,6 +204,10 @@ def run_campaign_cli(args, parser):
         interventions=tuple(
             parse_intervention(s) for s in args.interventions
         ),
+        summaries=tuple(
+            None if s == "identity" else s for s in args.summaries
+        ),
+        distance=args.distance,
         interpret=_interpret_flag(args.interpret),
         batch_size=args.batch,
         num_days=args.days,
@@ -239,6 +245,16 @@ def main(argv=None):
     ap.add_argument("--strategy", default="outfeed", choices=["outfeed", "topk"])
     ap.add_argument("--backend", default="xla_fused",
                     choices=["xla", "xla_fused", "pallas"])
+    ap.add_argument("--summary", default="identity",
+                    choices=list(list_summaries()),
+                    help="summary statistic compared by --distance (every "
+                         "backend lowers every pair; 'identity' is the "
+                         "paper's raw daily trajectories)")
+    ap.add_argument("--distance", default="euclidean",
+                    choices=sorted(DISTANCE_KINDS),
+                    help="distance kind over summary values: weighted L2 "
+                         "(euclidean), weighted mean-L1 (mae) or observed-"
+                         "scale-normalized L2 (normalized_euclidean)")
     ap.add_argument("--interpret", default="auto", choices=["auto", "on", "off"],
                     help="Pallas dispatch for backend=pallas: 'auto' runs the "
                          "interpreter only on CPU and compiled kernels on "
@@ -280,6 +296,10 @@ def main(argv=None):
                          "'none' is the constant-theta cell). Schedules "
                          "sharing a shape share one compiled wave loop, so "
                          "lockdown-day x scale sweeps never re-trace")
+    ap.add_argument("--summaries", nargs="+", default=["identity"],
+                    choices=list(list_summaries()),
+                    help="campaign summary-statistic grid axis (registry "
+                         "names; 'identity' is the raw-trajectory cell)")
     # forecast mode --------------------------------------------------------
     ap.add_argument("--forecast", type=int, default=0, metavar="DAYS",
                     help="after fitting, simulate the accepted particles "
@@ -297,6 +317,19 @@ def main(argv=None):
     if args.campaign:
         return run_campaign_cli(args, ap)
 
+    # mirror of run_campaign_cli's guard: grid-only flags do nothing without
+    # --campaign — refuse them rather than silently fitting the defaults
+    for flag, singular, value in (("--datasets", "--dataset", args.datasets),
+                                  ("--models", "--model", args.models),
+                                  ("--backends", "--backend", args.backends),
+                                  ("--seeds", "--seed", args.seeds),
+                                  ("--interventions", "--intervention",
+                                   args.interventions),
+                                  ("--summaries", "--summary", args.summaries)):
+        if value != ap.get_default(flag.lstrip("-").replace("-", "_")):
+            ap.error(f"{flag} has no effect without --campaign; use the "
+                     f"singular flag {singular} instead")
+
     ds = get_dataset(args.dataset, num_days=args.days, model=args.model)
     schedule = parse_intervention(args.intervention)
     interpret = _interpret_flag(args.interpret)
@@ -307,7 +340,8 @@ def main(argv=None):
         pilot_cfg = ABCConfig(batch_size=args.batch, tolerance=1.0,
                               num_days=args.days, backend=args.backend,
                               strategy="topk", top_k=1, model=args.model,
-                              schedule=schedule, interpret=interpret)
+                              schedule=schedule, interpret=interpret,
+                              summary=args.summary, distance=args.distance)
         tolerance = calibrate_tolerance(ds, pilot_cfg, key=args.seed,
                                         quantile=args.auto_tolerance)
         print(f"[abc] auto-calibrated tolerance = {tolerance:.4g} "
@@ -325,6 +359,8 @@ def main(argv=None):
         wave_loop=args.wave_loop,
         schedule=schedule,
         interpret=interpret,
+        summary=args.summary,
+        distance=args.distance,
     )
     run_fn = None
     wave_runner = None

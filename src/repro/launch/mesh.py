@@ -30,6 +30,21 @@ def make_compat_mesh(shape, axes):
     return jax.make_mesh(shape, axes, **axis_types_kwargs(len(axes)))
 
 
+def set_mesh_compat(mesh):
+    """Context manager: `jax.set_mesh(mesh)` where it exists, else the mesh.
+
+    `jax.set_mesh` is the >= 0.5.x way to install an ambient mesh; on the
+    0.4.x pin the Mesh object is itself the context manager with the same
+    scoped semantics (it threads the physical mesh through thread_resources,
+    which `models.moe._ambient_mesh` and pjit both read). Every `with
+    jax.set_mesh(...)` in this repo goes through here.
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 chips per pod; two pods for the multi-pod dry run."""
     shape = (2, 16, 16) if multi_pod else (16, 16)

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, set_mesh_compat
 from repro.models.registry import get_model
 
 
@@ -39,7 +39,7 @@ def main(argv=None):
     vocab = model.cfg.vocab if hasattr(model.cfg, "vocab") else model.cfg.lm.vocab
     cache_len = args.prompt_len + args.gen
 
-    with jax.set_mesh(mesh):
+    with set_mesh_compat(mesh):
         params = model.init_params(jax.random.PRNGKey(0))
         cache_shapes = model.init_cache_shape(args.slots, cache_len)
         zero_cache = jax.tree.map(

@@ -1,0 +1,100 @@
+"""The known-failures CI gate: new failures fail, baseline failures pass,
+and STALE baseline entries (fixed bugs still allowlisted) fail on an
+unfiltered run so they can't silently rot in tests/known_failures.txt."""
+
+from check_new_failures import evaluate, narrows_collection
+
+K = {"tests/test_a.py::test_old_bug", "tests/test_b.py::test_other_bug"}
+
+
+def test_all_green_empty_baseline_passes():
+    assert evaluate(set(), 0, set(), filtered=False) == 0
+
+
+def test_baseline_failures_pass():
+    assert evaluate(K, 1, set(K), filtered=False) == 0
+
+
+def test_new_failure_fails():
+    assert evaluate(K, 1, set(K) | {"tests/test_c.py::test_new"},
+                    filtered=False) == 1
+
+
+def test_stale_entry_fails_unfiltered():
+    # one baseline entry now passes: the gate must demand its deletion
+    assert evaluate(K, 1, {"tests/test_a.py::test_old_bug"},
+                    filtered=False) == 1
+
+
+def test_stale_requires_confirmed_pass():
+    # "did not fail" is not "passes": an env-gated skip or a deleted test
+    # must keep its baseline line (warn, exit 0) — only a candidate the
+    # confirmation re-run proves green may hard-fail the gate
+    failed = {"tests/test_a.py::test_old_bug"}
+    assert evaluate(K, 1, failed, filtered=False,
+                    confirm_stale=lambda s: set()) == 0  # skipped, not stale
+    assert evaluate(K, 1, failed, filtered=False,
+                    confirm_stale=lambda s: s) == 1  # verifiably passing
+    # whole-baseline-stale (exit 0) goes through the same confirmation
+    assert evaluate(K, 0, set(), filtered=False,
+                    confirm_stale=lambda s: set()) == 0
+
+
+def test_whole_baseline_stale_fails_unfiltered():
+    assert evaluate(K, 0, set(), filtered=False) == 1
+
+
+def test_stale_only_warns_when_filtered():
+    # a -m/-k/path run may simply not collect the baseline entry
+    assert evaluate(K, 1, {"tests/test_a.py::test_old_bug"},
+                    filtered=True) == 0
+    assert evaluate(K, 0, set(), filtered=True) == 0
+
+
+def test_hard_pytest_error_propagates():
+    assert evaluate(K, 2, set(), filtered=False) == 2
+
+
+def test_exit1_with_nothing_parsed_fails():
+    # pytest says red but no FAILED/ERROR lines were parsed (suppressed
+    # summary): the gate must refuse to pass, whatever the baseline holds
+    assert evaluate(set(), 1, set(), filtered=False) == 1
+    assert evaluate(K, 1, set(), filtered=True) == 1
+
+
+def test_new_failure_beats_stale_reporting():
+    got = evaluate(K, 1, {"tests/test_c.py::test_new"}, filtered=False)
+    assert got == 1
+
+
+def test_narrows_collection_detects_real_filters():
+    assert narrows_collection(["-m", "slow"])
+    assert narrows_collection(["-mslow"])
+    assert narrows_collection(["-k", "wave_loop"])
+    assert narrows_collection(["tests/test_abc.py"])
+    assert narrows_collection(["--ignore=tests/test_moe.py"])
+    assert narrows_collection(["--deselect", "tests/test_a.py::t"])
+    assert narrows_collection(["--lf"])
+    # run truncators: an early-stopped run proves nothing about later
+    # baseline entries, so stale may only warn
+    assert narrows_collection(["-x"])
+    assert narrows_collection(["-xq"])  # combined short-flag cluster
+    assert narrows_collection(["-qx"])
+    assert narrows_collection(["--maxfail", "1"])
+    assert narrows_collection(["--maxfail=1"])
+    assert narrows_collection(["--stepwise"])
+
+
+def test_narrows_collection_ignores_benign_flags():
+    # benign forwarded flags must not downgrade the stale gate to a warning
+    assert not narrows_collection([])
+    assert not narrows_collection(["-q"])
+    assert not narrows_collection(["-p", "no:cacheprovider"])
+    assert not narrows_collection(["--tb", "short", "-q"])
+    assert not narrows_collection(["--color=yes", "-W", "ignore"])
+    # space-separated values of common valued flags are NOT positional paths
+    assert not narrows_collection(["--junitxml", "report.xml"])
+    assert not narrows_collection(["--cov", "src", "-r", "a"])
+    # "-rx" is -r's value chars (report xfailed), not -r plus -x
+    assert not narrows_collection(["-rx"])
+    assert not narrows_collection(["-rfE"])

@@ -1,0 +1,390 @@
+"""Summary statistics + weighted distances across all three backends.
+
+Acceptance contract of the subsystem (ISSUE 4):
+  * every registered (summary, distance) pair runs on "xla", "xla_fused" and
+    "pallas", with kernel-vs-oracle parity per pair;
+  * the default (identity, euclidean) spec is BIT-identical to the pre-
+    summary behaviour on every backend;
+  * a (summary, distance) sweep reuses one compiled Pallas kernel (weights
+    and selectors ride scalar lanes like the intervention breakpoints).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.abc import ABCConfig, make_simulator, run_abc
+from repro.core.distances import DISTANCES
+from repro.core.priors import paper_prior
+from repro.core.summaries import (
+    DISTANCE_KINDS,
+    SUMMARIES,
+    SummarySpec,
+    apply_summary,
+    flush_mask,
+    get_summary,
+    lower_summary,
+    num_bins,
+    summary_distance,
+    summary_pairs,
+)
+from repro.epi import engine
+from repro.epi.data import get_dataset
+from repro.epi.models import get_model
+from repro.epi.spec import EpiModelConfig
+from repro.kernels import ops, ref
+
+DAYS = 15
+POP = 1e6
+KW = dict(population=POP, a0=100.0, r0=5.0, d0=1.0)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return get_dataset("synthetic_small", num_days=DAYS)
+
+
+@pytest.fixture(scope="module")
+def obs(ds):
+    return jnp.asarray(ds.observed[:, :DAYS], jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def theta():
+    return paper_prior().sample(jax.random.PRNGKey(3), (256,))
+
+
+# ---------------------------------------------------------------- spec layer
+
+def test_registry_resolution():
+    assert get_summary(None).is_identity
+    assert get_summary("identity").is_identity
+    assert get_summary("weekly").bin_days == 7
+    spec = SummarySpec(cumulative=True, bin_days=3)
+    assert get_summary(spec) is spec
+    with pytest.raises(ValueError):
+        get_summary("no_such_summary")
+    with pytest.raises(TypeError):
+        get_summary(42)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        SummarySpec(bin_days=0)
+    with pytest.raises(ValueError):
+        SummarySpec(channel_weights=(1.0, -1.0, 1.0))
+    # weights length is checked against the observed channels at lower time
+    with pytest.raises(ValueError):
+        lower_summary(
+            SummarySpec(channel_weights=(1.0, 2.0)), "euclidean",
+            jnp.zeros((3, DAYS)),
+        )
+
+
+def test_tags_are_distinct_and_filesystem_safe():
+    tags = {get_summary(n).tag() for n in SUMMARIES}
+    tags.add(SummarySpec(cumulative=True, bin_days=3, log1p=True).tag())
+    tags.add(SummarySpec(channel_weights=(1.0, 0.5, 2.0)).tag())
+    assert len(tags) == len(SUMMARIES) + 2
+    for t in tags:
+        assert t and "/" not in t and " " not in t
+
+
+def test_tag_never_trusts_a_reused_registry_name():
+    """A custom spec wearing a registry name must NOT collide with the
+    registry entry's tag (scenario names double as checkpoint dirs)."""
+    imposter = SummarySpec("weekly", bin_days=14)
+    assert imposter.tag() != SUMMARIES["weekly"].tag()
+    assert imposter.tag() == "bin14"
+    # the real registry instances keep their short names
+    assert SUMMARIES["weekly"].tag() == "weekly"
+    assert SummarySpec().tag() == "identity"
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        ABCConfig(distance="chebyshev")
+    with pytest.raises(ValueError):
+        ABCConfig(summary="no_such_summary")
+    assert ABCConfig(summary="weekly").summary_spec.bin_days == 7
+
+
+# ------------------------------------------------------- observed-side math
+
+def test_apply_summary_against_numpy_reference():
+    rng = np.random.default_rng(0)
+    x = rng.gamma(2.0, 50.0, size=(3, DAYS)).astype(np.float32)
+
+    # weekly binning: value at day t is the running sum within t's bin
+    got = np.asarray(apply_summary(SummarySpec(bin_days=7), x))
+    for t in range(DAYS):
+        start = (t // 7) * 7
+        np.testing.assert_allclose(
+            got[:, t], x[:, start : t + 1].sum(axis=1), rtol=1e-5
+        )
+
+    # cumulative then log1p
+    got = np.asarray(apply_summary(SummarySpec(cumulative=True, log1p=True), x))
+    np.testing.assert_allclose(
+        got, np.log1p(np.cumsum(x, axis=1)), rtol=1e-5
+    )
+
+    # identity is literally the input (bit-exact)
+    np.testing.assert_array_equal(np.asarray(apply_summary(SummarySpec(), x)), x)
+
+    # cumulative x weekly: the bin value is the END-OF-BIN cumulative level
+    # (not a sum of levels, which would scale with bin length and
+    # down-weight a partial final bin)
+    got = np.asarray(apply_summary(SummarySpec(cumulative=True, bin_days=7), x))
+    np.testing.assert_allclose(got, np.cumsum(x, axis=1), rtol=1e-5)
+
+
+def test_cumulative_weekly_parity_across_lowerings(ds, obs, theta):
+    """The cumulative x binned combination must agree across all three
+    lowerings too (it is not in the registry, so the pair sweep misses it)."""
+    spec = SummarySpec(cumulative=True, bin_days=7)
+    key = jax.random.PRNGKey(13)
+    d = {}
+    for backend in ("xla", "xla_fused"):
+        cfg = ABCConfig(batch_size=256, num_days=DAYS, chunk_size=256,
+                        backend=backend, summary=spec, distance="euclidean")
+        d[backend] = np.asarray(make_simulator(ds, cfg)(theta, key))
+    np.testing.assert_allclose(d["xla"], d["xla_fused"], rtol=2e-5, atol=1e-3)
+    d_k = ops.abc_sim_distance(theta, jnp.uint32(7), obs, tile=128,
+                               interpret=True, summary=spec,
+                               distance="euclidean", **KW)
+    d_r = ref.abc_sim_distance_ref(theta, jnp.uint32(7), obs, summary=spec,
+                                   distance="euclidean", **KW)
+    assert bool(jnp.all(jnp.isfinite(d_k)))
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_r), rtol=2e-5,
+                               atol=1e-3)
+
+
+def test_flush_mask_and_num_bins_edges():
+    # T=15, weekly: bins close at days 6, 13 and the partial final day 14
+    m = np.asarray(flush_mask(15, 7))
+    assert list(np.nonzero(m)[0]) == [6, 13, 14]
+    assert num_bins(15, 7) == 3
+    # bin longer than the horizon: single partial bin, flush on the last day
+    m = np.asarray(flush_mask(5, 30))
+    assert list(np.nonzero(m)[0]) == [4]
+    assert num_bins(5, 30) == 1
+    # daily: every day flushes
+    assert np.asarray(flush_mask(5, 1)).sum() == 5
+
+
+def test_normalized_weights_match_legacy_scale(obs):
+    """For the identity summary, the normalized kind's weights must equal the
+    legacy normalized_euclidean channel scaling 1/(rms + 1)^2."""
+    low = lower_summary(SummarySpec(), "normalized_euclidean", obs)
+    scale = np.sqrt(np.mean(np.asarray(obs) ** 2, axis=-1)) + 1.0
+    np.testing.assert_allclose(
+        np.asarray(low.weights), 1.0 / scale**2, rtol=1e-6
+    )
+
+
+# ------------------------------------------- default path stays bit-identical
+
+def _legacy_lowmem(model, theta, key, cfg, observed):
+    """The pre-summary fused accumulation, verbatim."""
+    theta = jnp.asarray(theta, jnp.float32)
+    batch_shape = theta.shape[:-1]
+    obs_idx = model.observed_idx
+    state0 = engine.initial_state(model, theta, cfg)
+    acc0 = state0[..., 0] * 0.0
+    obs_by_day = jnp.swapaxes(jnp.asarray(observed, jnp.float32), 0, 1)
+
+    def step(carry, inp):
+        state, acc = carry
+        day, obs_t = inp
+        z = jax.random.normal(
+            jax.random.fold_in(key, day),
+            batch_shape + (model.n_transitions,), jnp.float32,
+        )
+        nxt = engine.tau_leap_step(model, state, theta, z, cfg.population)
+        diff = nxt[..., obs_idx] - obs_t
+        return (nxt, acc + jnp.sum(diff * diff, axis=-1)), None
+
+    days = jnp.arange(cfg.num_days)
+    (_, acc), _ = jax.lax.scan(step, (state0, acc0), (days, obs_by_day))
+    return jnp.sqrt(acc)
+
+
+def test_fused_default_bit_identical_to_legacy(obs, theta):
+    m = get_model("siard")
+    cfg = EpiModelConfig(population=POP, num_days=DAYS, **{
+        k: v for k, v in KW.items() if k != "population"})
+    key = jax.random.PRNGKey(0)
+    d_legacy = _legacy_lowmem(m, theta, key, cfg, obs)
+    d_none, _ = engine.simulate_observed_lowmem(m, theta, key, cfg, obs)
+    d_spec, _ = engine.simulate_observed_lowmem(
+        m, theta, key, cfg, obs, summary=SummarySpec(), distance="euclidean"
+    )
+    np.testing.assert_array_equal(np.asarray(d_none), np.asarray(d_legacy))
+    np.testing.assert_array_equal(np.asarray(d_spec), np.asarray(d_legacy))
+
+
+def test_kernel_default_bit_identical_across_summary_forms(obs, theta):
+    """summary=None and an explicit identity SummarySpec must be the SAME
+    computation in the kernel (selector lanes flip, math is bit-exact)."""
+    a = ops.abc_sim_distance(theta, jnp.uint32(7), obs, tile=128,
+                             interpret=True, **KW)
+    b = ops.abc_sim_distance(theta, jnp.uint32(7), obs, tile=128,
+                             interpret=True, summary=SummarySpec(),
+                             distance="euclidean", **KW)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_xla_backend_default_matches_legacy_distances(ds, theta):
+    """backend='xla' with an identity summary routes through the legacy
+    DISTANCES registry (bit-compat for all three distance names)."""
+    for name in sorted(DISTANCES):
+        cfg = ABCConfig(batch_size=256, num_days=DAYS, chunk_size=256,
+                        backend="xla", distance=name)
+        sim = make_simulator(ds, cfg)
+        key = jax.random.PRNGKey(5)
+        d_bk = sim(theta, key)
+        mcfg = ds.model_config(DAYS)
+        traj = engine.simulate_observed(get_model("siard"), theta, key, mcfg)
+        d_ref = DISTANCES[name](traj, jnp.asarray(ds.observed[:, :DAYS]))
+        np.testing.assert_array_equal(np.asarray(d_bk), np.asarray(d_ref))
+
+
+# ----------------------------------------------- cross-backend / oracle parity
+
+@pytest.mark.parametrize("summary,distance", summary_pairs())
+def test_xla_vs_fused_parity_per_pair(ds, theta, summary, distance):
+    """Same threefry stream, two lowerings: post-hoc transform (xla) vs the
+    running accumulator (xla_fused)."""
+    key = jax.random.PRNGKey(11)
+    dists = {}
+    for backend in ("xla", "xla_fused"):
+        cfg = ABCConfig(batch_size=256, num_days=DAYS, chunk_size=256,
+                        backend=backend, summary=summary, distance=distance)
+        dists[backend] = np.asarray(make_simulator(ds, cfg)(theta, key))
+    assert np.all(np.isfinite(dists["xla"]))
+    np.testing.assert_allclose(
+        dists["xla"], dists["xla_fused"], rtol=2e-5, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("summary,distance", summary_pairs())
+def test_kernel_vs_oracle_parity_per_pair(obs, theta, summary, distance):
+    d_k = ops.abc_sim_distance(theta, jnp.uint32(7), obs, tile=128,
+                               interpret=True, summary=summary,
+                               distance=distance, **KW)
+    d_r = ref.abc_sim_distance_ref(theta, jnp.uint32(7), obs, summary=summary,
+                                   distance=distance, **KW)
+    assert bool(jnp.all(jnp.isfinite(d_k)))
+    np.testing.assert_allclose(
+        np.asarray(d_k), np.asarray(d_r), rtol=2e-5, atol=1e-3
+    )
+
+
+def test_pallas_backend_accepts_every_pair(ds, theta):
+    """`make_simulator` must no longer raise for non-euclidean pallas runs."""
+    for summary, distance in (("weekly", "mae"),
+                              ("cumulative", "normalized_euclidean")):
+        cfg = ABCConfig(batch_size=256, num_days=DAYS, chunk_size=256,
+                        backend="pallas", interpret=True, summary=summary,
+                        distance=distance)
+        d = make_simulator(ds, cfg)(theta, jax.random.PRNGKey(2))
+        assert d.shape == (256,) and bool(jnp.all(jnp.isfinite(d)))
+
+
+def test_summary_sweep_shares_one_compiled_kernel(obs, theta):
+    """Sweeping (summary, distance) must not grow the kernel's jit cache:
+    weights and selectors are runtime lanes, like intervention breakpoints."""
+    ops.abc_sim_distance(theta, jnp.uint32(1), obs, tile=128, interpret=True,
+                         **KW)
+    base = ops._abc_sim_distance_jit._cache_size()
+    for summary, distance in summary_pairs():
+        ops.abc_sim_distance(theta, jnp.uint32(1), obs, tile=128,
+                             interpret=True, summary=summary,
+                             distance=distance, **KW)
+    assert ops._abc_sim_distance_jit._cache_size() == base
+
+
+# --------------------------------------------------------------- end to end
+
+def _tolerance_for(ds, cfg, q=0.05):
+    sim = jax.jit(make_simulator(ds, cfg))
+    th = get_model(cfg.model).prior().sample(jax.random.PRNGKey(99), (1024,))
+    d = np.asarray(sim(th, jax.random.PRNGKey(98)))
+    return float(np.quantile(d[np.isfinite(d)], q))
+
+
+@pytest.mark.parametrize("backend", ["xla", "xla_fused", "pallas"])
+def test_run_abc_with_summary_all_backends(ds, backend):
+    cfg = ABCConfig(batch_size=1024, num_days=DAYS, chunk_size=1024,
+                    backend=backend, interpret=True, summary="weekly",
+                    distance="normalized_euclidean", target_accepted=10,
+                    max_runs=10, tolerance=1.0)
+    cfg = dataclasses.replace(cfg, tolerance=_tolerance_for(ds, cfg))
+    post = run_abc(ds, cfg, key=0)
+    assert len(post) >= 10
+    assert np.all(post.distances <= cfg.tolerance)
+
+
+def test_device_wave_loop_matches_host_with_summary(ds):
+    """The device-resident wave loop must reproduce the host loop exactly
+    for a non-default (summary, distance) pair too."""
+    base = ABCConfig(batch_size=1024, num_days=DAYS, chunk_size=128,
+                     backend="xla_fused", summary="log_weekly", distance="mae",
+                     target_accepted=15, max_runs=10, tolerance=1.0)
+    base = dataclasses.replace(base, tolerance=_tolerance_for(ds, base))
+    p_host = run_abc(ds, dataclasses.replace(base, wave_loop="host"), key=0)
+    p_dev = run_abc(ds, dataclasses.replace(base, wave_loop="device"), key=0)
+    assert len(p_dev) == len(p_host) > 0
+    np.testing.assert_array_equal(p_host.theta, p_dev.theta)
+    np.testing.assert_array_equal(p_host.distances, p_dev.distances)
+
+
+def test_smc_with_summary(ds):
+    from repro.core.smc import SMCConfig, run_smc_abc
+
+    cfg = SMCConfig(n_particles=32, batch_size=512, n_rounds=2, num_days=DAYS,
+                    summary="weekly", distance="mae")
+    post = run_smc_abc(ds, cfg, key=0)
+    assert post.theta.shape[0] == 32
+    assert np.all(np.isfinite(post.distances))
+
+
+def test_campaign_summary_axis(tmp_path):
+    from repro.core.campaign import CampaignConfig, run_campaign
+
+    cfg = CampaignConfig(
+        datasets=("synthetic_small",),
+        models=("siard",),
+        backends=("xla_fused",),
+        summaries=(None, "weekly"),
+        distance="normalized_euclidean",
+        batch_size=1024,
+        num_days=DAYS,
+        target_accepted=10,
+        max_runs=10,
+        auto_quantile=0.02,
+        pilot_size=1024,
+        out_dir=str(tmp_path),
+        checkpoint_every=0,
+    )
+    report = run_campaign(cfg)
+    assert len(report.scenarios) == 2
+    names = {r.name for r in report.scenarios}
+    assert len(names) == 2  # the summary tag distinguishes the cells
+    assert any("bin7" in n or "weekly" in n for n in names)
+    for r in report.scenarios:
+        assert r.status in ("ok", "budget_exhausted")
+        assert r.n_accepted > 0
+
+
+def test_calibrate_tolerance_with_summary(ds):
+    from repro.core.abc import calibrate_tolerance
+
+    cfg = ABCConfig(batch_size=1024, num_days=DAYS, chunk_size=1024,
+                    backend="xla_fused", summary="log_weekly", distance="mae")
+    eps = calibrate_tolerance(ds, cfg, key=0, quantile=0.1, n_pilot=1024)
+    assert np.isfinite(eps) and eps > 0

@@ -12,6 +12,7 @@ import os
 import tempfile
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -148,6 +149,120 @@ def test_pjit_wave_runner_matches_single_device_stream():
     p_pjit = run_abc(ds, cfg, key=0, wave_runner=wr)
     p_single = run_abc(ds, cfg, key=0)
     np.testing.assert_array_equal(p_single.theta, p_pjit.theta)
+
+
+# ------------------------------------------------------------------------
+# Accept-buffer edge cases: compact_accepted semantics at the capacity edge
+# ------------------------------------------------------------------------
+
+def _buffers(capacity, p=2, fill=0):
+    th = np.full((capacity, p), -1.0, np.float32)
+    d = np.full((capacity,), np.inf, np.float32)
+    return jnp.asarray(th), jnp.asarray(d), jnp.int32(fill)
+
+
+def test_compact_accepted_zero_accepts_is_a_noop():
+    """An all-reject wave must leave the buffers bitwise untouched."""
+    from repro.core.abc import compact_accepted
+
+    cap, B, p = 8, 4, 2
+    th_buf, d_buf, fill = _buffers(cap, p, fill=3)
+    theta = jnp.arange(B * p, dtype=jnp.float32).reshape(B, p)
+    dist = jnp.arange(B, dtype=jnp.float32)
+    accept = jnp.zeros((B,), bool)
+    th2, d2, fill2 = compact_accepted(th_buf, d_buf, fill, theta, dist,
+                                      accept, cap)
+    assert int(fill2) == 3
+    np.testing.assert_array_equal(np.asarray(th2), np.asarray(th_buf))
+    np.testing.assert_array_equal(np.asarray(d2), np.asarray(d_buf))
+
+
+def test_compact_accepted_fills_capacity_exactly():
+    """fill + accepts == capacity: every accepted row lands, in order, and
+    the buffer reports exactly full."""
+    from repro.core.abc import compact_accepted
+
+    cap, B, p = 6, 4, 2
+    th_buf, d_buf, fill = _buffers(cap, p, fill=2)
+    theta = jnp.arange(B * p, dtype=jnp.float32).reshape(B, p)
+    dist = jnp.asarray([10.0, 11.0, 12.0, 13.0], jnp.float32)
+    accept = jnp.asarray([True, True, True, True])
+    th2, d2, fill2 = compact_accepted(th_buf, d_buf, fill, theta, dist,
+                                      accept, cap)
+    assert int(fill2) == cap
+    np.testing.assert_array_equal(np.asarray(d2)[2:], np.asarray(dist))
+    np.testing.assert_array_equal(np.asarray(th2)[2:], np.asarray(theta))
+    # pre-existing rows untouched
+    np.testing.assert_array_equal(np.asarray(d2)[:2], np.inf)
+
+
+def test_compact_accepted_overflow_drops_excess_keeps_prefix():
+    """More accepts than free slots: the first (capacity - fill) accepted
+    rows land in stream order, the excess is dropped by the scatter, and the
+    returned fill OVERCOUNTS (callers clamp with min(fill, capacity) — the
+    WaveLoopOutput contract)."""
+    from repro.core.abc import compact_accepted
+
+    cap, B, p = 4, 6, 2
+    th_buf, d_buf, fill = _buffers(cap, p, fill=2)
+    theta = jnp.arange(B * p, dtype=jnp.float32).reshape(B, p)
+    dist = jnp.arange(10.0, 10.0 + B, dtype=jnp.float32)
+    accept = jnp.asarray([True, False, True, True, True, False])  # 4 accepts
+    th2, d2, fill2 = compact_accepted(th_buf, d_buf, fill, theta, dist,
+                                      accept, cap)
+    # 2 free slots -> accepted samples 0 and 2 land; 3 and 4 are dropped
+    np.testing.assert_array_equal(np.asarray(d2)[2:], [10.0, 12.0])
+    np.testing.assert_array_equal(
+        np.asarray(th2)[2:], np.asarray(theta)[[0, 2]]
+    )
+    assert int(fill2) == 2 + 4  # overcount by design
+    assert min(int(fill2), cap) == cap
+
+
+def test_wave_loop_single_wave_overflow_reports_clamped_fill(small_dataset):
+    """A capacity-capped loop whose single wave over-accepts must clamp
+    fill_counts to capacity while n_accepted counts every acceptance."""
+    from repro.core.abc import build_wave_loop, make_simulator
+    from repro.epi.models import get_model
+
+    B = 256
+    cfg = ABCConfig(batch_size=B, tolerance=np.inf, target_accepted=10**6,
+                    chunk_size=B, num_days=15, max_runs=2)
+    prior = get_model("siard").prior()
+    sim = make_simulator(small_dataset, cfg)
+    cap = B // 2  # deliberately too small: one all-accept wave overflows
+    loop = jax.jit(build_wave_loop(
+        prior, lambda th, k, _d: sim(th, k), cfg, capacity=cap))
+    th0 = jnp.zeros((cap, prior.dim), jnp.float32)
+    d0 = jnp.full((cap,), jnp.inf, jnp.float32)
+    out = loop(jax.random.PRNGKey(0), 0, th0, d0, 0, 0, 1, np.inf, None)
+    assert int(out.waves_done) == 1
+    assert int(out.n_accepted) == B  # every sample accepted (eps = inf)
+    assert int(out.fill_counts[0]) == cap  # clamped to the buffer
+    assert bool(jnp.all(jnp.isfinite(out.dist_buf)))  # fully populated
+
+
+def test_wave_capacity_reaches_exactly_full(small_dataset):
+    """target == capacity via an explicit override: the loop stops when the
+    buffer is exactly full, with every row valid."""
+    from repro.core.abc import build_wave_loop, make_simulator
+    from repro.epi.models import get_model
+
+    B = 128
+    cfg = ABCConfig(batch_size=B, tolerance=np.inf, target_accepted=2 * B,
+                    chunk_size=B, num_days=15, max_runs=4)
+    prior = get_model("siard").prior()
+    sim = make_simulator(small_dataset, cfg)
+    cap = 2 * B  # two all-accept waves fill it to the brim, exactly
+    loop = jax.jit(build_wave_loop(
+        prior, lambda th, k, _d: sim(th, k), cfg, capacity=cap))
+    th0 = jnp.zeros((cap, prior.dim), jnp.float32)
+    d0 = jnp.full((cap,), jnp.inf, jnp.float32)
+    out = loop(jax.random.PRNGKey(0), 0, th0, d0, 0, 0, 4, np.inf, None)
+    assert int(out.waves_done) == 2
+    assert int(out.n_accepted) == 2 * B
+    assert int(out.fill_counts[0]) == cap
+    assert bool(jnp.all(jnp.isfinite(out.dist_buf)))
 
 
 @pytest.mark.skipif(not hasattr(jax, "shard_map"),

@@ -1,0 +1,84 @@
+"""Shared benchmark harness: best-of-N timing + the gate-compatible artifact.
+
+Every benchmark that emits its JSON through `emit_artifact` is
+regression-gate compatible BY CONSTRUCTION: the envelope (schema
+`bench-artifact/v1`) is exactly what `tests/check_bench_regression.py`
+consumes when the nightly job diffs fresh artifacts against the committed
+baselines under `experiments/bench/baselines/`.
+
+Envelope::
+
+    {
+      "benchmark": "<name>",
+      "schema": "bench-artifact/v1",
+      "meta":   {...},               # free-form run parameters (not gated)
+      "cells":  {"<key>": {"wall_s": <s>, ...}},   # wall_s gated at +25%
+      "parity": {"<key>": <value>},  # gated at EXACT equality
+      ...                            # legacy fields ride along untouched
+    }
+
+Gate semantics: a cell whose fresh `wall_s` exceeds the baseline's by more
+than the threshold (default 25%) is a wall-clock regression; any `parity`
+entry that differs AT ALL is a parity drift. Parity values must therefore be
+deterministic by construction (e.g. `simulations` under a fixed wave budget,
+scenario statuses) — never wall-clock-derived numbers.
+"""
+
+from __future__ import annotations
+
+import time
+from pathlib import Path
+from typing import Callable, Dict, Optional, Tuple
+
+from common import RESULTS_DIR, render_table, save_result  # noqa: F401
+
+SCHEMA = "bench-artifact/v1"
+
+#: default wall-clock regression threshold the nightly gate applies
+WALL_REGRESSION_THRESHOLD = 0.25
+
+
+def best_of(fn: Callable, *args, reps: int = 3, warmup: int = 1) -> Tuple:
+    """Best-of-`reps` wall time of `fn(*args)` after `warmup` untimed calls.
+
+    Single-run noise on these workloads (~5-10% between identical runs)
+    would swamp exactly the cost deltas the nightly artifacts track, so
+    every harnessed benchmark times best-of-N with compile/warmup excluded.
+    Returns `(last_result, best_seconds)`.
+    """
+    result = None
+    for _ in range(max(0, warmup)):
+        result = fn(*args)
+    best = None
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        result = fn(*args)
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+    return result, best
+
+
+def emit_artifact(
+    name: str,
+    *,
+    cells: Dict[str, Dict],
+    parity: Optional[Dict] = None,
+    meta: Optional[Dict] = None,
+    extra: Optional[Dict] = None,
+) -> Path:
+    """Write the gate-compatible JSON artifact under experiments/bench/.
+
+    `cells` maps a stable cell key to at least `{"wall_s": float}` (plus any
+    informational fields); `parity` maps keys to values the gate checks for
+    exact equality; `extra` carries legacy payload fields for older
+    consumers and is ignored by the gate.
+    """
+    payload = dict(extra or {})
+    payload.update({
+        "benchmark": name,
+        "schema": SCHEMA,
+        "meta": meta or {},
+        "cells": cells,
+        "parity": parity or {},
+    })
+    return save_result(name, payload)

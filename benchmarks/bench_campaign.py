@@ -15,7 +15,7 @@ import tempfile
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent))
-from common import render_table, save_result  # noqa: E402
+from _harness import emit_artifact, render_table  # noqa: E402
 
 from repro.core.campaign import CampaignConfig, run_campaign  # noqa: E402
 
@@ -55,7 +55,19 @@ def main(argv=None):
         ["scenario", "status", "runs", "acc_rate", "wall_s", "sims/s"], rows))
 
     n_run = sum(1 for r in report.scenarios if r.status == "ok")
-    payload = {
+    cells = {"campaign/total": {"wall_s": report.wall_time_s}}
+    # statuses are the campaign's structural outcome — a cell flipping from
+    # "ok" to "budget_exhausted" (or a scenario disappearing) is a parity
+    # drift the gate must catch; wall-clock-derived numbers are NOT parity
+    parity = {r.name: r.status for r in report.scenarios}
+    for r in report.scenarios:
+        cells[f"scenario/{r.name}"] = {
+            "wall_s": r.wall_time_s,
+            "sims_per_s": r.simulations / max(r.wall_time_s, 1e-9),
+            "runs": r.runs,
+            "simulations": r.simulations,
+        }
+    extra = {
         "wall_time_s": report.wall_time_s,
         "compiled_shapes": report.compiled_shapes,
         "scenarios_per_shape": n_run / max(report.compiled_shapes, 1),
@@ -71,9 +83,16 @@ def main(argv=None):
             for r in report.scenarios
         ],
     }
-    path = save_result("campaign", payload)
+    path = emit_artifact(
+        "campaign",
+        cells=cells,
+        parity=parity,
+        meta={"accept": args.accept, "batch": args.batch, "days": args.days,
+              "models": args.models, "quantile": args.quantile},
+        extra=extra,
+    )
     print(f"\nsaved {path}")
-    return payload
+    return extra
 
 
 if __name__ == "__main__":

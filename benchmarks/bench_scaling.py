@@ -1,83 +1,160 @@
-"""Paper Table 7: multi-device scaling + chunk-size trade-off (claim C5).
+"""Throughput-vs-device-count scaling benchmark (the paper's 16-IPU figure).
 
-Each row launches a fresh process with a forced host-device count and runs
-the shard_map ABC replica. On ONE physical core the wall-clock cannot speed
-up; the paper's scaling claim is therefore checked structurally: per-device
-work shrinks 1/N while the accept statistics stay constant, and the only
-cross-device collective is the scalar psum (counted from the compiled HLO).
+    PYTHONPATH=src python benchmarks/bench_scaling.py \
+        [--devices 1 2 4 8] [--batch-per-device 2048] [--waves 4] \
+        [--models siard] [--backends xla_fused]
+
+Runs `repro.core.scaling.run_scaling_study`: the sharded device-resident
+wave loop (`distributed.make_wave_runner`, collective stop via psum,
+per-shard accept buffers gathered at host re-entry) over a fixed wave
+budget at every device count, under weak scaling (global batch = n *
+batch_per_device — the paper's "2x100k means 100k per IPU"). Every
+(model, backend, batch, n) cell records `parallel_efficiency` and
+`scaling_overhead_pct`, the reproduction's analogue of the paper's <= 8%
+overhead claim at 16 IPUs.
+
+On a CPU host with fewer visible devices than the sweep needs, the script
+re-execs itself once with `--xla_force_host_platform_device_count` set, so
+the nightly job measures the structural overhead curve on simulated host
+devices (the wall-clock cannot speed up on one physical core; efficiency
+there tracks dispatch + collective overhead, which is exactly what the
+regression gate pins). The JSON artifact is gate-compatible
+(bench-artifact/v1): per-cell wall clocks gated at +25%, simulation counts
+gated as parity.
 """
 
 from __future__ import annotations
 
+import argparse
 import os
 import subprocess
 import sys
+from pathlib import Path
 
-from benchmarks.common import render_table, save_result
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from _harness import emit_artifact  # noqa: E402
 
-_CODE = r"""
-import time, jax, numpy as np
-from repro.core.abc import ABCConfig, make_simulator
-from repro.core.distributed import make_shardmap_runner
-from repro.core.priors import paper_prior
-from repro.epi.data import get_dataset
-from repro.launch.analysis import analyze_hlo
+_CHILD_ENV = "_BENCH_SCALING_CHILD"
 
-n = {n}
-mesh = jax.make_mesh((n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
-ds = get_dataset("synthetic_small", num_days=15)
-cfg = ABCConfig(batch_size=n * 4096, tolerance=1.6e4, target_accepted=10**9,
-                chunk_size={chunk}, num_days=15, backend="xla_fused", max_runs=1)
-runner = make_shardmap_runner(mesh, paper_prior(), make_simulator(ds, cfg), cfg)
-key = jax.random.PRNGKey(3)
-lowered = runner.lower(key)
-costs = analyze_hlo(lowered.compile().as_text())
-out = runner(key); jax.block_until_ready(out)
-t0 = time.time()
-for r in range(3):
-    out = runner(jax.random.fold_in(key, r)); jax.block_until_ready(out)
-dt = (time.time() - t0) / 3
-total = int(out.accept_count)
-coll = {{k: int(v) for k, v in costs.collective_wire.items()}}
-print("RESULT", dt, total, cfg.batch_size, coll)
-"""
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", nargs="+", type=int, default=[1, 2, 4, 8],
+                    help="device counts of the curve (prefix subsets of the "
+                         "visible device pool)")
+    ap.add_argument("--batch-per-device", type=int, default=2048,
+                    help="per-DEVICE batch (weak scaling: the n-device cell "
+                         "simulates n x this per wave)")
+    ap.add_argument("--waves", type=int, default=4,
+                    help="fixed wave budget per cell (acceptance target is "
+                         "unreachable, so every cell burns exactly this)")
+    ap.add_argument("--models", nargs="+", default=["siard"])
+    ap.add_argument("--backends", nargs="+", default=["xla_fused"])
+    ap.add_argument("--days", type=int, default=20)
+    ap.add_argument("--dataset", default="synthetic_small")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="timed repetitions per cell (best-of; warmup "
+                         "excluded)")
+    ap.add_argument("--out-name", default="scaling",
+                    help="artifact basename under experiments/bench/")
+    return ap.parse_args(argv)
+
+
+def _ensure_devices(need: int, argv) -> int | None:
+    """Re-exec once with forced host devices when the pool is too small.
+
+    Returns the child's exit code, or None when this process already has
+    enough devices (real accelerators, or a caller-set XLA_FLAGS).
+    """
+    import jax
+
+    if len(jax.devices()) >= need:
+        return None
+    if jax.default_backend() != "cpu" or os.environ.get(_CHILD_ENV):
+        raise SystemExit(
+            f"need {need} devices but only {len(jax.devices())} are visible "
+            f"on backend {jax.default_backend()!r}"
+        )
+    env = dict(os.environ)
+    env[_CHILD_ENV] = "1"
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={need}"
+    ).strip()
+    print(f"[bench_scaling] re-exec with {need} simulated host devices")
+    return subprocess.run(
+        [sys.executable, os.path.abspath(__file__), *argv], env=env
+    ).returncode
+
+
+def main(argv=None):
+    argv = list(sys.argv[1:] if argv is None else argv)
+    args = parse_args(argv)
+    child_rc = _ensure_devices(max(args.devices), argv)
+    if child_rc is not None:
+        if child_rc:
+            raise SystemExit(child_rc)
+        return None  # the child produced the artifact
+
+    from repro.core.scaling import (
+        ScalingConfig,
+        format_report,
+        run_scaling_study,
+    )
+
+    scfg = ScalingConfig(
+        device_counts=tuple(args.devices),
+        models=tuple(args.models),
+        backends=tuple(args.backends),
+        batch_per_device=args.batch_per_device,
+        waves=args.waves,
+        num_days=args.days,
+        dataset=args.dataset,
+        reps=args.reps,
+    )
+    report = run_scaling_study(scfg, verbose=True)
+    print()
+    print(format_report(report))
+
+    cells, parity = {}, {}
+    for key, cell in report["cells"].items():
+        cells[key] = {
+            "wall_s": cell["wall_s"],
+            "sims_per_s": cell["sims_per_s"],
+            "parallel_efficiency": cell["parallel_efficiency"],
+            "scaling_overhead_pct": cell["scaling_overhead_pct"],
+            "devices": cell["devices"],
+            "global_batch": cell["global_batch"],
+        }
+        # the wave budget is fixed, so per-cell simulation counts (and the
+        # device counts themselves) are deterministic parity metrics
+        parity[key] = {
+            "simulations": cell["simulations"],
+            "devices": cell["devices"],
+            "waves": cell["waves"],
+        }
+    path = emit_artifact(
+        Path(args.out_name).name,
+        cells=cells,
+        parity=parity,
+        meta={k: v for k, v in report["config"].items()},
+        extra={"report": report},
+    )
+    print(f"\nsaved {path}")
+    return report
 
 
 def run(quick: bool = True):
-    rows, raw = [], {}
-    cases = [(1, 1024), (2, 1024), (4, 1024), (4, 4096)] if quick else [
-        (1, 1024), (2, 1024), (4, 1024), (8, 1024), (8, 8192)]
-    for n, chunk in cases:
-        env = dict(os.environ)
-        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
-        env["PYTHONPATH"] = "src:."
-        out = subprocess.run(
-            [sys.executable, "-c", _CODE.format(n=n, chunk=chunk)],
-            env=env, capture_output=True, text=True, timeout=900,
-            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-        )
-        assert out.returncode == 0, out.stderr[-2000:]
-        line = [l for l in out.stdout.splitlines() if l.startswith("RESULT")][0]
-        parts = line.split(None, 4)
-        dt, total, gbatch = float(parts[1]), int(parts[2]), int(parts[3])
-        coll = eval(parts[4])  # dict literal from our own subprocess
-        rate = total / gbatch
-        rows.append([n, chunk, f"{dt*1e3:.0f}", f"{rate:.2e}",
-                     f"{sum(coll.values())/1e3:.1f}"])
-        raw[f"n{n}_chunk{chunk}"] = {
-            "time_per_run_s": dt, "accept_rate": rate,
-            "collective_wire_bytes": coll,
-        }
-    print("\n== Table 7 analogue: device scaling & chunk size ==")
-    print(render_table(
-        ["devices", "chunk", "ms/run(1 core!)", "accept_rate", "coll_KB/run"], rows))
-    r1 = raw["n1_chunk1024"]["accept_rate"]
-    r4 = raw["n4_chunk1024"]["accept_rate"]
-    print(f"C5: accept-rate invariant across device counts: {r1:.2e} vs {r4:.2e}; "
-          f"cross-device traffic stays KB-scale (scalar psum + tiny gathers)")
-    save_result("table7_scaling", raw)
-    return raw
+    """`benchmarks.run` aggregator entry (the paper's Table 7 slot)."""
+    argv = (
+        ["--devices", "1", "2", "4", "--batch-per-device", "512",
+         "--waves", "2", "--reps", "1", "--days", "15",
+         "--out-name", "scaling_quick"]
+        if quick
+        else ["--devices", "1", "2", "4", "8"]
+    )
+    return main(argv)
 
 
 if __name__ == "__main__":
-    run()
+    main()

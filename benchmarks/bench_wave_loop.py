@@ -30,12 +30,11 @@ approach but never exceed the raw simulator.
 import argparse
 import json
 import sys
-import time
 from pathlib import Path
 
 
 sys.path.insert(0, str(Path(__file__).resolve().parent))
-from common import RESULTS_DIR, render_table, save_result  # noqa: E402
+from _harness import RESULTS_DIR, best_of, emit_artifact, render_table  # noqa: E402
 
 from repro.core.abc import ABCConfig, make_simulator, run_abc  # noqa: E402
 from repro.epi.data import get_dataset  # noqa: E402
@@ -72,19 +71,6 @@ def make_driver(ds, cfg):
     return lambda key: run_abc(ds, cfg, key=key, run_fn=run_fn)
 
 
-def run_once(driver, key=0, reps=1):
-    """Best-of-`reps` wall time: single-run noise on this workload (~5-10%
-    between identical runs) would otherwise swamp exactly the fused-path
-    cost deltas the nightly sweep tracks."""
-    best, post = None, None
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        post = driver(key)
-        dt = time.perf_counter() - t0
-        best = dt if best is None else min(best, dt)
-    return post, best
-
-
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=8192)
@@ -109,8 +95,8 @@ def main(argv=None):
     # enough that the accept buffer (target + batch rows) stays device-sized
     target = args.waves * args.batch + 1
 
-    rows, payload = [], {"batch": args.batch, "waves": args.waves,
-                         "reps": args.reps, "runs": []}
+    rows, runs = [], []
+    cells, parity = {}, {}
     # identity+euclidean device-loop sims/s per (model, backend): the
     # baseline the sweep cells are costed against
     baseline: dict = {}
@@ -136,13 +122,17 @@ def main(argv=None):
                         summary=summary, distance=distance,
                     )
                     driver = make_driver(ds, cfg)
-                    run_once(driver, key=0)  # warmup: compile + first wave set
-                    post, dt = run_once(driver, key=1, reps=args.reps)
+                    post, dt = best_of(driver, 1, reps=args.reps, warmup=1)
                     sims_per_s = post.simulations / dt
                     per_loop[loop] = {
                         "wall_s": dt, "simulations": post.simulations,
                         "sims_per_s": sims_per_s,
                     }
+                    key = f"{model}/{backend}/{summary}/{distance}/{loop}"
+                    cells[key] = dict(per_loop[loop])
+                    # the wave budget is fixed (unreachable target), so the
+                    # simulation count is deterministic — a parity metric
+                    parity[key] = post.simulations
                     rows.append([model, backend, summary, distance, loop,
                                  f"{dt*1e3:.1f}", f"{sims_per_s:,.0f}"])
                 speedup = (per_loop["device"]["sims_per_s"]
@@ -151,7 +141,7 @@ def main(argv=None):
                     baseline[(model, backend)] = per_loop["device"]["sims_per_s"]
                 base = baseline.get((model, backend))
                 cost = (per_loop["device"]["sims_per_s"] / base) if base else None
-                payload["runs"].append({
+                runs.append({
                     "model": model, "backend": backend, "summary": summary,
                     "distance": distance, **per_loop,
                     "device_over_host_speedup": speedup,
@@ -162,18 +152,29 @@ def main(argv=None):
                 rows.append([model, backend, summary, distance, "speedup", "",
                              f"{speedup:.2f}x"])
 
-    # embed the raw-simulator baseline so one artifact shows the trajectory
+    # legacy payload fields (and the raw-simulator baseline, so one artifact
+    # shows the trajectory) ride along outside the gated envelope
+    extra = {"batch": args.batch, "waves": args.waves, "reps": args.reps,
+             "runs": runs}
     sweep_path = RESULTS_DIR / "model_sweep.json"
     if sweep_path.exists():
-        payload["model_sweep_baseline"] = json.loads(sweep_path.read_text())
+        extra["model_sweep_baseline"] = json.loads(sweep_path.read_text())
 
     print(render_table(
         ["model", "backend", "summary", "distance", "loop", "wall_ms",
          "sims/s"], rows))
     # basename only: the artifact always lands under experiments/bench/
-    path = save_result(Path(args.out_name).name, payload)
+    path = emit_artifact(
+        Path(args.out_name).name,
+        cells=cells,
+        parity=parity,
+        meta={"batch": args.batch, "waves": args.waves, "reps": args.reps,
+              "models": args.models, "backends": args.backends,
+              "summaries": args.summaries, "distances": args.distances},
+        extra=extra,
+    )
     print(f"\nsaved {path}")
-    return payload
+    return extra
 
 
 if __name__ == "__main__":

@@ -347,7 +347,12 @@ class WaveLoopOutput(NamedTuple):
     """Outputs of one device-resident wave-loop invocation.
 
     The accept buffers are laid out as `shards` contiguous segments of
-    `capacity` rows each; segment i holds `fill_counts[i]` valid rows.
+    `capacity` rows each; segment i holds `fill_counts[i]` valid rows. This
+    layout is a cross-runner CONTRACT: the sharded runners
+    (core.distributed) emit one segment per device, the lockstep reference
+    (core.scaling.make_reference_wave_runner) emits the same segments on a
+    single device, and tests/test_scaling.py pins the two bit-identical —
+    so harvest/checkpoint code never cares which topology produced a buffer.
     """
 
     theta_buf: Array  # [shards * capacity, p]

@@ -139,6 +139,25 @@ class CampaignConfig:
     #: grid cells whose model cannot fit the dataset's observed channels are
     #: recorded as "skipped" instead of failing the whole campaign
     skip_incompatible: bool = True
+    #: devices per scenario: 1 (default) places one scenario per device and
+    #: interleaves; k > 1 carves jax.devices() into DISJOINT groups of k and
+    #: runs each scenario's wave loop sharded across its group
+    #: (distributed.make_shardmap_scenario_runner) — independent scenarios
+    #: still advance concurrently, now each at multi-device throughput. The
+    #: per-scenario sample stream matches a solo sharded run of the same
+    #: seed/mesh shape (per-shard key folds), not the 1-device stream.
+    devices_per_scenario: int = 1
+
+    def __post_init__(self):
+        if self.devices_per_scenario < 1:
+            raise ValueError("devices_per_scenario must be >= 1")
+        if self.devices_per_scenario > 1 and "pallas" in self.backends:
+            # the pallas simulator bakes its scalars into the kernel and is
+            # not lowered under shard_map here
+            raise ValueError(
+                "devices_per_scenario > 1 does not support the pallas "
+                "backend; drop it from the grid or run serially"
+            )
 
     def scenarios(self) -> List[Scenario]:
         return [
@@ -281,8 +300,12 @@ class _ShapeCache:
     def n_compiled(self) -> int:
         return len(self._entries)
 
-    def key_of(self, sc: Scenario) -> tuple:
+    def key_of(self, sc: Scenario, group=None) -> tuple:
         key = (sc.model, self.cfg.num_days, self.cfg.batch_size, sc.backend)
+        if group is not None and len(group) > 1:
+            # a sharded loop is compiled against its device group's mesh;
+            # scenarios on the same group still share one compilation
+            key += (tuple(d.id for d in group),)
         # only the schedule's SHAPE is compile-relevant: breakpoint days and
         # scale bounds are traced, so a lockdown-day x scale sweep maps to
         # one cache entry
@@ -299,8 +322,8 @@ class _ShapeCache:
             key += (sc.dataset, sc.schedule)
         return key
 
-    def get(self, sc: Scenario, dataset) -> tuple:
-        key = self.key_of(sc)
+    def get(self, sc: Scenario, dataset, group=None) -> tuple:
+        key = self.key_of(sc, group)
         if key in self._entries:
             return self._entries[key]
         spec = get_model(sc.model)
@@ -314,8 +337,18 @@ class _ShapeCache:
         else:
             parametric = make_parametric_simulator(spec, shape_cfg)
             sim_call = parametric
-        loop = build_wave_loop(prior, sim_call, shape_cfg)
-        fn = jax.jit(loop, donate_argnums=(2, 3))
+        if group is not None and len(group) > 1:
+            from jax.sharding import Mesh
+            from repro.core.distributed import make_shardmap_scenario_runner
+
+            mesh = Mesh(np.asarray(list(group)), ("data",))
+            tmpl = make_shardmap_scenario_runner(mesh, prior, sim_call,
+                                                 shape_cfg)
+            fn, shards, capacity = tmpl.fn, tmpl.shards, tmpl.capacity
+        else:
+            loop = build_wave_loop(prior, sim_call, shape_cfg)
+            fn = jax.jit(loop, donate_argnums=(2, 3))
+            shards, capacity = 1, wave_capacity(shape_cfg)
 
         def pilot(key, data):
             # sample within the scenario's traced box (scale bounds may be
@@ -329,7 +362,7 @@ class _ShapeCache:
                                  (self.cfg.pilot_size,), *bounds)
             return sim_call(theta, jax.random.fold_in(key, 1), data)
 
-        entry = (fn, jax.jit(pilot), prior, spec)
+        entry = (fn, jax.jit(pilot), prior, spec, shards, capacity)
         self._entries[key] = entry
         return entry
 
@@ -338,15 +371,21 @@ class _ScenarioRun:
     """Driver state for one scenario: carry buffers, checkpointing, report."""
 
     def __init__(self, sc: Scenario, cfg: CampaignConfig, cache: _ShapeCache,
-                 device, verbose: bool = False):
+                 group, verbose: bool = False):
         self.sc = sc
         self.cfg = cfg
         self.verbose = verbose
-        self.device = device
+        self.group = list(group)
+        self.sharded = len(self.group) > 1
+        self.device = self.group[0]
+        device_label = (
+            str(self.device) if not self.sharded
+            else "+".join(str(d.id) for d in self.group)
+        )
         self.result = ScenarioResult(
             name=sc.name, dataset=sc.dataset, model=sc.model,
             backend=sc.backend, seed=sc.seed, status="pending",
-            device=str(device),
+            device=device_label,
         )
         self.done = False
         self._out = None
@@ -362,8 +401,11 @@ class _ScenarioRun:
             self.result.detail = str(e)
             self.done = True
             return
-        fn, pilot, prior, _ = cache.get(sc, self.dataset)
+        fn, pilot, prior, _, shards, capacity = cache.get(
+            sc, self.dataset, self.group
+        )
         self._pilot = pilot
+        self._shards, self._capacity = shards, capacity
         ckpt_dir = Path(cfg.out_dir) / "checkpoints" / sc.name
         self.ckpt = Checkpointer(ckpt_dir, keep=cfg.keep_checkpoints)
         self.result.checkpoint_dir = str(ckpt_dir)
@@ -391,18 +433,24 @@ class _ScenarioRun:
         self.result.tolerance = eps
         self.result.eps_schedule = tuple(self.eps_schedule)
         self.runner = WaveRunner(
-            fn=fn, capacity=wave_capacity(self.abc_cfg), shards=1,
+            fn=fn, capacity=capacity, shards=shards,
             n_params=prior.dim, cfg=self.abc_cfg, data=data,
         )
-        self.carry = jax.device_put(self.runner.init(self.state), device)
-        self.key = jax.device_put(self.key, device)
+        if self.sharded:
+            # shard_map + jit place the replicated inputs on the group's
+            # mesh; committing them to one device would fight the placement
+            self.carry = self.runner.init(self.state)
+        else:
+            self.carry = jax.device_put(self.runner.init(self.state),
+                                        self.device)
+            self.key = jax.device_put(self.key, self.device)
 
     # ------------------------------------------------------------- restore
     def _like_tree(self, n_params: int, shape_cfg: ABCConfig):
-        cap = wave_capacity(shape_cfg)
+        rows = self._shards * self._capacity
         return {
-            "theta_buf": np.zeros((cap, n_params), np.float32),
-            "dist_buf": np.zeros((cap,), np.float32),
+            "theta_buf": np.zeros((rows, n_params), np.float32),
+            "dist_buf": np.zeros((rows,), np.float32),
         }
 
     def _try_restore(self, n_params: int, shape_cfg: ABCConfig):
@@ -410,18 +458,34 @@ class _ScenarioRun:
         (resume) or None (fresh start); sets self.done for finished runs."""
         if not self.ckpt.steps():
             return None
-        tree, meta, _ = self.ckpt.restore(self._like_tree(n_params, shape_cfg))
+        try:
+            tree, meta, _ = self.ckpt.restore(
+                self._like_tree(n_params, shape_cfg)
+            )
+        except ValueError as e:
+            if "shape mismatch" not in str(e):
+                raise  # corrupt checkpoints still fail loudly
+            # buffer layout changed since the checkpoint was written (e.g. a
+            # different devices_per_scenario): start fresh instead of dying
+            if self.verbose:
+                print(f"[campaign] {self.sc.name}: checkpoint layout "
+                      f"incompatible with current device group, restarting "
+                      f"({e})")
+            return None
         self.state.run_idx = int(meta["run_idx"])
         self.state.simulations = int(meta["simulations"])
-        fill = int(meta["fill"])
-        if fill:
-            self.state.accepted_theta = [tree["theta_buf"][:fill]]
-            self.state.accepted_dist = [tree["dist_buf"][:fill]]
+        # per-shard segment fills (pre-group checkpoints stored one total)
+        fills = meta.get("fills", [meta["fill"]])
+        for s, c in enumerate(int(c) for c in fills):
+            if c:
+                lo = s * self._capacity
+                self.state.accepted_theta.append(tree["theta_buf"][lo:lo + c])
+                self.state.accepted_dist.append(tree["dist_buf"][lo:lo + c])
         self.eps_schedule = list(meta.get("eps_schedule", []))
         if meta.get("done"):
             self.result = ScenarioResult(**{
                 **dataclasses.asdict(self.result), **meta["result"],
-                "status": "resumed_complete", "device": str(self.device),
+                "status": "resumed_complete", "device": self.result.device,
             })
             self.done = True
         return float(meta["tolerance"])
@@ -488,7 +552,8 @@ class _ScenarioRun:
             "run_idx": self.state.run_idx,
             "simulations": self.state.simulations,
             "n_accepted": int(out.n_accepted),
-            "fill": int(fills[0]),
+            "fill": int(fills.sum()),
+            "fills": [int(c) for c in fills],
             "tolerance": self.result.tolerance,
             "eps_schedule": list(self.eps_schedule),
             "done": done,
@@ -508,9 +573,20 @@ def run_campaign(cfg: CampaignConfig, verbose: bool = False) -> CampaignReport:
     writes it to `<out_dir>/campaign_report.json`."""
     t0 = time.time()
     devices = jax.devices()
+    dps = cfg.devices_per_scenario
+    if dps > len(devices):
+        raise ValueError(
+            f"devices_per_scenario={dps} exceeds the {len(devices)} visible "
+            "devices; on CPU, simulate more with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N"
+        )
+    # disjoint device groups: scenarios placed round-robin over the groups
+    # advance concurrently, each sharded across its own group (any remainder
+    # devices are left idle rather than sharing a device between groups)
+    groups = [devices[g * dps:(g + 1) * dps] for g in range(len(devices) // dps)]
     cache = _ShapeCache(cfg)
     runs = [
-        _ScenarioRun(sc, cfg, cache, devices[i % len(devices)], verbose=verbose)
+        _ScenarioRun(sc, cfg, cache, groups[i % len(groups)], verbose=verbose)
         for i, sc in enumerate(cfg.scenarios())
     ]
     active = [r for r in runs if not r.done]

@@ -227,10 +227,80 @@ def make_shardmap_wave_runner(
     def fn(key, run_idx0, theta_buf, dist_buf, n0, fills, max_waves,
            tolerance, data):
         # `data` is always None here (the simulator baked the dataset in);
-        # pass a dummy zero so every shard_map input is an array
+        # pass a dummy zero so every shard_map input is an array.
+        # fills must be rank-1 to satisfy the P(axes) in_spec even on a
+        # single-device mesh, where WaveRunner.init hands back a scalar.
+        fills = jnp.atleast_1d(jnp.asarray(fills, jnp.int32))
         return sharded(
             key, run_idx0, theta_buf, dist_buf, n0, fills, max_waves,
             tolerance, jnp.zeros((), jnp.int32),
+        )
+
+    return WaveRunner(
+        fn=jax.jit(fn, donate_argnums=(2, 3)),
+        capacity=cap,
+        shards=n_dev,
+        n_params=prior.dim,
+        cfg=cfg,
+    )
+
+
+def make_shardmap_scenario_runner(
+    mesh: Mesh,
+    prior: UniformBoxPrior,
+    sim_call,  # (theta [B_local, p], key, data: ScenarioData) -> dist
+    cfg: ABCConfig,
+) -> WaveRunner:
+    """Per-device-replica wave loop over a PARAMETRIC simulator.
+
+    The campaign's multi-device mode: like `make_shardmap_wave_runner`, but
+    the traced `ScenarioData` tuple (observed series, population scalars,
+    intervention breakpoints, prior box) rides REPLICATED into every shard
+    instead of being baked into the simulator. One compiled loop per
+    (scenario shape, device group) therefore still serves every dataset /
+    seed / intervention cell of that shape — the compile-reuse property the
+    serial campaign relies on, now on a mesh.
+    """
+    axes = data_axes(mesh)
+    n_dev = 1
+    for a in axes:
+        n_dev *= mesh.shape[a]
+    if cfg.batch_size % n_dev:
+        raise ValueError(f"batch_size {cfg.batch_size} not divisible by {n_dev} devices")
+    local_b = cfg.batch_size // n_dev
+    cap = wave_capacity(cfg, local_b)
+
+    loop = build_wave_loop(
+        prior,
+        sim_call,
+        cfg,
+        batch_size=local_b,
+        capacity=cap,
+        fold_axis=lambda: jax.lax.axis_index(axes),
+        count_all=lambda c: jax.lax.psum(c, axes),
+    )
+
+    @partial(
+        shard_map,
+        mesh=mesh,
+        # the trailing P() is a pytree-prefix spec: every ScenarioData leaf
+        # is replicated across the group
+        in_specs=(P(), P(), P(axes), P(axes), P(), P(axes), P(), P(), P()),
+        out_specs=WaveLoopOutput(P(axes), P(axes), P(), P(), P(axes)),
+    )
+    def sharded(key, run_idx0, theta_buf, dist_buf, n0, fills, max_waves,
+                tolerance, data):
+        return loop(
+            key, run_idx0, theta_buf, dist_buf, n0, fills[0], max_waves,
+            tolerance, data,
+        )
+
+    def fn(key, run_idx0, theta_buf, dist_buf, n0, fills, max_waves,
+           tolerance, data):
+        fills = jnp.atleast_1d(jnp.asarray(fills, jnp.int32))
+        return sharded(
+            key, run_idx0, theta_buf, dist_buf, n0, fills, max_waves,
+            tolerance, data,
         )
 
     return WaveRunner(

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from functools import partial
 from typing import Optional
 
 import jax
@@ -115,14 +116,100 @@ def make_smc_round_fn(simulator, prior: UniformBoxPrior, cfg: SMCConfig):
     return jax.jit(round_fn)
 
 
+def make_sharded_smc_round_fn(mesh, simulator, prior: UniformBoxPrior,
+                              cfg: SMCConfig):
+    """Multi-device SMC proposal round under the scaling study's sharding.
+
+    Each device of the mesh proposes `batch_size / n_dev` particles per wave
+    from the REPLICATED parent population (resampling and perturbation stay
+    device-resident between waves, keyed by `fold_in(fold_in(key, w), dev)`),
+    simulates its own sub-batch and compacts acceptances into its own buffer
+    segment; the only steady-state collective is the per-wave psum of the
+    scalar accept count feeding the shared stop condition — the exact
+    property that bounds the ABC wave loop's scaling overhead.
+
+    round_fn(key, particles [n,p], log_weights [n], sigma [p], eps,
+             max_waves) -> (theta_buf [n_dev*cap, p], dist_buf, n_accepted,
+                            waves_done, fills [n_dev])
+
+    The sample stream differs from the single-device round (per-device key
+    folds), but is deterministic in (key, mesh shape); statistical behaviour
+    matches the host/device rounds (tests/test_scaling.py).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.abc import compact_accepted as _compact
+    from repro.core.distributed import data_axes, shard_map
+
+    axes = data_axes(mesh)
+    n_dev = 1
+    for a in axes:
+        n_dev *= mesh.shape[a]
+    if cfg.batch_size % n_dev:
+        raise ValueError(
+            f"batch_size {cfg.batch_size} not divisible by {n_dev} devices"
+        )
+    B, n_p = cfg.batch_size // n_dev, cfg.n_particles
+    lo = jnp.asarray(prior.lows, jnp.float32)
+    hi = jnp.asarray(prior.highs, jnp.float32)
+    cap = n_p + B  # a final wave's overshoot always fits per shard
+
+    @partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P(), P()),
+        out_specs=(P(axes), P(axes), P(), P(), P(axes)),
+    )
+    def round_fn(key, particles, log_weights, sigma, eps, max_waves):
+        dev = jax.lax.axis_index(axes)
+        p = particles.shape[1]
+
+        def cond(carry):
+            w, n, *_ = carry
+            return jnp.logical_and(n < n_p, w < max_waves)
+
+        def body(carry):
+            w, n, fill, th_buf, d_buf = carry
+            k = jax.random.fold_in(jax.random.fold_in(key, w), dev)
+            k_par, k_pert, k_sim = jax.random.split(k, 3)
+            parents = jax.random.categorical(k_par, log_weights, shape=(B,))
+            prop = particles[parents] + sigma * jax.random.normal(
+                k_pert, (B, p), jnp.float32
+            )
+            inside = jnp.all((prop >= lo) & (prop <= hi), axis=-1)
+            d = simulator(prop, k_sim)
+            d = jnp.where(jnp.isnan(d) | ~inside, jnp.inf, d)
+            th_buf, d_buf, new_fill = _compact(
+                th_buf, d_buf, fill, prop, d, d <= eps, cap
+            )
+            n = n + jax.lax.psum(new_fill - fill, axes)
+            return (w + 1, n, new_fill, th_buf, d_buf)
+
+        th0 = jnp.zeros((cap, p), jnp.float32)
+        d0 = jnp.full((cap,), jnp.inf, jnp.float32)
+        w, n, fill, th_buf, d_buf = jax.lax.while_loop(
+            cond, body,
+            (jnp.int32(0), jnp.int32(0), jnp.int32(0), th0, d0),
+        )
+        return th_buf, d_buf, n, w, jnp.minimum(fill, cap)[None]
+
+    return jax.jit(round_fn)
+
+
 def run_smc_abc(
     dataset: CountryData,
     cfg: SMCConfig,
     key: jax.Array | int = 0,
     prior: Optional[UniformBoxPrior] = None,
     verbose: bool = False,
+    mesh=None,
 ) -> Posterior:
-    """Returns the final particle population as a Posterior."""
+    """Returns the final particle population as a Posterior.
+
+    With `mesh` (and `cfg.wave_loop == "device"`), each round's
+    propose/simulate/accept loop is sharded across the mesh's devices with
+    per-shard buffers and a psum'd stop condition
+    (`make_sharded_smc_round_fn`) — the SMC face of the scaling study."""
     spec = get_model(cfg.model)
     if isinstance(key, int):
         key = jax.random.PRNGKey(key)
@@ -143,11 +230,16 @@ def run_smc_abc(
     )
     simulator = make_simulator(dataset, abc_cfg)
     sim_jit = jax.jit(simulator)
-    round_fn = (
-        make_smc_round_fn(simulator, prior, cfg)
-        if cfg.wave_loop == "device"
-        else None
-    )
+    round_fn = None
+    sharded = mesh is not None
+    if sharded and cfg.wave_loop != "device":
+        raise ValueError("sharded SMC requires wave_loop='device'")
+    if cfg.wave_loop == "device":
+        round_fn = (
+            make_sharded_smc_round_fn(mesh, simulator, prior, cfg)
+            if sharded
+            else make_smc_round_fn(simulator, prior, cfg)
+        )
     lo = np.asarray(prior.lows, np.float32)
     hi = np.asarray(prior.highs, np.float32)
     # zero-width prior dims are point masses (pinned intervention scales):
@@ -180,7 +272,7 @@ def run_smc_abc(
             # runs in one jitted while_loop; a single host sync per round
             key, k_round = jax.random.split(key)
             logw = np.log(np.maximum(weights, 1e-38)).astype(np.float32)
-            th_buf, d_buf, n_acc, waves = round_fn(
+            out = round_fn(
                 k_round,
                 jnp.asarray(particles),
                 jnp.asarray(logw),
@@ -188,10 +280,30 @@ def run_smc_abc(
                 np.float32(eps),
                 np.int32(cfg.max_waves_per_round),
             )
-            n_done = min(int(n_acc), cfg.n_particles)
-            sims += int(waves) * cfg.batch_size
-            new_theta[:n_done] = np.asarray(th_buf)[:n_done]
-            new_dist[:n_done] = np.asarray(d_buf)[:n_done]
+            if sharded:
+                # gather the per-shard buffer segments in shard order (the
+                # host re-entry of the sharded round); the global accept
+                # count can exceed the kept population, like any overshoot
+                th_buf, d_buf, n_acc, waves, fills = out
+                th, d = np.asarray(th_buf), np.asarray(d_buf)
+                fills = np.asarray(fills)
+                cap = th.shape[0] // fills.shape[0]
+                seg_th = [th[s * cap: s * cap + int(c)]
+                          for s, c in enumerate(fills)]
+                seg_d = [d[s * cap: s * cap + int(c)]
+                         for s, c in enumerate(fills)]
+                acc_th = np.concatenate(seg_th, axis=0)
+                acc_d = np.concatenate(seg_d, axis=0)
+                n_done = min(acc_th.shape[0], cfg.n_particles)
+                sims += int(waves) * cfg.batch_size
+                new_theta[:n_done] = acc_th[:n_done]
+                new_dist[:n_done] = acc_d[:n_done]
+            else:
+                th_buf, d_buf, n_acc, waves = out
+                n_done = min(int(n_acc), cfg.n_particles)
+                sims += int(waves) * cfg.batch_size
+                new_theta[:n_done] = np.asarray(th_buf)[:n_done]
+                new_dist[:n_done] = np.asarray(d_buf)[:n_done]
         else:
             for wave in range(cfg.max_waves_per_round):
                 # propose a full batch: resample parents by weight, perturb

@@ -182,6 +182,43 @@ def posterior_forecast(
     return _jsonable(payload)
 
 
+def run_scaling_cli(args):
+    """--scaling mode: the paper's multi-device experiment as one command.
+
+    Sweeps the sharded device-resident wave loop over --scaling-devices on
+    THIS process's device pool (force host devices on CPU with
+    XLA_FLAGS=--xla_force_host_platform_device_count=N) and reports
+    parallel_efficiency / scaling_overhead_pct per (model, backend) cell.
+    """
+    import os
+
+    from repro.core.scaling import (
+        ScalingConfig,
+        format_report,
+        run_scaling_study,
+    )
+
+    scfg = ScalingConfig(
+        device_counts=tuple(args.scaling_devices),
+        models=tuple(args.models),
+        backends=tuple(args.backends),
+        batch_per_device=args.batch,
+        waves=args.scaling_waves,
+        num_days=args.days,
+        dataset=args.dataset,
+        reps=args.scaling_reps,
+    )
+    report = run_scaling_study(scfg, verbose=True)
+    print()
+    print(format_report(report))
+    if args.scaling_out:
+        os.makedirs(os.path.dirname(args.scaling_out) or ".", exist_ok=True)
+        with open(args.scaling_out, "w") as f:
+            json.dump(report, f, indent=1, allow_nan=False)
+        print(f"[scaling] report saved to {args.scaling_out}")
+    return report
+
+
 def run_campaign_cli(args, parser):
     from repro.core.campaign import CampaignConfig, run_campaign
 
@@ -217,6 +254,7 @@ def run_campaign_cli(args, parser):
         auto_quantile=args.auto_tolerance or 1e-3,
         out_dir=args.out,
         checkpoint_every=args.checkpoint_every,
+        devices_per_scenario=args.devices_per_scenario,
     )
     report = run_campaign(cfg, verbose=True)
     return report
@@ -239,7 +277,10 @@ def main(argv=None):
                     help="pick epsilon as the Q-quantile of a pilot wave "
                          "(the paper hand-tunes epsilon per dataset)")
     ap.add_argument("--accept", type=int, default=100)
-    ap.add_argument("--batch", type=int, default=8192, help="global batch per run")
+    ap.add_argument("--batch", type=int, default=8192,
+                    help="global batch per run (under --scaling: the "
+                         "per-DEVICE batch — weak scaling multiplies it by "
+                         "the device count)")
     ap.add_argument("--chunk", type=int, default=1024)
     ap.add_argument("--days", type=int, default=20)
     ap.add_argument("--strategy", default="outfeed", choices=["outfeed", "topk"])
@@ -291,6 +332,10 @@ def main(argv=None):
                     help="campaign output directory (checkpoints + report)")
     ap.add_argument("--checkpoint-every", type=int, default=32,
                     help="waves per device segment between campaign checkpoints")
+    ap.add_argument("--devices-per-scenario", type=int, default=1,
+                    help="carve jax.devices() into disjoint groups of this "
+                         "size and shard each scenario's wave loop across "
+                         "its group (1 = one scenario per device)")
     ap.add_argument("--interventions", nargs="+", default=["none"],
                     help="campaign intervention grid axis (schedule strings; "
                          "'none' is the constant-theta cell). Schedules "
@@ -300,6 +345,25 @@ def main(argv=None):
                     choices=list(list_summaries()),
                     help="campaign summary-statistic grid axis (registry "
                          "names; 'identity' is the raw-trajectory cell)")
+    # scaling-study mode ---------------------------------------------------
+    ap.add_argument("--scaling", action="store_true",
+                    help="run the multi-device scaling study (the paper's "
+                         "16-IPU experiment): sharded wave loop at every "
+                         "--scaling-devices count, weak scaling with "
+                         "--batch per device, efficiency/overhead per "
+                         "(model, backend) cell from --models/--backends")
+    ap.add_argument("--scaling-devices", nargs="+", type=int,
+                    default=[1, 2, 4, 8],
+                    help="device counts of the curve (prefix subsets of "
+                         "this process's jax.devices())")
+    ap.add_argument("--scaling-waves", type=int, default=4,
+                    help="fixed wave budget per scaling cell")
+    ap.add_argument("--scaling-reps", type=int, default=3,
+                    help="timed repetitions per cell (best-of)")
+    ap.add_argument("--scaling-out", default="",
+                    help="path for the scaling report JSON (default: "
+                         "stdout table only; the nightly artifact comes "
+                         "from benchmarks/bench_scaling.py)")
     # forecast mode --------------------------------------------------------
     ap.add_argument("--forecast", type=int, default=0, metavar="DAYS",
                     help="after fitting, simulate the accepted particles "
@@ -316,6 +380,8 @@ def main(argv=None):
 
     if args.campaign:
         return run_campaign_cli(args, ap)
+    if args.scaling:
+        return run_scaling_cli(args)
 
     # mirror of run_campaign_cli's guard: grid-only flags do nothing without
     # --campaign — refuse them rather than silently fitting the defaults
@@ -329,6 +395,12 @@ def main(argv=None):
         if value != ap.get_default(flag.lstrip("-").replace("-", "_")):
             ap.error(f"{flag} has no effect without --campaign; use the "
                      f"singular flag {singular} instead")
+    for flag, value in (("--scaling-devices", args.scaling_devices),
+                        ("--scaling-waves", args.scaling_waves),
+                        ("--scaling-reps", args.scaling_reps),
+                        ("--scaling-out", args.scaling_out)):
+        if value != ap.get_default(flag.lstrip("-").replace("-", "_")):
+            ap.error(f"{flag} has no effect without --scaling")
 
     ds = get_dataset(args.dataset, num_days=args.days, model=args.model)
     schedule = parse_intervention(args.intervention)

@@ -1,0 +1,203 @@
+#!/usr/bin/env python
+"""Benchmark-regression gate: the nightly artifacts finally get READ.
+
+Compares freshly produced `experiments/bench/*.json` against the committed
+baselines under `experiments/bench/baselines/` and FAILS (exit 1) on:
+
+  * a wall-clock regression — any cell whose fresh `wall_s` exceeds the
+    baseline's by more than the threshold (default 25%);
+  * any parity-metric drift — entries under "parity" must be EXACTLY equal
+    (parity values are deterministic by construction: simulation counts
+    under a fixed wave budget, scenario statuses, device counts — never
+    wall-clock-derived numbers);
+  * a baselined artifact or cell that the fresh run no longer produces — a
+    silently narrowed benchmark could otherwise hide a regression
+    (downgrade to a warning with --allow-missing for partial local runs).
+
+Fresh artifacts (or cells) WITHOUT a baseline only print a note: a new
+benchmark is not a regression, it just needs its baseline committed.
+
+Only artifacts in the `bench-artifact/v1` envelope (see
+benchmarks/_harness.py) are gated; anything else is skipped with a note.
+
+Usage (what the nightly job runs after the benchmark steps):
+
+    PYTHONPATH=src python tests/check_bench_regression.py
+
+    # options
+    --fresh-dir experiments/bench --baseline-dir experiments/bench/baselines
+    --threshold 0.25 --allow-missing
+
+Refreshing baselines is deliberate: re-run the benchmarks and copy the new
+artifacts over `experiments/bench/baselines/` in a reviewed commit — ideally
+from a nightly run's uploaded artifacts, so the baseline and the gated runs
+share the same machine class (wall clocks are not portable across hosts).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+FRESH_DIR = REPO / "experiments" / "bench"
+BASELINE_DIR = FRESH_DIR / "baselines"
+SCHEMA = "bench-artifact/v1"
+DEFAULT_THRESHOLD = 0.25
+
+
+def compare_artifacts(name: str, baseline: dict, fresh: dict,
+                      threshold: float = DEFAULT_THRESHOLD):
+    """Pure comparison of one (baseline, fresh) artifact pair.
+
+    Returns (problems, notes): `problems` are gate failures, `notes` are
+    informational lines (new cells, new parity keys).
+    """
+    problems, notes = [], []
+    if fresh.get("schema") != SCHEMA:
+        problems.append(
+            f"{name}: fresh artifact is not {SCHEMA} "
+            f"(got {fresh.get('schema')!r}) but the baseline is gated"
+        )
+        return problems, notes
+
+    base_cells = baseline.get("cells", {})
+    fresh_cells = fresh.get("cells", {})
+    for key, base_cell in sorted(base_cells.items()):
+        cell = fresh_cells.get(key)
+        if cell is None:
+            problems.append(
+                f"{name}: cell {key!r} is baselined but missing from the "
+                "fresh run (narrowed benchmark?)"
+            )
+            continue
+        b, f = base_cell.get("wall_s"), cell.get("wall_s")
+        if b is None or f is None or b <= 0:
+            continue
+        if f > b * (1.0 + threshold):
+            problems.append(
+                f"{name}: wall-clock regression in {key!r}: "
+                f"{f:.4g}s vs baseline {b:.4g}s "
+                f"(+{(f / b - 1) * 100:.0f}% > {threshold * 100:.0f}%)"
+            )
+    for key in sorted(set(fresh_cells) - set(base_cells)):
+        notes.append(f"{name}: new cell {key!r} (no baseline yet)")
+
+    base_parity = baseline.get("parity", {})
+    fresh_parity = fresh.get("parity", {})
+    for key, base_val in sorted(base_parity.items()):
+        if key not in fresh_parity:
+            problems.append(
+                f"{name}: parity metric {key!r} is baselined but missing "
+                "from the fresh run"
+            )
+        elif fresh_parity[key] != base_val:
+            problems.append(
+                f"{name}: parity drift in {key!r}: "
+                f"{fresh_parity[key]!r} != baseline {base_val!r}"
+            )
+    for key in sorted(set(fresh_parity) - set(base_parity)):
+        notes.append(f"{name}: new parity metric {key!r} (no baseline yet)")
+    return problems, notes
+
+
+def evaluate_dirs(baseline_dir: Path, fresh_dir: Path,
+                  threshold: float = DEFAULT_THRESHOLD,
+                  allow_missing: bool = False):
+    """Gate every baselined artifact against its fresh counterpart.
+
+    Returns (problems, notes); the gate passes iff `problems` is empty.
+    """
+    problems, notes = [], []
+    baseline_dir, fresh_dir = Path(baseline_dir), Path(fresh_dir)
+    baselines = sorted(baseline_dir.glob("*.json"))
+    if not baselines:
+        problems.append(f"no baseline artifacts under {baseline_dir}")
+        return problems, notes
+    gated = 0
+    for bpath in baselines:
+        name = bpath.name
+        try:
+            baseline = json.loads(bpath.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            problems.append(f"{name}: unreadable baseline ({e})")
+            continue
+        if not isinstance(baseline, dict) or baseline.get("schema") != SCHEMA:
+            notes.append(f"{name}: baseline is not {SCHEMA}; skipped")
+            continue
+        fpath = fresh_dir / name
+        if not fpath.exists():
+            msg = (f"{name}: baselined benchmark produced no fresh artifact "
+                   f"(expected {fpath})")
+            (notes if allow_missing else problems).append(
+                msg + (" [allowed]" if allow_missing else "")
+            )
+            continue
+        try:
+            fresh = json.loads(fpath.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            problems.append(f"{name}: unreadable fresh artifact ({e})")
+            continue
+        if not isinstance(fresh, dict):
+            problems.append(
+                f"{name}: fresh artifact is not a {SCHEMA} object but the "
+                "baseline is gated"
+            )
+            continue
+        gated += 1
+        p, n = compare_artifacts(name, baseline, fresh, threshold)
+        if allow_missing:
+            kept = [x for x in p if "missing from the fresh run" not in x]
+            n = n + [x + " [allowed]" for x in p if x not in kept]
+            p = kept
+        problems.extend(p)
+        notes.extend(n)
+    for fpath in sorted(fresh_dir.glob("*.json")):
+        if not (baseline_dir / fpath.name).exists():
+            try:
+                payload = json.loads(fpath.read_text())
+                if isinstance(payload, dict) and payload.get("schema") == SCHEMA:
+                    notes.append(
+                        f"{fpath.name}: gate-compatible artifact without a "
+                        "committed baseline — consider baselining it"
+                    )
+            except (OSError, json.JSONDecodeError):
+                pass
+    if gated == 0 and not problems:
+        problems.append(
+            f"no {SCHEMA} baseline/fresh artifact pairs were gated"
+        )
+    return problems, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh-dir", default=str(FRESH_DIR))
+    ap.add_argument("--baseline-dir", default=str(BASELINE_DIR))
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="allowed fractional wall-clock slowdown (0.25 = "
+                         "fail beyond +25%%)")
+    ap.add_argument("--allow-missing", action="store_true",
+                    help="downgrade missing fresh artifacts/cells to "
+                         "warnings (partial local runs)")
+    args = ap.parse_args(argv)
+    problems, notes = evaluate_dirs(
+        Path(args.baseline_dir), Path(args.fresh_dir),
+        threshold=args.threshold, allow_missing=args.allow_missing,
+    )
+    for n in notes:
+        print(f"[bench-gate] note: {n}")
+    if problems:
+        print(f"[bench-gate] {len(problems)} problem(s):")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    print("[bench-gate] OK: all gated artifacts within "
+          f"+{args.threshold * 100:.0f}% wall clock, parity exact")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

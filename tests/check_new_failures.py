@@ -21,6 +21,12 @@ Usage (what CI runs):
     PYTHONPATH=src python tests/check_new_failures.py [extra pytest args]
 
 Extra args are forwarded to pytest (e.g. `-m "not slow"` or a subset path).
+
+`--baseline PATH` (consumed here, never forwarded) selects a different
+known-failures file — the CI jax version matrix keeps one baseline per leg
+(`known_failures.txt` for the 0.4.x pin, `known_failures_jax_latest.txt`
+for latest-release jax), because upstream drift breaks different tests on
+different versions.
 """
 
 from __future__ import annotations
@@ -37,9 +43,9 @@ BASELINE = HERE / "known_failures.txt"
 _FAILED_RE = re.compile(r"^(?:FAILED|ERROR) +(\S+)")
 
 
-def load_baseline() -> set:
+def load_baseline(path: Path = BASELINE) -> set:
     known = set()
-    for line in BASELINE.read_text().splitlines():
+    for line in Path(path).read_text().splitlines():
         line = line.strip()
         if line and not line.startswith("#"):
             known.add(line)
@@ -232,9 +238,27 @@ def narrows_collection(argv) -> bool:
     return False
 
 
+def split_baseline_arg(argv):
+    """Extract our own --baseline option; everything else goes to pytest."""
+    baseline, rest = BASELINE, []
+    it = iter(argv)
+    for a in it:
+        if a == "--baseline":
+            try:
+                baseline = Path(next(it))
+            except StopIteration:
+                raise SystemExit("--baseline requires a path argument")
+        elif a.startswith("--baseline="):
+            baseline = Path(a.split("=", 1)[1])
+        else:
+            rest.append(a)
+    return baseline, rest
+
+
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
-    known = load_baseline()
+    baseline, argv = split_baseline_arg(argv)
+    known = load_baseline(baseline)
     code, failed = run_pytest(argv)
     return evaluate(known, code, failed, filtered=narrows_collection(argv),
                     confirm_stale=confirm_stale_by_rerun)

@@ -1,0 +1,132 @@
+"""The benchmark-regression gate must trip on synthetic regressions and pass
+on the committed baselines (tests for tests/check_bench_regression.py)."""
+
+import copy
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from check_bench_regression import (  # noqa: E402
+    BASELINE_DIR,
+    FRESH_DIR,
+    SCHEMA,
+    compare_artifacts,
+    evaluate_dirs,
+    main,
+)
+
+
+def _artifact(wall=1.0, sims=100):
+    return {
+        "benchmark": "demo",
+        "schema": SCHEMA,
+        "meta": {},
+        "cells": {
+            "siard/xla_fused/n1": {"wall_s": wall, "sims_per_s": sims / wall},
+            "siard/xla_fused/n2": {"wall_s": wall * 2},
+        },
+        "parity": {"siard/xla_fused/n1": {"simulations": sims, "devices": 1}},
+    }
+
+
+def _dirs(tmp_path, baseline, fresh):
+    bdir, fdir = tmp_path / "baselines", tmp_path / "fresh"
+    bdir.mkdir(), fdir.mkdir()
+    (bdir / "demo.json").write_text(json.dumps(baseline))
+    if fresh is not None:
+        (fdir / "demo.json").write_text(json.dumps(fresh))
+    return bdir, fdir
+
+
+def test_identical_artifacts_pass(tmp_path):
+    base = _artifact()
+    bdir, fdir = _dirs(tmp_path, base, copy.deepcopy(base))
+    problems, _ = evaluate_dirs(bdir, fdir)
+    assert problems == []
+
+
+def test_synthetic_2x_slowdown_trips(tmp_path):
+    """The acceptance criterion: a synthetically slowed JSON must fail."""
+    bdir, fdir = _dirs(tmp_path, _artifact(wall=1.0), _artifact(wall=2.0))
+    problems, _ = evaluate_dirs(bdir, fdir)
+    assert len(problems) == 2  # both cells doubled
+    assert all("wall-clock regression" in p for p in problems)
+    # and through the CLI entry point
+    assert main(["--baseline-dir", str(bdir), "--fresh-dir", str(fdir)]) == 1
+
+
+def test_slowdown_below_threshold_passes(tmp_path):
+    bdir, fdir = _dirs(tmp_path, _artifact(wall=1.0), _artifact(wall=1.2))
+    problems, _ = evaluate_dirs(bdir, fdir)
+    assert problems == []
+    # a tighter threshold flips it
+    problems, _ = evaluate_dirs(bdir, fdir, threshold=0.1)
+    assert problems and "wall-clock regression" in problems[0]
+
+
+def test_parity_drift_trips(tmp_path):
+    fresh = _artifact()
+    fresh["parity"]["siard/xla_fused/n1"]["simulations"] = 101
+    bdir, fdir = _dirs(tmp_path, _artifact(), fresh)
+    problems, _ = evaluate_dirs(bdir, fdir)
+    assert len(problems) == 1 and "parity drift" in problems[0]
+
+
+def test_speedup_and_new_cells_pass(tmp_path):
+    fresh = _artifact(wall=0.5)  # faster is never a regression
+    fresh["cells"]["new/cell"] = {"wall_s": 9.9}
+    fresh["parity"]["new/cell"] = 1
+    bdir, fdir = _dirs(tmp_path, _artifact(), fresh)
+    problems, notes = evaluate_dirs(bdir, fdir)
+    assert problems == []
+    assert any("new cell" in n for n in notes)
+
+
+def test_missing_fresh_artifact_trips_unless_allowed(tmp_path):
+    bdir, fdir = _dirs(tmp_path, _artifact(), None)
+    problems, _ = evaluate_dirs(bdir, fdir)
+    assert problems and "no fresh artifact" in problems[0]
+    problems, notes = evaluate_dirs(bdir, fdir, allow_missing=True)
+    # nothing was gated, so the gate refuses to claim success silently
+    assert problems == ["no bench-artifact/v1 baseline/fresh artifact "
+                        "pairs were gated"]
+    assert any("no fresh artifact" in n for n in notes)
+
+
+def test_vanished_cell_trips_unless_allowed(tmp_path):
+    fresh = _artifact()
+    del fresh["cells"]["siard/xla_fused/n2"]
+    bdir, fdir = _dirs(tmp_path, _artifact(), fresh)
+    problems, _ = evaluate_dirs(bdir, fdir)
+    assert len(problems) == 1 and "missing from the fresh run" in problems[0]
+    problems, notes = evaluate_dirs(bdir, fdir, allow_missing=True)
+    assert problems == []
+    assert any("missing from the fresh run" in n for n in notes)
+
+
+def test_legacy_baseline_is_skipped_not_gated(tmp_path):
+    legacy = {"some": "old", "payload": True}
+    bdir, fdir = _dirs(tmp_path, legacy, legacy)
+    problems, notes = evaluate_dirs(bdir, fdir)
+    # a dir holding ONLY ungateable artifacts must not silently pass
+    assert problems == ["no bench-artifact/v1 baseline/fresh artifact "
+                        "pairs were gated"]
+    assert any("skipped" in n for n in notes)
+
+
+def test_fresh_artifact_lost_envelope_trips():
+    base = _artifact()
+    problems, _ = compare_artifacts("demo.json", base, {"schema": None})
+    assert problems and "not bench-artifact/v1" in problems[0]
+
+
+@pytest.mark.skipif(not BASELINE_DIR.exists(),
+                    reason="no committed baselines in this checkout")
+def test_committed_baselines_pass_against_themselves():
+    """The committed baseline set must pass the gate against the committed
+    fresh artifacts (the nightly's state right after a baseline refresh)."""
+    problems, _ = evaluate_dirs(BASELINE_DIR, FRESH_DIR)
+    assert problems == [], problems

@@ -1,0 +1,252 @@
+"""Scaling-study executor tests: the pinned contract is that sharding NEVER
+changes the statistics — an N-device shard_map wave loop produces per-shard
+accepted sets BIT-IDENTICAL to the same-seed 1-device lockstep run of the
+same N-shard program (`scaling.make_reference_wave_runner`). Wall clock is
+the only thing a device count may change."""
+
+import hashlib
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import run_in_subprocess
+from repro.core.abc import ABCConfig, ABCState
+from repro.core.scaling import (
+    ScalingConfig,
+    device_mesh,
+    format_report,
+    make_reference_wave_runner,
+    run_scaling_study,
+)
+from repro.epi.data import get_dataset
+from repro.epi.models import get_model
+
+DAYS = 12
+N_SHARDS = 8
+
+# one config, shared VERBATIM by the parent-process reference run and the
+# subprocess shard_map run — any drift would void the bit-identity pin
+_CFG_KW = dict(
+    batch_size=2048, tolerance=3.4e3, target_accepted=60, chunk_size=2048,
+    max_runs=6, num_days=DAYS, backend="xla_fused", wave_loop="device",
+)
+
+
+def _digest(out) -> str:
+    h = hashlib.sha256()
+    for a in (out.theta_buf, out.dist_buf, out.fill_counts):
+        h.update(np.asarray(a).tobytes())
+    h.update(np.int64(int(out.n_accepted)).tobytes())
+    h.update(np.int64(int(out.waves_done)).tobytes())
+    return h.hexdigest()
+
+
+def _reference_digest() -> str:
+    from repro.core.abc import make_simulator
+
+    ds = get_dataset("synthetic_small", num_days=DAYS)
+    cfg = ABCConfig(**_CFG_KW)
+    prior = get_model(cfg.model).prior()
+    ref = make_reference_wave_runner(
+        prior, make_simulator(ds, cfg), cfg, n_shards=N_SHARDS
+    )
+    out = ref(jax.random.PRNGKey(0), 0, ref.init(ABCState(n_params=prior.dim)),
+              cfg.max_runs)
+    return _digest(out)
+
+
+def test_n_device_accepted_sets_bit_identical_to_one_device_run():
+    """THE acceptance criterion: the same-seed accepted sets of the 8-device
+    shard_map wave loop (simulated host devices, own subprocess) and the
+    1-device run of the same 8-shard program (this process) are bit-identical
+    per shard — buffers, fills, totals and wave counts all hash equal."""
+    code = f"""
+import hashlib, jax, numpy as np
+from repro.core.abc import ABCConfig, ABCState, make_simulator
+from repro.core import distributed
+from repro.core.scaling import device_mesh, make_reference_wave_runner
+from repro.epi.data import get_dataset
+from repro.epi.models import get_model
+
+assert len(jax.devices()) == {N_SHARDS}
+ds = get_dataset("synthetic_small", num_days={DAYS})
+cfg = ABCConfig(**{_CFG_KW!r})
+prior = get_model(cfg.model).prior()
+
+wr = distributed.make_wave_runner(device_mesh({N_SHARDS}), ds, cfg,
+                                  style="shard_map")
+out = wr(jax.random.PRNGKey(0), 0, wr.init(ABCState(n_params=prior.dim)),
+         cfg.max_runs)
+
+# in-subprocess cross-check against the lockstep reference on one device
+ref = make_reference_wave_runner(prior, make_simulator(ds, cfg), cfg,
+                                 n_shards={N_SHARDS})
+ref_out = ref(jax.random.PRNGKey(0), 0,
+              ref.init(ABCState(n_params=prior.dim)), cfg.max_runs)
+np.testing.assert_array_equal(np.asarray(out.fill_counts),
+                              np.asarray(ref_out.fill_counts))
+np.testing.assert_array_equal(np.asarray(out.theta_buf),
+                              np.asarray(ref_out.theta_buf))
+np.testing.assert_array_equal(np.asarray(out.dist_buf),
+                              np.asarray(ref_out.dist_buf))
+assert int(out.n_accepted) == int(ref_out.n_accepted) > 0
+assert int(out.waves_done) == int(ref_out.waves_done)
+
+h = hashlib.sha256()
+for a in (out.theta_buf, out.dist_buf, out.fill_counts):
+    h.update(np.asarray(a).tobytes())
+h.update(np.int64(int(out.n_accepted)).tobytes())
+h.update(np.int64(int(out.waves_done)).tobytes())
+print("DIGEST", h.hexdigest())
+"""
+    stdout = run_in_subprocess(code, n_devices=N_SHARDS)
+    sharded_digest = stdout.split("DIGEST")[1].strip()
+    assert sharded_digest == _reference_digest()
+
+
+def test_reference_runner_multi_shard_on_this_process():
+    """The lockstep reference is usable wherever run_abc is: multi-shard
+    buffers harvest into a posterior with every shard's accepts."""
+    from repro.core.abc import make_simulator, run_abc
+
+    ds = get_dataset("synthetic_small", num_days=DAYS)
+    cfg = ABCConfig(**_CFG_KW)
+    prior = get_model(cfg.model).prior()
+    ref = make_reference_wave_runner(
+        prior, make_simulator(ds, cfg), cfg, n_shards=4
+    )
+    post = run_abc(ds, cfg, key=0, wave_runner=ref)
+    assert len(post) >= cfg.target_accepted
+    assert np.isfinite(post.distances).all()
+
+
+def test_reference_runner_rejects_uneven_shards():
+    ds = get_dataset("synthetic_small", num_days=DAYS)
+    cfg = ABCConfig(**{**_CFG_KW, "batch_size": 2047, "chunk_size": 2047})
+    prior = get_model(cfg.model).prior()
+    from repro.core.abc import make_simulator
+
+    with pytest.raises(ValueError, match="not divisible"):
+        make_reference_wave_runner(prior, make_simulator(ds, cfg), cfg,
+                                   n_shards=4)
+
+
+def test_device_mesh_prefix_subsets_and_overflow():
+    mesh = device_mesh(1)
+    assert mesh.devices.shape == (1,)
+    assert mesh.axis_names == ("data",)
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        device_mesh(len(jax.devices()) + 1)
+
+
+def test_scaling_config_validation():
+    with pytest.raises(ValueError, match="non-empty"):
+        ScalingConfig(device_counts=())
+    with pytest.raises(ValueError, match="style"):
+        ScalingConfig(style="magic")
+
+
+def test_scaling_study_single_count_metrics():
+    """The smallest device count is the efficiency reference: its cell must
+    read efficiency 1 / overhead 0, and every cell carries the headline
+    metrics with the fixed simulation budget."""
+    scfg = ScalingConfig(
+        device_counts=(1,), models=("sir",), batch_per_device=512,
+        waves=2, num_days=DAYS, reps=1,
+    )
+    rep = run_scaling_study(scfg)
+    key = "sir/xla_fused/b512/n1"
+    cell = rep["cells"][key]
+    assert cell["parallel_efficiency"] == 1.0
+    assert cell["scaling_overhead_pct"] == 0.0
+    assert cell["simulations"] == 2 * 512  # waves x global batch, pinned
+    assert cell["sims_per_s"] > 0
+    table = format_report(rep)
+    assert "overhead_%" in table and "sir" in table
+    json.dumps(rep)  # the report must be JSON-serializable as-is
+
+
+def test_scaling_study_multi_count_in_subprocess():
+    """Device counts 1..4 on simulated host devices: weak-scaling budgets
+    (simulations scale with n) and well-formed efficiency metrics."""
+    out = run_in_subprocess(
+        f"""
+import jax
+from repro.core.scaling import ScalingConfig, run_scaling_study
+scfg = ScalingConfig(device_counts=(1, 2, 4), models=("sir",),
+                     batch_per_device=256, waves=2, num_days={DAYS}, reps=1)
+rep = run_scaling_study(scfg)
+for n in (1, 2, 4):
+    cell = rep["cells"][f"sir/xla_fused/b256/n{{n}}"]
+    assert cell["simulations"] == 2 * 256 * n, cell
+    assert 0 < cell["parallel_efficiency"] <= 1.5  # noise tolerance at n=1
+    assert cell["waves"] == 2
+print("OK", rep["cells"]["sir/xla_fused/b256/n4"]["scaling_overhead_pct"])
+""",
+        n_devices=4,
+    )
+    assert "OK" in out
+
+
+def test_sharded_smc_full_population_and_determinism():
+    """SMC rounds under the scaling study's sharding: full particle refresh,
+    finite distances, deterministic in (key, mesh shape)."""
+    out = run_in_subprocess(
+        f"""
+import jax, numpy as np
+from jax.sharding import Mesh
+from repro.core.smc import SMCConfig, run_smc_abc
+from repro.epi.data import get_dataset
+ds = get_dataset("synthetic_small", num_days={DAYS})
+mesh = Mesh(np.asarray(jax.devices()), ("data",))
+cfg = SMCConfig(n_particles=48, batch_size=1024, n_rounds=2,
+                num_days={DAYS}, wave_loop="device")
+a = run_smc_abc(ds, cfg, key=0, mesh=mesh)
+b = run_smc_abc(ds, cfg, key=0, mesh=mesh)
+assert len(a) == 48 and np.isfinite(a.distances).all()
+np.testing.assert_array_equal(a.theta, b.theta)
+# the sharded rounds must actually tighten the tolerance like the others
+single = run_smc_abc(ds, cfg, key=0)
+assert a.tolerance <= 1.5 * single.tolerance
+try:
+    run_smc_abc(ds, SMCConfig(wave_loop="host"), key=0, mesh=mesh)
+except ValueError as e:
+    assert "wave_loop" in str(e)
+else:
+    raise AssertionError("host loop + mesh should be rejected")
+print("OK", a.tolerance)
+""",
+        n_devices=4,
+    )
+    assert "OK" in out
+
+
+def test_campaign_disjoint_device_groups():
+    """devices_per_scenario=2 on 4 devices: two scenarios advance
+    concurrently on DISJOINT 2-device groups, complete, and resume."""
+    out = run_in_subprocess(
+        f"""
+import tempfile
+from repro.core.campaign import CampaignConfig, run_campaign
+with tempfile.TemporaryDirectory() as td:
+    cfg = CampaignConfig(
+        datasets=("italy", "usa"), models=("siard",), batch_size=1024,
+        num_days={DAYS}, target_accepted=20, max_runs=300,
+        auto_quantile=2e-3, out_dir=td, checkpoint_every=4,
+        devices_per_scenario=2,
+    )
+    rep = run_campaign(cfg)
+    statuses = [r.status for r in rep.scenarios]
+    assert statuses == ["ok", "ok"], statuses
+    groups = [r.device for r in rep.scenarios]
+    assert groups == ["0+1", "2+3"], groups  # disjoint round-robin groups
+    assert all(r.n_accepted >= 20 for r in rep.scenarios)
+    rep2 = run_campaign(cfg)
+    assert [r.status for r in rep2.scenarios] == ["resumed_complete"] * 2
+print("OK")
+""",
+        n_devices=4,
+    )
+    assert "OK" in out

@@ -58,6 +58,35 @@ def best_of(fn: Callable, *args, reps: int = 3, warmup: int = 1) -> Tuple:
     return result, best
 
 
+def roofline_fields(
+    model: str,
+    days: int,
+    simulations: float,
+    wall_s: float,
+    summary=None,
+    distance: str = "euclidean",
+    schedule=None,
+) -> Dict[str, float]:
+    """Per-cell roofline instrumentation for the bench envelope.
+
+    Returns `achieved_flops` / `achieved_bytes_per_s` /
+    `arithmetic_intensity` / `roofline_efficiency` from the analytic cost
+    model (repro.core.tuning.cost_model) at the cell's measured
+    (simulations, wall clock). The regression gate tracks
+    `roofline_efficiency` for drift alongside `wall_s`. Cells with zero
+    simulations (skipped scenarios) return {} so the gate never baselines a
+    meaningless efficiency.
+    """
+    if not simulations or not wall_s or wall_s <= 0:
+        return {}
+    from repro.core.tuning import bench_cell_metrics
+
+    return bench_cell_metrics(
+        model, days, simulations, wall_s,
+        summary=summary, distance=distance, schedule=schedule,
+    )
+
+
 def emit_artifact(
     name: str,
     *,

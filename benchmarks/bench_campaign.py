@@ -15,7 +15,7 @@ import tempfile
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent))
-from _harness import emit_artifact, render_table  # noqa: E402
+from _harness import emit_artifact, render_table, roofline_fields  # noqa: E402
 
 from repro.core.campaign import CampaignConfig, run_campaign  # noqa: E402
 
@@ -55,7 +55,21 @@ def main(argv=None):
         ["scenario", "status", "runs", "acc_rate", "wall_s", "sims/s"], rows))
 
     n_run = sum(1 for r in report.scenarios if r.status == "ok")
-    cells = {"campaign/total": {"wall_s": report.wall_time_s}}
+    # the campaign/total roofline aggregates the per-scenario analytic
+    # totals (each scenario's own model spec) over the campaign wall clock
+    from repro.core.tuning import cost_model, roofline_from_totals
+
+    total_flops = total_bytes = 0.0
+    for r in report.scenarios:
+        if r.simulations:
+            cm = cost_model(r.model, args.days)
+            total_flops += cm.flops(r.simulations)
+            total_bytes += cm.fused_bytes(r.simulations)
+    cells = {"campaign/total": {
+        "wall_s": report.wall_time_s,
+        **(roofline_from_totals(total_flops, total_bytes, report.wall_time_s)
+           if total_flops else {}),
+    }}
     # statuses are the campaign's structural outcome — a cell flipping from
     # "ok" to "budget_exhausted" (or a scenario disappearing) is a parity
     # drift the gate must catch; wall-clock-derived numbers are NOT parity
@@ -66,6 +80,8 @@ def main(argv=None):
             "sims_per_s": r.simulations / max(r.wall_time_s, 1e-9),
             "runs": r.runs,
             "simulations": r.simulations,
+            **roofline_fields(r.model, args.days, r.simulations,
+                              r.wall_time_s),
         }
     extra = {
         "wall_time_s": report.wall_time_s,

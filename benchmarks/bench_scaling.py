@@ -32,7 +32,7 @@ import sys
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent))
-from _harness import emit_artifact  # noqa: E402
+from _harness import emit_artifact, roofline_fields  # noqa: E402
 
 _CHILD_ENV = "_BENCH_SCALING_CHILD"
 
@@ -125,6 +125,8 @@ def main(argv=None):
             "scaling_overhead_pct": cell["scaling_overhead_pct"],
             "devices": cell["devices"],
             "global_batch": cell["global_batch"],
+            **roofline_fields(cell["model"], args.days,
+                              cell["simulations"], cell["wall_s"]),
         }
         # the wave budget is fixed, so per-cell simulation counts (and the
         # device counts themselves) are deterministic parity metrics

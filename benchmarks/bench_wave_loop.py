@@ -34,7 +34,13 @@ from pathlib import Path
 
 
 sys.path.insert(0, str(Path(__file__).resolve().parent))
-from _harness import RESULTS_DIR, best_of, emit_artifact, render_table  # noqa: E402
+from _harness import (  # noqa: E402
+    RESULTS_DIR,
+    best_of,
+    emit_artifact,
+    render_table,
+    roofline_fields,
+)
 
 from repro.core.abc import ABCConfig, make_simulator, run_abc  # noqa: E402
 from repro.epi.data import get_dataset  # noqa: E402
@@ -71,6 +77,76 @@ def make_driver(ds, cfg):
     return lambda key: run_abc(ds, cfg, key=key, run_fn=run_fn)
 
 
+def tile_study(args, cells, parity, rows):
+    """Hardwired tile=1024 vs the measured tile sweep, end to end.
+
+    Runs the device wave loop of the FIRST requested model on the pallas
+    backend at every compatible kernel tile, records one gated cell per
+    tile (`tile_study/{model}/pallas/tile{t}`), persists the winner to the
+    tuning cache under experiments/tuning/, and reports whether the
+    autotuned tile beat the old hardwired 1024 default. The acceptance
+    counts are parity-gated EQUAL across tiles: the kernel's global sample
+    index makes the RNG tile-invariant, so tiling is pure scheduling.
+    """
+    from repro.core import tuning
+
+    model = args.models[0]
+    waves = min(args.waves, 4)  # the sweep needs relative, not long, runs
+    ds = get_dataset("synthetic_small", num_days=DAYS, model=model)
+    tol = calibrate(ds, model, "pallas", "identity", "euclidean")
+    target = waves * args.batch + 1
+    cands = tuning.tile_candidates(args.batch)
+    if 1024 not in cands and args.batch % 1024 == 0:
+        cands = tuple(sorted(set(cands) | {1024}))
+    study = {"model": model, "batch": args.batch, "waves": waves,
+             "tiles": {}, "default_tile": 1024}
+    for t in cands:
+        cfg = ABCConfig(
+            batch_size=args.batch, tolerance=tol, target_accepted=target,
+            max_runs=waves, chunk_size=args.batch, num_days=DAYS,
+            backend="pallas", model=model, wave_loop="device", tile=int(t),
+        )
+        driver = make_driver(ds, cfg)
+        post, dt = best_of(driver, 1, reps=args.reps, warmup=1)
+        key = f"tile_study/{model}/pallas/tile{t}"
+        cells[key] = {
+            "wall_s": dt, "simulations": post.simulations,
+            "sims_per_s": post.simulations / dt, "tile": int(t),
+            **roofline_fields(model, DAYS, post.simulations, dt),
+        }
+        # tile invariance is the contract: same accepted count AND same
+        # simulation budget at every tile, exact-gated
+        parity[key] = {"simulations": post.simulations,
+                       "n_accepted": len(post)}
+        study["tiles"][str(t)] = {"wall_s": dt,
+                                  "sims_per_s": post.simulations / dt}
+        rows.append([model, "pallas", f"tile={t}", "euclidean", "device",
+                     f"{dt*1e3:.1f}", f"{post.simulations / dt:,.0f}"])
+    best = min(study["tiles"], key=lambda k: study["tiles"][k]["wall_s"])
+    study["autotuned_tile"] = int(best)
+    d1024 = study["tiles"].get("1024")
+    study["autotuned_beats_default"] = bool(
+        d1024 is not None and study["tiles"][best]["wall_s"] < d1024["wall_s"]
+    )
+    # persist the end-to-end winner so --autotune runs pick it up
+    cfg0 = ABCConfig(batch_size=args.batch, chunk_size=args.batch,
+                     num_days=DAYS, backend="pallas", model=model)
+    cache = tuning.TuningCache()
+    cache.put(tuning.cfg_cache_key(cfg0), {
+        "schema": tuning.CACHE_SCHEMA, "backend": "pallas", "model": model,
+        "days": DAYS, "batch": args.batch, "summary": "identity",
+        "distance": "euclidean", "schedule": "nosched",
+        "tile": int(best), "best_batch": None,
+        "measurements": {f"tile{t}": v["wall_s"]
+                         for t, v in study["tiles"].items()},
+    })
+    study["cache_path"] = str(cache.path)
+    print(f"[tile-study] winner tile={best} "
+          f"(beats 1024: {study['autotuned_beats_default']}); "
+          f"cached -> {cache.path}")
+    return study
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=8192)
@@ -89,6 +165,9 @@ def main(argv=None):
                     help="artifact basename under experiments/bench/ (the "
                          "nightly job writes the default run and the summary "
                          "sweep to separate JSON files)")
+    ap.add_argument("--no-tile-study", action="store_true",
+                    help="skip the pallas tile sweep (hardwired 1024 vs "
+                         "measured winner) that rides along by default")
     args = ap.parse_args(argv)
 
     # unreachable target so both drivers burn the full wave budget, but small
@@ -127,7 +206,18 @@ def main(argv=None):
                     per_loop[loop] = {
                         "wall_s": dt, "simulations": post.simulations,
                         "sims_per_s": sims_per_s,
+                        # roofline instrumentation: measured throughput vs the
+                        # analytic ceiling of THIS (model, summary, distance)
+                        **roofline_fields(model, DAYS, post.simulations, dt,
+                                          summary=summary, distance=distance),
                     }
+                    if backend == "pallas":
+                        from repro.kernels.ops import resolve_tile
+
+                        # surface the kernel tile actually used in the cell
+                        per_loop[loop]["tile"] = resolve_tile(
+                            args.batch, cfg.tile
+                        )
                     key = f"{model}/{backend}/{summary}/{distance}/{loop}"
                     cells[key] = dict(per_loop[loop])
                     # the wave budget is fixed (unreachable target), so the
@@ -152,10 +242,17 @@ def main(argv=None):
                 rows.append([model, backend, summary, distance, "speedup", "",
                              f"{speedup:.2f}x"])
 
+    # pallas tile sweep: hardwired 1024 vs measured winner, gated per tile
+    study = None
+    if not args.no_tile_study:
+        study = tile_study(args, cells, parity, rows)
+
     # legacy payload fields (and the raw-simulator baseline, so one artifact
     # shows the trajectory) ride along outside the gated envelope
     extra = {"batch": args.batch, "waves": args.waves, "reps": args.reps,
              "runs": runs}
+    if study is not None:
+        extra["tile_study"] = study
     sweep_path = RESULTS_DIR / "model_sweep.json"
     if sweep_path.exists():
         extra["model_sweep_baseline"] = json.loads(sweep_path.read_text())

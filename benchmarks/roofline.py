@@ -67,17 +67,32 @@ def roofline_table(mesh="single", tag="baseline") -> str:
     )
 
 
-def abc_kernel_roofline(batch: int = 100_000, days: int = 49) -> dict:
+def abc_kernel_roofline(
+    batch: int = 100_000,
+    days: int = 49,
+    model: str = "siard",
+    summary=None,
+    distance: str = "euclidean",
+) -> dict:
     """Analytic roofline of the fused Pallas ABC kernel (no matmuls — the
-    HLO dot counter sees none, so this is derived from the kernel's op
-    counts; see kernels/abc_sim.py docstring for the traffic model)."""
-    flops_per_sample_day = 160.0  # hazards+rng(10 hashes)+boxmuller+update+dist
-    flops = batch * days * flops_per_sample_day
-    hbm_bytes_fused = batch * (8 * 4 + 4)  # theta in + distance out
-    hbm_bytes_naive = batch * days * (5 + 3 + 6 + 6) * 4  # noise+obs+state rw
+    HLO dot counter sees none), derived from the MODEL SPEC via the generic
+    cost model in repro.core.tuning: the per-day op count is traced from the
+    spec's own hazards/RNG/summary accumulator and the byte model follows
+    its `n_transitions`/`n_state`/`n_observed`. Nothing here is hardwired to
+    the paper's SIARD constants; pass any registered model name."""
+    from repro.core.tuning import cost_model
+
+    cm = cost_model(model, days, summary=summary, distance=distance)
+    flops = cm.flops(batch)
+    hbm_bytes_fused = cm.fused_bytes(batch)  # theta in + distance out
+    hbm_bytes_naive = cm.naive_bytes(batch)  # noise+obs+state round trips
     return {
+        "model": cm.model,
         "batch": batch,
         "days": days,
+        "flops_per_sample_day": cm.flops_per_sample_day,
+        "fused_bytes_per_sample": cm.fused_bytes_per_sample,
+        "naive_bytes_per_sample_day": cm.naive_bytes_per_sample_day,
         "t_compute_s": flops / PEAK_FLOPS,
         "t_memory_fused_s": hbm_bytes_fused / HBM_BW,
         "t_memory_naive_s": hbm_bytes_naive / HBM_BW,
@@ -106,7 +121,8 @@ def write_advice_appendix(path=None) -> str:
     return str(path)
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, model: str = "siard", batch: int = 100_000,
+        days: int = 49):
     for mesh in ("single", "multi"):
         cells = load_cells(mesh)
         print(f"\n== Roofline ({mesh}-pod), {len(cells)} cells ==")
@@ -114,8 +130,9 @@ def run(quick: bool = True):
             print(roofline_table(mesh))
     p = write_advice_appendix()
     print(f"\nper-cell advice appendix -> {p}")
-    abc = abc_kernel_roofline()
-    print("\n== ABC kernel analytic roofline (per chip, batch 100k x 49 days) ==")
+    abc = abc_kernel_roofline(batch=batch, days=days, model=model)
+    print(f"\n== ABC kernel analytic roofline (per chip, model {abc['model']}, "
+          f"batch {batch} x {days} days) ==")
     for k, v in abc.items():
         print(f"  {k}: {v}")
     save_result("roofline_abc_kernel", abc)
@@ -123,4 +140,13 @@ def run(quick: bool = True):
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="siard",
+                    help="registry name; the cost model derives the op/byte "
+                         "counts from the spec, nothing is SIARD-specific")
+    ap.add_argument("--batch", type=int, default=100_000)
+    ap.add_argument("--days", type=int, default=49)
+    a = ap.parse_args()
+    run(model=a.model, batch=a.batch, days=a.days)

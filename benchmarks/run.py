@@ -8,9 +8,11 @@
 from __future__ import annotations
 
 import argparse
+import shutil
 import sys
 import time
 import traceback
+from pathlib import Path
 
 BENCHES = {
     "table1": ("benchmarks.bench_runtime", "Table 1: runtime vs tolerance/accepted"),
@@ -24,11 +26,61 @@ BENCHES = {
 }
 
 
+#: the gate-compatible artifacts with committed baselines: (module, argv).
+#: `--refresh` reruns exactly these and copies the fresh JSON over
+#: experiments/bench/baselines/ in one command (the re-baselining friction
+#: cutter named by the ROADMAP; commit the result in a reviewed change).
+BASELINED = {
+    "wave_loop.json": ("benchmarks.bench_wave_loop", []),
+    "campaign.json": ("benchmarks.bench_campaign", []),
+    "scaling.json": ("benchmarks.bench_scaling", []),
+}
+
+
+def refresh_baselines() -> int:
+    import importlib
+
+    bench_dir = Path(__file__).resolve().parents[1] / "experiments" / "bench"
+    baseline_dir = bench_dir / "baselines"
+    baseline_dir.mkdir(parents=True, exist_ok=True)
+    failures = []
+    for name, (module, argv) in BASELINED.items():
+        print(f"\n{'='*72}\n[refresh] {module} -> {name}\n{'='*72}",
+              flush=True)
+        try:
+            importlib.import_module(module).main(list(argv))
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+            continue
+        fresh = bench_dir / name
+        if not fresh.exists():
+            failures.append(name)
+            print(f"[refresh] {module} produced no {fresh}")
+            continue
+        shutil.copyfile(fresh, baseline_dir / name)
+        print(f"[refresh] baselined {baseline_dir / name}")
+    if failures:
+        print(f"[refresh] FAILED for: {failures}")
+        return 1
+    print(f"\n[refresh] all baselines regenerated under {baseline_dir}; "
+          "review + commit them (tests/check_bench_regression.py gates "
+          "against this set)")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--refresh", action="store_true",
+                    help="regenerate every experiments/bench/baselines/*.json "
+                         "in one command (runs the baselined benchmarks with "
+                         "their default settings, then copies the fresh "
+                         "artifacts over the baselines)")
     args = ap.parse_args(argv)
+    if args.refresh:
+        sys.exit(refresh_baselines())
     only = set(args.only.split(",")) if args.only else set(BENCHES)
 
     failures = []

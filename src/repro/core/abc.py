@@ -111,6 +111,19 @@ class ABCConfig:
     #: pair; the default (None, "euclidean") is bit-identical to pre-summary
     #: releases on all three backends (pinned by tests/test_summaries.py).
     summary: Optional[object] = None
+    #: Pallas kernel tile (samples per grid cell). None auto-resolves via
+    #: kernels.ops.resolve_tile (legacy 1024-lane default) or, with
+    #: `autotune`, to the cached measured winner. An explicit tile must be a
+    #: multiple of 128 dividing batch_size (validated loudly). Pure
+    #: scheduling: accepted sets are bit-identical across tiles.
+    tile: Optional[int] = None
+    #: unroll factor of the xla_fused day scan (lax.scan unroll); None means
+    #: 1 unless autotuning resolves a cached winner. Also pure scheduling.
+    scan_unroll: Optional[int] = None
+    #: consult (and on a miss, populate) the measured tuning cache under
+    #: experiments/tuning/ at simulator-build time (repro.core.tuning);
+    #: explicitly set tile/scan_unroll values always win over the cache
+    autotune: bool = False
 
     def __post_init__(self):
         if self.strategy not in ("outfeed", "topk"):
@@ -123,6 +136,13 @@ class ABCConfig:
         get_summary(self.summary)
         if self.wave_loop not in ("auto", "host", "device"):
             raise ValueError(f"unknown wave_loop {self.wave_loop!r}")
+        if self.tile is not None:
+            from repro.kernels.ops import resolve_tile
+
+            # validates multiple-of-128 and batch divisibility, loudly
+            resolve_tile(self.batch_size, self.tile)
+        if self.scan_unroll is not None and self.scan_unroll < 1:
+            raise ValueError(f"scan_unroll must be >= 1, got {self.scan_unroll}")
         if self.wave_loop == "device" and self.strategy == "topk":
             # the device loop compacts EVERY sub-tolerance sample (outfeed
             # harvest semantics); it has no per-wave k cap, so pairing it
@@ -229,6 +249,7 @@ def make_parametric_simulator(spec, cfg: ABCConfig):
         d, _ = engine.simulate_observed_lowmem(
             spec, theta, key, mcfg, observed, schedule, breakpoints,
             summary=summary, distance=cfg.distance,
+            unroll=cfg.scan_unroll or 1,
         )
         return d
 
@@ -263,6 +284,13 @@ def make_simulator(dataset: CountryData, cfg: ABCConfig) -> SimulatorFn:
     `cfg.schedule`, theta must carry the widened scale columns
     (`schedule_prior(spec, cfg.schedule)` samples the right layout).
     """
+    if cfg.autotune:
+        # fill tile / scan_unroll from the measured tuning cache (a miss
+        # runs the search once and persists it); returns autotune=False so
+        # the tuner's own measurement probes land in this branch's else
+        from repro.core import tuning
+
+        cfg = tuning.resolve_tuned(dataset, cfg)
     spec = get_model(cfg.model)
     if not dataset.compatible_with(spec):
         raise ValueError(
@@ -296,6 +324,7 @@ def make_simulator(dataset: CountryData, cfg: ABCConfig) -> SimulatorFn:
                 d0=mcfg.d0,
                 model=spec,
                 schedule=cfg.schedule,
+                tile=cfg.tile,
                 interpret=cfg.interpret,
                 summary=cfg.summary_spec,
                 distance=cfg.distance,

@@ -147,6 +147,14 @@ class CampaignConfig:
     #: per-scenario sample stream matches a solo sharded run of the same
     #: seed/mesh shape (per-shard key folds), not the 1-device stream.
     devices_per_scenario: int = 1
+    #: hot-path tuning knobs, threaded into every scenario's ABCConfig
+    #: (repro.core.tuning): explicit Pallas tile / xla_fused scan unroll, or
+    #: autotune=True to pull the measured winners from the tuning cache at
+    #: simulator-build time. All are pure scheduling — accepted sets are
+    #: unchanged — so scenario checkpoints stay compatible across settings.
+    tile: Optional[int] = None
+    scan_unroll: Optional[int] = None
+    autotune: bool = False
 
     def __post_init__(self):
         if self.devices_per_scenario < 1:
@@ -187,6 +195,11 @@ class CampaignConfig:
             interpret=self.interpret,
             summary=sc.summary,
             distance=sc.distance,
+            # tuning knobs apply only where they are meaningful: the tile to
+            # pallas cells, the scan unroll to xla_fused cells
+            tile=self.tile if sc.backend == "pallas" else None,
+            scan_unroll=self.scan_unroll if sc.backend == "xla_fused" else None,
+            autotune=self.autotune,
         )
 
 
@@ -332,9 +345,16 @@ class _ShapeCache:
         # epsilon is a traced argument, so one compile serves every scenario
         shape_cfg = self.cfg.abc_config(sc, tolerance=1.0)
         if sc.backend == "pallas":
+            # make_simulator resolves autotune internally (per dataset)
             sim = make_simulator(dataset, shape_cfg)
             sim_call = lambda th, k, _data: sim(th, k)  # noqa: E731
         else:
+            if shape_cfg.autotune:
+                from repro.core import tuning
+
+                # tune against the FIRST dataset reaching this shape: the
+                # knobs are shape-determined (the dataset is traced data)
+                shape_cfg = tuning.resolve_tuned(dataset, shape_cfg)
             parametric = make_parametric_simulator(spec, shape_cfg)
             sim_call = parametric
         if group is not None and len(group) > 1:

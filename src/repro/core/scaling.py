@@ -175,6 +175,12 @@ class ScalingConfig:
     #: the gather cost the paper's outfeed pays)
     tolerance_quantile: float = 0.01
     style: str = "shard_map"
+    #: hot-path tuning knobs (repro.core.tuning), threaded into each cell's
+    #: ABCConfig: explicit Pallas tile / xla_fused scan unroll, or
+    #: autotune=True to resolve cached measured winners per cell shape
+    tile: Optional[int] = None
+    scan_unroll: Optional[int] = None
+    autotune: bool = False
 
     def __post_init__(self):
         if not self.device_counts:
@@ -202,6 +208,9 @@ def _cell_abc_config(scfg: ScalingConfig, model: str, backend: str,
         backend=backend,
         model=model,
         wave_loop="device",
+        tile=scfg.tile if backend == "pallas" else None,
+        scan_unroll=scfg.scan_unroll if backend == "xla_fused" else None,
+        autotune=scfg.autotune,
     )
 
 

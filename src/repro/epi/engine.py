@@ -249,6 +249,7 @@ def simulate_observed_lowmem(
     breakpoints=None,
     summary=None,
     distance: str = "euclidean",
+    unroll: int = 1,
 ) -> Tuple[jax.Array, jax.Array]:
     """Fused simulate + running summary-distance accumulation.
 
@@ -305,7 +306,11 @@ def simulate_observed_lowmem(
         return (nxt, cum, binv, acc), None
 
     days = jnp.arange(cfg.num_days)
+    # `unroll` is the xla_fused chunking knob searched by the autotuner
+    # (repro.core.tuning): pure scheduling, the day streams are unchanged so
+    # distances stay bit-identical across unroll factors (pinned by tests)
     (state_f, _, _, acc_f), _ = jax.lax.scan(
-        step, (state0, chan0, chan0, acc0), (days, obs_by_day, lowered.flush)
+        step, (state0, chan0, chan0, acc0), (days, obs_by_day, lowered.flush),
+        unroll=max(1, int(unroll)),
     )
     return running_finalize(kind, lowered.mean_scale, acc_f), state_f

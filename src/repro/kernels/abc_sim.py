@@ -34,13 +34,18 @@ parameter is one (1, TB) VREG row. Under an intervention schedule the theta
 block widens to [n_params + n_windows*n_tv, B]: the extra window-major scale
 rows are selected per day by unrolled VREG selects against the window index
 (breakpoint days arrive as iconst scalars, so they are runtime values — a
-lockdown-day sweep reuses one compiled kernel). The n_state channels are (1,
-TB) rows
-carried through the day loop as values (VREGs), not refs. `TB` defaults to
-1024 lanes -> peak VMEM per cell ~ (n_state + n_params + n_trans +
-2*n_obs) * 4 KB (the 2*n_obs rows are the summary accumulator's cum/bin
-carries), far under the ~16 MB/core budget, leaving room for concurrent
-grid cells.
+lockdown-day sweep reuses one compiled kernel). The n_state channels are
+(1, TB) rows carried through the day loop as values (VREGs), not refs.
+`TB` is a required tuning knob resolved by `kernels.ops.resolve_tile`
+(auto default: 1024 lanes, shrunk to the batch's power-of-two for small
+batches) and searched by the measured autotuner (repro.core.tuning) over
+{256..4096}; peak VMEM per cell ~ TB/1024 * (n_state + n_params + n_trans
++ 2*n_obs) * 4 KB (the 2*n_obs rows are the summary accumulator's cum/bin
+carries), far under the ~16 MB/core budget even at TB=4096, leaving room
+for concurrent grid cells. The in-kernel RNG streams are indexed by the
+GLOBAL sample index `idx = lane + TB * tile_idx`, so distances — and the
+accepted particle sets above them — are bit-identical across tile sizes
+(pinned by tests); the tile is pure scheduling.
 
 The per-day distance accumulation is the traced-select lowering of the
 generalized summary accumulator (repro.core.summaries): the observed block
@@ -223,7 +228,7 @@ def abc_sim_distance_kernel(
     *,
     model: CompartmentalModel,
     num_days: int,
-    tile: int = 1024,
+    tile: int,
     interpret: bool | None = None,
     sched: ScheduleShape | None = None,
 ) -> jax.Array:

@@ -24,6 +24,41 @@ def _auto_interpret() -> bool:
     return abc_sim.auto_interpret()
 
 
+def resolve_tile(batch: int, tile: int | None = None) -> int:
+    """The kernel tile actually used for `batch` — the SINGLE tile authority.
+
+    `tile=None` picks the legacy auto default: 1024 lanes, shrunk to the
+    next power of two >= batch for small batches (so a 300-sample pilot run
+    pads to one 512-lane cell instead of a mostly-empty 1024-lane one).
+
+    An EXPLICIT tile is taken literally and validated loudly: it must be a
+    positive multiple of 128 lanes that divides the batch exactly. The old
+    behavior silently clamped the request and over-padded incompatible
+    batches, so a tuned `tile=2048` could quietly run at 512 and a
+    `batch=300, tile=256` cell could quietly simulate 212 ghost samples —
+    invisible in the bench envelope it was supposed to explain.
+    """
+    if batch <= 0:
+        raise ValueError(f"batch must be positive, got {batch}")
+    if tile is None:
+        return min(1024, max(128, 1 << (batch - 1).bit_length()))
+    tile = int(tile)
+    if tile < 128 or tile % 128:
+        raise ValueError(
+            f"tile={tile} is not a positive multiple of 128 lanes; pass "
+            "tile=None for the auto default"
+        )
+    if batch % tile:
+        raise ValueError(
+            f"tile={tile} does not divide batch={batch}; the kernel would "
+            "silently pad {pad} ghost samples. Pick a divisor tile or "
+            "tile=None for the auto default".replace(
+                "{pad}", str((-batch) % tile)
+            )
+        )
+    return tile
+
+
 def abc_sim_distance(
     theta: jax.Array,  # [B, n_params (+ n_scales)] f32
     seed: jax.Array,  # uint32 scalar
@@ -33,7 +68,7 @@ def abc_sim_distance(
     a0: float,
     r0: float = 0.0,
     d0: float = 0.0,
-    tile: int = 1024,
+    tile: int | None = None,
     interpret: bool | None = None,
     model=None,  # CompartmentalModel spec; defaults to the paper's SIARD
     schedule=None,  # InterventionSchedule; theta carries its scale columns
@@ -59,6 +94,9 @@ def abc_sim_distance(
         from repro.epi.models import DEFAULT_MODEL as model  # noqa: N811
     if interpret is None:
         interpret = _auto_interpret()
+    # resolve/validate OUTSIDE the jit boundary: tile=None and its resolved
+    # value share a cache entry, and bad explicit tiles fail loudly up here
+    tile = resolve_tile(int(theta.shape[0]), tile)
     sched = None
     if schedule is not None and not schedule.is_empty:
         sched = schedule.shape(model)
@@ -113,7 +151,7 @@ def _abc_sim_distance_jit(
     assert 1 + n_windows <= abc_sim._SUM_ILANE, n_windows
     assert abc_sim._WEIGHT_LANE + model.n_observed <= _CONST_LANES
 
-    tile = min(tile, max(128, 1 << (batch - 1).bit_length()))
+    # tile arrives pre-resolved (resolve_tile); only an auto tile may pad
     pad_b = (-batch) % tile
     p_pad = abc_sim.sublane_pad(width)
     theta_t = jnp.swapaxes(theta, 0, 1)  # [width, B]

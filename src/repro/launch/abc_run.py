@@ -207,6 +207,9 @@ def run_scaling_cli(args):
         num_days=args.days,
         dataset=args.dataset,
         reps=args.scaling_reps,
+        tile=args.tile,
+        scan_unroll=args.scan_unroll,
+        autotune=args.autotune,
     )
     report = run_scaling_study(scfg, verbose=True)
     print()
@@ -255,6 +258,9 @@ def run_campaign_cli(args, parser):
         out_dir=args.out,
         checkpoint_every=args.checkpoint_every,
         devices_per_scenario=args.devices_per_scenario,
+        tile=args.tile,
+        scan_unroll=args.scan_unroll,
+        autotune=args.autotune,
     )
     report = run_campaign(cfg, verbose=True)
     return report
@@ -300,6 +306,21 @@ def main(argv=None):
                     help="Pallas dispatch for backend=pallas: 'auto' runs the "
                          "interpreter only on CPU and compiled kernels on "
                          "accelerators; 'on'/'off' force a mode")
+    ap.add_argument("--tile", type=int, default=None,
+                    help="Pallas kernel tile (samples per grid cell); must be "
+                         "a multiple of 128 dividing --batch. Default: auto "
+                         "(1024-lane legacy default, or the tuning-cache "
+                         "winner under --autotune). Pure scheduling — "
+                         "accepted sets are identical across tiles")
+    ap.add_argument("--scan-unroll", type=int, default=None,
+                    help="unroll factor of the xla_fused day scan (pure "
+                         "scheduling; default 1, or the tuning-cache winner "
+                         "under --autotune)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="resolve tile/scan-unroll from the measured tuning "
+                         "cache under experiments/tuning/ at simulator-build "
+                         "time (a cache miss runs the best-of-N search once "
+                         "and persists the winners; see repro.core.tuning)")
     ap.add_argument("--intervention", default="",
                     help="piecewise-constant intervention schedule, e.g. "
                          "'alpha@25=0.3' (contact rate pinned to 0.3x from "
@@ -433,6 +454,9 @@ def main(argv=None):
         interpret=interpret,
         summary=args.summary,
         distance=args.distance,
+        tile=args.tile,
+        scan_unroll=args.scan_unroll,
+        autotune=args.autotune,
     )
     run_fn = None
     wave_runner = None

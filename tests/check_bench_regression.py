@@ -6,6 +6,12 @@ baselines under `experiments/bench/baselines/` and FAILS (exit 1) on:
 
   * a wall-clock regression — any cell whose fresh `wall_s` exceeds the
     baseline's by more than the threshold (default 25%);
+  * a roofline-efficiency regression — any cell whose fresh
+    `roofline_efficiency` (measured throughput over the analytic ceiling,
+    see repro.core.tuning) falls below the baseline's by more than the
+    efficiency threshold (default 25%), or that LOSES the instrumentation
+    a baseline carries — efficiency drift catches hot-path degradation
+    that wall clock alone can hide when the cell's work changes;
   * any parity-metric drift — entries under "parity" must be EXACTLY equal
     (parity values are deterministic by construction: simulation counts
     under a fixed wave budget, scenario statuses, device counts — never
@@ -26,7 +32,7 @@ Usage (what the nightly job runs after the benchmark steps):
 
     # options
     --fresh-dir experiments/bench --baseline-dir experiments/bench/baselines
-    --threshold 0.25 --allow-missing
+    --threshold 0.25 --eff-threshold 0.25 --allow-missing
 
 Refreshing baselines is deliberate: re-run the benchmarks and copy the new
 artifacts over `experiments/bench/baselines/` in a reviewed commit — ideally
@@ -46,10 +52,13 @@ FRESH_DIR = REPO / "experiments" / "bench"
 BASELINE_DIR = FRESH_DIR / "baselines"
 SCHEMA = "bench-artifact/v1"
 DEFAULT_THRESHOLD = 0.25
+#: allowed fractional roofline_efficiency DROP before the gate trips
+DEFAULT_EFF_THRESHOLD = 0.25
 
 
 def compare_artifacts(name: str, baseline: dict, fresh: dict,
-                      threshold: float = DEFAULT_THRESHOLD):
+                      threshold: float = DEFAULT_THRESHOLD,
+                      eff_threshold: float = DEFAULT_EFF_THRESHOLD):
     """Pure comparison of one (baseline, fresh) artifact pair.
 
     Returns (problems, notes): `problems` are gate failures, `notes` are
@@ -74,14 +83,28 @@ def compare_artifacts(name: str, baseline: dict, fresh: dict,
             )
             continue
         b, f = base_cell.get("wall_s"), cell.get("wall_s")
-        if b is None or f is None or b <= 0:
-            continue
-        if f > b * (1.0 + threshold):
+        if b is not None and f is not None and b > 0 and f > b * (1.0 + threshold):
             problems.append(
                 f"{name}: wall-clock regression in {key!r}: "
                 f"{f:.4g}s vs baseline {b:.4g}s "
                 f"(+{(f / b - 1) * 100:.0f}% > {threshold * 100:.0f}%)"
             )
+        be = base_cell.get("roofline_efficiency")
+        fe = cell.get("roofline_efficiency")
+        if be is not None and be > 0:
+            if fe is None:
+                problems.append(
+                    f"{name}: cell {key!r} lost its roofline_efficiency "
+                    "instrumentation (baselined but absent in the fresh "
+                    "artifact)"
+                )
+            elif fe < be * (1.0 - eff_threshold):
+                problems.append(
+                    f"{name}: roofline-efficiency regression in {key!r}: "
+                    f"{fe:.3g} vs baseline {be:.3g} "
+                    f"(-{(1 - fe / be) * 100:.0f}% > "
+                    f"{eff_threshold * 100:.0f}%)"
+                )
     for key in sorted(set(fresh_cells) - set(base_cells)):
         notes.append(f"{name}: new cell {key!r} (no baseline yet)")
 
@@ -105,7 +128,8 @@ def compare_artifacts(name: str, baseline: dict, fresh: dict,
 
 def evaluate_dirs(baseline_dir: Path, fresh_dir: Path,
                   threshold: float = DEFAULT_THRESHOLD,
-                  allow_missing: bool = False):
+                  allow_missing: bool = False,
+                  eff_threshold: float = DEFAULT_EFF_THRESHOLD):
     """Gate every baselined artifact against its fresh counterpart.
 
     Returns (problems, notes); the gate passes iff `problems` is empty.
@@ -147,7 +171,8 @@ def evaluate_dirs(baseline_dir: Path, fresh_dir: Path,
             )
             continue
         gated += 1
-        p, n = compare_artifacts(name, baseline, fresh, threshold)
+        p, n = compare_artifacts(name, baseline, fresh, threshold,
+                                 eff_threshold)
         if allow_missing:
             kept = [x for x in p if "missing from the fresh run" not in x]
             n = n + [x + " [allowed]" for x in p if x not in kept]
@@ -179,6 +204,10 @@ def main(argv=None) -> int:
     ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
                     help="allowed fractional wall-clock slowdown (0.25 = "
                          "fail beyond +25%%)")
+    ap.add_argument("--eff-threshold", type=float,
+                    default=DEFAULT_EFF_THRESHOLD,
+                    help="allowed fractional roofline-efficiency drop "
+                         "(0.25 = fail beyond -25%%)")
     ap.add_argument("--allow-missing", action="store_true",
                     help="downgrade missing fresh artifacts/cells to "
                          "warnings (partial local runs)")
@@ -186,6 +215,7 @@ def main(argv=None) -> int:
     problems, notes = evaluate_dirs(
         Path(args.baseline_dir), Path(args.fresh_dir),
         threshold=args.threshold, allow_missing=args.allow_missing,
+        eff_threshold=args.eff_threshold,
     )
     for n in notes:
         print(f"[bench-gate] note: {n}")
@@ -195,7 +225,9 @@ def main(argv=None) -> int:
             print(f"  {p}")
         return 1
     print("[bench-gate] OK: all gated artifacts within "
-          f"+{args.threshold * 100:.0f}% wall clock, parity exact")
+          f"+{args.threshold * 100:.0f}% wall clock, "
+          f"-{args.eff_threshold * 100:.0f}% roofline efficiency, "
+          "parity exact")
     return 0
 
 

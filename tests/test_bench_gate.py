@@ -19,13 +19,14 @@ from check_bench_regression import (  # noqa: E402
 )
 
 
-def _artifact(wall=1.0, sims=100):
+def _artifact(wall=1.0, sims=100, eff=0.5):
     return {
         "benchmark": "demo",
         "schema": SCHEMA,
         "meta": {},
         "cells": {
-            "siard/xla_fused/n1": {"wall_s": wall, "sims_per_s": sims / wall},
+            "siard/xla_fused/n1": {"wall_s": wall, "sims_per_s": sims / wall,
+                                   "roofline_efficiency": eff},
             "siard/xla_fused/n2": {"wall_s": wall * 2},
         },
         "parity": {"siard/xla_fused/n1": {"simulations": sims, "devices": 1}},
@@ -65,6 +66,47 @@ def test_slowdown_below_threshold_passes(tmp_path):
     # a tighter threshold flips it
     problems, _ = evaluate_dirs(bdir, fdir, threshold=0.1)
     assert problems and "wall-clock regression" in problems[0]
+
+
+def test_synthetic_efficiency_only_regression_trips(tmp_path):
+    """The ISSUE 6 acceptance criterion: a cell whose wall clock is FINE but
+    whose roofline_efficiency collapsed (same time, much less useful work —
+    e.g. the cell silently simulates fewer days) must fail the gate."""
+    fresh = _artifact(wall=1.0, eff=0.1)  # wall unchanged, eff 0.5 -> 0.1
+    bdir, fdir = _dirs(tmp_path, _artifact(wall=1.0, eff=0.5), fresh)
+    problems, _ = evaluate_dirs(bdir, fdir)
+    assert len(problems) == 1
+    assert "roofline-efficiency regression" in problems[0]
+    # and through the CLI entry point
+    assert main(["--baseline-dir", str(bdir), "--fresh-dir", str(fdir)]) == 1
+
+
+def test_efficiency_drop_below_threshold_passes(tmp_path):
+    bdir, fdir = _dirs(tmp_path, _artifact(eff=0.5), _artifact(eff=0.45))
+    problems, _ = evaluate_dirs(bdir, fdir)
+    assert problems == []
+    # a tighter efficiency threshold flips it; efficiency GAINS never trip
+    problems, _ = evaluate_dirs(bdir, fdir, eff_threshold=0.05)
+    assert problems and "roofline-efficiency regression" in problems[0]
+    up = tmp_path / "up"
+    up.mkdir()
+    problems, _ = evaluate_dirs(*_dirs(up, _artifact(eff=0.5),
+                                       _artifact(eff=0.9)))
+    assert problems == []
+
+
+def test_lost_efficiency_instrumentation_trips(tmp_path):
+    """A baselined cell that stops reporting roofline_efficiency is a gate
+    failure even with --allow-missing: losing the instrumentation would
+    silently un-gate the efficiency dimension."""
+    fresh = _artifact()
+    del fresh["cells"]["siard/xla_fused/n1"]["roofline_efficiency"]
+    bdir, fdir = _dirs(tmp_path, _artifact(), fresh)
+    problems, _ = evaluate_dirs(bdir, fdir)
+    assert len(problems) == 1
+    assert "lost its roofline_efficiency" in problems[0]
+    problems, _ = evaluate_dirs(bdir, fdir, allow_missing=True)
+    assert len(problems) == 1 and "lost its roofline_efficiency" in problems[0]
 
 
 def test_parity_drift_trips(tmp_path):

@@ -1,9 +1,16 @@
-"""Pallas kernel vs pure-jnp oracle: shape/tile/horizon sweeps (interpret mode).
+"""Pallas kernel vs pure-jnp oracle: shape/tile/horizon sweeps.
 
 Per the kernel contract every sweep asserts allclose against ref.py. The RNG
 primitive is shared (kernels/rng.py) so agreement checks the kernel's
 tiling/loop/layout logic; the dynamics are independently implemented.
+
+By default the kernel runs in interpret mode (CPU correctness). Set
+REPRO_KERNEL_COMPILED=1 to run the SAME parity sweeps through the compiled
+lowering (Triton on GPU, Mosaic on TPU) — the workflow_dispatch GPU leg in
+CI does exactly that; interpret=None auto-selects compiled on accelerators.
 """
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -15,6 +22,8 @@ from repro.kernels import ops, ref
 
 POP = 1e6
 KW = dict(population=POP, a0=100.0, r0=5.0, d0=1.0)
+#: interpret=INTERPRET on CPU; None (auto -> compiled) under REPRO_KERNEL_COMPILED
+INTERPRET = None if os.environ.get("REPRO_KERNEL_COMPILED") else True
 
 
 def _observed(days: int, seed: int = 0) -> jnp.ndarray:
@@ -30,22 +39,63 @@ def _theta(batch: int, seed: int = 0) -> jnp.ndarray:
     return paper_prior().sample(jax.random.PRNGKey(seed), (batch,))
 
 
-@pytest.mark.parametrize("batch", [64, 128, 300, 512, 1000])
-@pytest.mark.parametrize("tile", [128, 256])
+@pytest.mark.parametrize(
+    "batch,tile",
+    [
+        # tile=None auto-resolves (and may pad odd batches, the legacy
+        # behavior); explicit tiles must divide the batch exactly
+        (64, None), (300, None), (1000, None),
+        (128, 128), (512, 128), (512, 256), (1024, 256),
+    ],
+)
 def test_kernel_matches_ref_batch_tile_sweep(batch, tile):
     obs = _observed(10)
     th = _theta(batch, seed=batch)
     seed = jnp.uint32(77)
-    d_k = ops.abc_sim_distance(th, seed, obs, tile=tile, interpret=True, **KW)
+    d_k = ops.abc_sim_distance(th, seed, obs, tile=tile, interpret=INTERPRET,
+                               **KW)
     d_r = ref.abc_sim_distance_ref(th, seed, obs, **KW)
     np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_r), rtol=2e-6, atol=1e-3)
+
+
+def test_resolve_tile_auto_matches_legacy_clamp():
+    """tile=None keeps the exact legacy auto numerics (min(1024, pow2(B)))."""
+    assert ops.resolve_tile(64) == 128
+    assert ops.resolve_tile(300) == 512
+    assert ops.resolve_tile(1000) == 1024
+    assert ops.resolve_tile(8192) == 1024
+    assert ops.resolve_tile(100_000) == 1024
+
+
+def test_resolve_tile_explicit_validation():
+    """Explicit tiles are taken literally and bad ones fail LOUDLY — the old
+    silent clamp/over-pad at ops.py is gone."""
+    assert ops.resolve_tile(8192, 2048) == 2048  # no clamp to 1024 any more
+    with pytest.raises(ValueError, match="does not divide batch"):
+        ops.resolve_tile(300, 128)
+    with pytest.raises(ValueError, match="does not divide batch"):
+        ops.resolve_tile(1000, 256)
+    with pytest.raises(ValueError, match="multiple of 128"):
+        ops.resolve_tile(512, 100)
+    with pytest.raises(ValueError, match="multiple of 128"):
+        ops.resolve_tile(512, 64)
+    with pytest.raises(ValueError, match="batch must be positive"):
+        ops.resolve_tile(0, 128)
+
+
+def test_incompatible_tile_errors_loudly_end_to_end():
+    obs = _observed(5)
+    th = _theta(300)
+    with pytest.raises(ValueError, match="does not divide batch"):
+        ops.abc_sim_distance(th, jnp.uint32(1), obs, tile=128,
+                             interpret=INTERPRET, **KW)
 
 
 @pytest.mark.parametrize("days", [1, 7, 49])
 def test_kernel_matches_ref_horizon_sweep(days):
     obs = _observed(days)
     th = _theta(256, seed=days)
-    d_k = ops.abc_sim_distance(th, jnp.uint32(5), obs, tile=128, interpret=True, **KW)
+    d_k = ops.abc_sim_distance(th, jnp.uint32(5), obs, tile=128, interpret=INTERPRET, **KW)
     d_r = ref.abc_sim_distance_ref(th, jnp.uint32(5), obs, **KW)
     np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_r), rtol=2e-6, atol=1e-3)
 
@@ -63,7 +113,7 @@ def test_kernel_matches_ref_population_sweep(pop, a0, r0, d0):
     obs = em.simulate_observed(th_true, jax.random.PRNGKey(1), cfg)[0]
     th = _theta(256, seed=9)
     kw = dict(population=pop, a0=a0, r0=r0, d0=d0)
-    d_k = ops.abc_sim_distance(th, jnp.uint32(3), obs, tile=128, interpret=True, **kw)
+    d_k = ops.abc_sim_distance(th, jnp.uint32(3), obs, tile=128, interpret=INTERPRET, **kw)
     d_r = ref.abc_sim_distance_ref(th, jnp.uint32(3), obs, **kw)
     np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_r), rtol=1e-5, atol=1.0)
 
@@ -72,9 +122,9 @@ def test_kernel_seed_sensitivity():
     """Different seeds give different (but finite) distances; same seed exact."""
     obs = _observed(8)
     th = _theta(128)
-    a = ops.abc_sim_distance(th, jnp.uint32(1), obs, tile=128, interpret=True, **KW)
-    b = ops.abc_sim_distance(th, jnp.uint32(1), obs, tile=128, interpret=True, **KW)
-    c = ops.abc_sim_distance(th, jnp.uint32(2), obs, tile=128, interpret=True, **KW)
+    a = ops.abc_sim_distance(th, jnp.uint32(1), obs, tile=128, interpret=INTERPRET, **KW)
+    b = ops.abc_sim_distance(th, jnp.uint32(1), obs, tile=128, interpret=INTERPRET, **KW)
+    c = ops.abc_sim_distance(th, jnp.uint32(2), obs, tile=128, interpret=INTERPRET, **KW)
     assert bool(jnp.all(a == b))
     assert not bool(jnp.all(a == c))
     assert bool(jnp.all(jnp.isfinite(a)))
@@ -84,8 +134,8 @@ def test_kernel_tile_invariance():
     """Distances must not depend on the tiling (pure layout parameter)."""
     obs = _observed(10)
     th = _theta(512, seed=2)
-    d1 = ops.abc_sim_distance(th, jnp.uint32(9), obs, tile=128, interpret=True, **KW)
-    d2 = ops.abc_sim_distance(th, jnp.uint32(9), obs, tile=512, interpret=True, **KW)
+    d1 = ops.abc_sim_distance(th, jnp.uint32(9), obs, tile=128, interpret=INTERPRET, **KW)
+    d2 = ops.abc_sim_distance(th, jnp.uint32(9), obs, tile=512, interpret=INTERPRET, **KW)
     np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-6)
 
 
@@ -100,7 +150,7 @@ def test_kernel_statistics_match_threefry_reference():
     cfg = em.EpiModelConfig(population=POP, num_days=days, a0=100.0, r0=5.0, d0=1.0)
     th = _theta(2048, seed=4)
     d_hash = np.asarray(
-        ops.abc_sim_distance(th, jnp.uint32(11), obs, tile=512, interpret=True, **KW)
+        ops.abc_sim_distance(th, jnp.uint32(11), obs, tile=512, interpret=INTERPRET, **KW)
     )
     sim = em.simulate_observed(th, jax.random.PRNGKey(12), cfg)
     d_tf = np.asarray(euclidean_distance(sim, obs))

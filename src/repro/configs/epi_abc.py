@@ -65,6 +65,31 @@ def cpu_demo() -> ABCWorkload:
     )
 
 
+def serving_demo(store_dir: str | None = None, data_dir: str | None = None):
+    """Smoke-sized `serve --epi` config: fast SMC fits, small forecast
+    batches. The shape of a production deployment (bigger fit budget, a
+    persistent store refreshed by the abc_serve daemon) with CI-container
+    costs. Returns a `repro.core.serving.ServeConfig`."""
+    from repro.core.serving import ServeConfig
+    from repro.core.smc import SMCConfig
+
+    return ServeConfig(
+        slots=4,
+        forecast_particles=64,
+        fit=SMCConfig(
+            n_particles=64,
+            batch_size=1024,
+            n_rounds=2,
+            quantile=0.5,
+            num_days=15,
+            backend="xla_fused",
+            model="siard",
+        ),
+        data_dir=data_dir,
+        store_dir=store_dir,
+    )
+
+
 def cross_model_sweep(
     batch_size: int = 8192,
     num_days: int = 20,

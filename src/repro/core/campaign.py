@@ -239,6 +239,20 @@ def _jsonable(obj):
     return obj
 
 
+def schedule_shape_key(schedule: Optional[InterventionSchedule]) -> tuple:
+    """The compile-relevant identity of an intervention schedule.
+
+    () for None/empty, else (n_windows, tv_params): breakpoint DAYS and
+    scale VALUES are runtime data (traced scalars / theta columns), so two
+    schedules sharing this key share one compiled simulator. Used by both
+    the campaign _ShapeCache and the serving layer's forecast kernel cache
+    (repro.core.serving) so their reuse semantics can never drift apart.
+    """
+    if schedule is None or schedule.is_empty:
+        return ()
+    return (schedule.n_windows, schedule.tv_params)
+
+
 @dataclasses.dataclass
 class CampaignReport:
     """Aggregated campaign outcome; serialized to one JSON artifact."""
@@ -322,8 +336,7 @@ class _ShapeCache:
         # only the schedule's SHAPE is compile-relevant: breakpoint days and
         # scale bounds are traced, so a lockdown-day x scale sweep maps to
         # one cache entry
-        if sc.schedule is not None and not sc.schedule.is_empty:
-            key += (sc.schedule.n_windows, sc.schedule.tv_params)
+        key += schedule_shape_key(sc.schedule)
         # the summary spec is baked (static) into the simulator closure, so
         # each summary cell owns a wave-loop entry; inside the pallas entry
         # the kernel itself still compiles once across summary cells because

@@ -3,6 +3,9 @@
 from __future__ import annotations
 
 import dataclasses
+import os
+import tempfile
+import zipfile
 from typing import Dict, Optional, Sequence
 
 import numpy as np
@@ -20,6 +23,9 @@ class Posterior:
     runs: int = 0
     simulations: int = 0
     wall_time_s: float = 0.0
+    #: optional importance weights [N] (SMC populations); persisted so a
+    #: stored posterior can warm-start a re-fit with its weighted population
+    weights: Optional[np.ndarray] = None
 
     def __post_init__(self):
         self.theta = np.asarray(self.theta, np.float32).reshape(
@@ -27,6 +33,9 @@ class Posterior:
         )
         self.distances = np.asarray(self.distances, np.float32).reshape(-1)
         assert self.theta.shape[0] == self.distances.shape[0]
+        if self.weights is not None:
+            self.weights = np.asarray(self.weights, np.float32).reshape(-1)
+            assert self.weights.shape[0] == self.theta.shape[0]
 
     def __len__(self) -> int:
         return int(self.theta.shape[0])
@@ -63,7 +72,8 @@ class Posterior:
         """k lowest-distance samples."""
         idx = np.argsort(self.distances)[:k]
         return dataclasses.replace(
-            self, theta=self.theta[idx], distances=self.distances[idx]
+            self, theta=self.theta[idx], distances=self.distances[idx],
+            weights=None if self.weights is None else self.weights[idx],
         )
 
     def summary_table(self) -> str:
@@ -80,8 +90,13 @@ class Posterior:
         return "\n".join(rows)
 
     def save(self, path: str) -> None:
-        np.savez(
-            path,
+        """Atomic save (the ABCState.save pattern): write to a temp file in
+        the target directory, fsync, then rename over `path`. A crash
+        mid-write can never leave a truncated file — essential once
+        posteriors back a serving cache. Writing through a file object also
+        keeps the EXACT path given (bare np.savez silently appends ".npz"
+        when the suffix is missing, so load(path) would miss save(path))."""
+        arrays = dict(
             theta=self.theta,
             distances=self.distances,
             tolerance=self.tolerance,
@@ -90,16 +105,69 @@ class Posterior:
             simulations=self.simulations,
             wall_time_s=self.wall_time_s,
         )
+        if self.weights is not None:
+            arrays["weights"] = self.weights
+        directory = os.path.dirname(os.path.abspath(path)) or "."
+        fd, tmp = tempfile.mkstemp(
+            prefix=os.path.basename(path) + ".", suffix=".tmp", dir=directory
+        )
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez(f, **arrays)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)  # atomic commit
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    _REQUIRED_KEYS = (
+        "theta", "distances", "tolerance", "param_names", "runs",
+        "simulations", "wall_time_s",
+    )
 
     @staticmethod
     def load(path: str) -> "Posterior":
-        z = np.load(path, allow_pickle=False)
-        return Posterior(
-            theta=z["theta"],
-            distances=z["distances"],
-            tolerance=float(z["tolerance"]),
-            param_names=[str(s) for s in z["param_names"]],
-            runs=int(z["runs"]),
-            simulations=int(z["simulations"]),
-            wall_time_s=float(z["wall_time_s"]),
-        )
+        """Load a saved posterior from the exact path given to save().
+
+        Corrupt or truncated files raise ValueError with a remediation hint
+        instead of a bare zipfile/KeyError deep inside a serving loop; a
+        missing file is NOT corruption — FileNotFoundError propagates."""
+        try:
+            z = np.load(path, allow_pickle=False)
+            missing = [k for k in Posterior._REQUIRED_KEYS if k not in z.files]
+            if missing:
+                raise ValueError(f"missing arrays {missing}")
+            theta = np.asarray(z["theta"], np.float32)
+            distances = np.asarray(z["distances"], np.float32)
+            names = [str(s) for s in z["param_names"]]
+            if theta.ndim != 2 or distances.shape != (theta.shape[0],):
+                raise ValueError(
+                    f"inconsistent shapes theta={theta.shape} "
+                    f"distances={distances.shape}"
+                )
+            if len(names) != theta.shape[1]:
+                raise ValueError(
+                    f"{len(names)} param names for theta width {theta.shape[1]}"
+                )
+            return Posterior(
+                theta=theta,
+                distances=distances,
+                tolerance=float(z["tolerance"]),
+                param_names=names,
+                runs=int(z["runs"]),
+                simulations=int(z["simulations"]),
+                wall_time_s=float(z["wall_time_s"]),
+                weights=np.asarray(z["weights"], np.float32)
+                if "weights" in z.files
+                else None,
+            )
+        except FileNotFoundError:
+            raise
+        except (zipfile.BadZipFile, OSError, KeyError, ValueError) as e:
+            raise ValueError(
+                f"corrupt or incomplete posterior file {path!r} ({e}); it was "
+                "probably truncated by an interrupted save — delete it and "
+                "re-fit (or re-run the abc_serve daemon)"
+            ) from e

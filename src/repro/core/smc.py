@@ -56,10 +56,40 @@ class SMCConfig:
     #: but both are seeded and deterministic; statistical behaviour is pinned
     #: by tests/test_posterior_recovery.py.
     wave_loop: str = "host"
+    #: optional warm start: seed round 0 from this particle set [N, p]
+    #: (e.g. yesterday's cached posterior) instead of a fresh prior wave.
+    #: The set is resampled by `initial_weights` (uniform when None) to
+    #: exactly n_particles and re-simulated against the CURRENT dataset,
+    #: so round 0 costs n_particles simulations instead of batch_size —
+    #: the serving layer's daily re-fit path (repro.core.serving).
+    initial_particles: Optional[object] = None
+    #: importance weights of `initial_particles` (None = uniform)
+    initial_weights: Optional[object] = None
 
     def __post_init__(self):
         if self.wave_loop not in ("host", "device"):
             raise ValueError(f"unknown wave_loop {self.wave_loop!r}")
+        if self.initial_weights is not None and self.initial_particles is None:
+            raise ValueError("initial_weights given without initial_particles")
+        if self.initial_particles is not None:
+            init = np.asarray(self.initial_particles, np.float32)
+            if init.ndim != 2 or init.shape[0] == 0:
+                raise ValueError(
+                    f"initial_particles must be a non-empty [N, p] array, "
+                    f"got shape {init.shape}"
+                )
+            if self.initial_weights is not None:
+                w = np.asarray(self.initial_weights, np.float64)
+                if w.shape != (init.shape[0],):
+                    raise ValueError(
+                        f"initial_weights shape {w.shape} does not match "
+                        f"{init.shape[0]} initial particles"
+                    )
+                if (w < 0).any() or not np.isfinite(w).all() or w.sum() <= 0:
+                    raise ValueError(
+                        "initial_weights must be finite, non-negative and "
+                        "sum to a positive value"
+                    )
 
 
 def _weighted_var(theta: np.ndarray, w: np.ndarray) -> np.ndarray:
@@ -247,17 +277,53 @@ def run_smc_abc(
     free = np.asarray(prior.free_dims(), bool)
     t0 = time.time()
 
-    # --- round 0: prior wave, keep the best n_particles --------------------
+    # --- round 0 -----------------------------------------------------------
     k0, key = jax.random.split(key)
-    theta0 = prior.sample(k0, (cfg.batch_size,))
-    d0 = np.asarray(sim_jit(theta0, jax.random.fold_in(key, 0)))
-    d0 = np.where(np.isnan(d0), np.inf, d0)
-    order = np.argsort(d0)[: cfg.n_particles]
-    particles = np.asarray(theta0)[order]
-    dists = d0[order]
+    if cfg.initial_particles is not None:
+        # warm start: resample the provided population by weight to exactly
+        # n_particles and re-simulate it against the CURRENT dataset (the
+        # data may have changed since the population was fitted) — round 0
+        # costs n_particles simulations instead of a full prior wave
+        init = np.asarray(cfg.initial_particles, np.float32)
+        if init.shape[1] != lo.shape[0]:
+            raise ValueError(
+                f"initial_particles have width {init.shape[1]}; model "
+                f"{cfg.model!r} with this schedule expects {lo.shape[0]}"
+            )
+        w0 = (
+            np.asarray(cfg.initial_weights, np.float64)
+            if cfg.initial_weights is not None
+            else np.full(init.shape[0], 1.0)
+        )
+        w0 = w0 / w0.sum()
+        # particles from a stale fit can sit marginally outside a changed
+        # prior box; clip so their prior density (and kernel weights) stay
+        # finite rather than silently zeroing the whole population
+        init = np.clip(init, lo, hi)
+        idx = np.asarray(
+            jax.random.choice(
+                k0, init.shape[0], shape=(cfg.n_particles,), replace=True,
+                p=jnp.asarray(w0, jnp.float32),
+            )
+        )
+        particles = init[idx]
+        d0 = np.asarray(
+            sim_jit(jnp.asarray(particles), jax.random.fold_in(key, 0))
+        )
+        dists = np.where(np.isnan(d0), np.inf, d0)
+        sims = cfg.n_particles
+    else:
+        # cold start: prior wave, keep the best n_particles
+        theta0 = prior.sample(k0, (cfg.batch_size,))
+        d0 = np.asarray(sim_jit(theta0, jax.random.fold_in(key, 0)))
+        d0 = np.where(np.isnan(d0), np.inf, d0)
+        order = np.argsort(d0)[: cfg.n_particles]
+        particles = np.asarray(theta0)[order]
+        dists = d0[order]
+        sims = cfg.batch_size
     weights = np.full(cfg.n_particles, 1.0 / cfg.n_particles)
-    eps = float(np.max(dists))
-    sims = cfg.batch_size
+    finite = dists[np.isfinite(dists)]
+    eps = float(np.max(finite)) if finite.size else float("inf")
 
     rng = np.random.default_rng(np.asarray(jax.random.key_data(key))[-1])
     for rnd in range(1, cfg.n_rounds + 1):
@@ -352,7 +418,7 @@ def run_smc_abc(
                 f"ess={1.0 / np.sum(weights ** 2):.1f}"
             )
 
-    post = Posterior(
+    return Posterior(
         theta=particles,
         distances=dists,
         tolerance=eps,
@@ -360,6 +426,5 @@ def run_smc_abc(
         runs=cfg.n_rounds,
         simulations=sims,
         wall_time_s=time.time() - t0,
+        weights=weights,
     )
-    post.weights = weights  # type: ignore[attr-defined]
-    return post

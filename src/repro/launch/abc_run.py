@@ -23,11 +23,7 @@ model, with multi-device sharding, checkpoint/resume and backend selection.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
-
-import jax
-import numpy as np
 
 from repro.core.abc import ABCConfig, ABCState, run_abc
 from repro.core.distributed import make_runner, make_wave_runner
@@ -113,73 +109,27 @@ def posterior_forecast(
     result is a strict-JSON-serializable dict: per observed channel, the
     mean and the requested quantiles over particles for every day of
     `cfg.num_days + horizon`.
-    """
-    from repro.core.campaign import _jsonable
-    from repro.epi import engine
-    from repro.epi.spec import EpiModelConfig
 
-    spec = get_model(cfg.model)
-    counterfactual = schedule is not None
-    fc_sched = schedule if counterfactual else cfg.schedule
-    theta = np.asarray(theta, np.float32)
-    if theta.shape[0] == 0:
-        raise ValueError("no accepted samples to forecast from")
-    if theta.shape[0] > max_particles:
-        theta = theta[:max_particles]
-    if counterfactual:
-        # replace the fitted scale columns with the counterfactual's pinned
-        # scales; the base parameters stay the posterior's
-        base = theta[:, : spec.n_params]
-        if fc_sched is None or fc_sched.is_empty:
-            theta = base
-        else:
-            scales = np.asarray(
-                [s for row in fc_sched.fixed_scales() for s in row], np.float32
-            )
-            theta = np.concatenate(
-                [base, np.broadcast_to(scales, (base.shape[0], scales.size))],
-                axis=1,
-            )
-    total_days = cfg.num_days + int(horizon)
-    mcfg = EpiModelConfig(
-        population=dataset.population,
-        num_days=total_days,
-        a0=dataset.a0,
-        r0=dataset.r0,
-        d0=dataset.d0,
+    Sets larger than `max_particles` are subsampled with a seeded
+    permutation (NOT truncated — topk accepted sets are distance-ordered,
+    so taking the first rows would bias the bands toward the lowest-
+    distance particles). Delegates to `repro.core.serving.forecast_bands`,
+    the same compiled path the `serve --epi` batch server answers from.
+    """
+    from repro.core.serving import forecast_bands
+
+    return forecast_bands(
+        theta,
+        dataset,
+        model=cfg.model,
+        fit_days=cfg.num_days,
+        horizon=horizon,
+        fit_schedule=cfg.schedule,
+        schedule=schedule,
+        key=key,
+        quantiles=quantiles,
+        max_particles=max_particles,
     )
-    if isinstance(key, int):
-        key = jax.random.PRNGKey(key)
-    traj = np.asarray(
-        engine.simulate_observed(spec, theta, key, mcfg, fc_sched)
-    )  # [N, n_obs, T]
-    channels = {}
-    for m, name in enumerate(spec.observed):
-        ch = traj[:, m, :]  # [N, T]
-        bands = {"mean": ch.mean(axis=0).tolist()}
-        for q in quantiles:
-            bands[f"q{int(round(q * 100)):02d}"] = np.quantile(
-                ch, q, axis=0
-            ).tolist()
-        channels[name] = bands
-    payload = {
-        "model": spec.name,
-        "dataset": dataset.name,
-        "fit_days": cfg.num_days,
-        "horizon_days": int(horizon),
-        "total_days": total_days,
-        "n_particles": int(theta.shape[0]),
-        "schedule": None
-        if fc_sched is None or fc_sched.is_empty
-        else dataclasses.asdict(fc_sched),
-        "quantiles": list(quantiles),
-        "channels": channels,
-        "observed": {
-            name: dataset.observed[m, : cfg.num_days].tolist()
-            for m, name in enumerate(spec.observed)
-        },
-    }
-    return _jsonable(payload)
 
 
 def run_scaling_cli(args):

@@ -185,17 +185,30 @@ def _kv_quant_on(cfg: DecoderConfig) -> bool:
     return cfg.kv_quant or os.environ.get("REPRO_KV_QUANT", "0") == "1"
 
 
+def _write_token(entry: jax.Array, new: jax.Array, pos_idx) -> jax.Array:
+    """Write one decode token [B, 1, ...] into a cache array [B, T, ...] at
+    `pos_idx` — a scalar (all rows at one position) or a [B] vector
+    (per-slot positions: each batch row writes its OWN cache lane at its
+    own position; a continuous-batching scheduler admits requests
+    mid-stream, so slots are never in lockstep)."""
+    new = new.astype(entry.dtype)
+    if pos_idx.ndim == 1:
+        b = entry.shape[0]
+        return entry.at[jnp.arange(b), pos_idx].set(new[:, 0])
+    return jax.lax.dynamic_update_slice(
+        entry, new, (0, pos_idx) + (0,) * (entry.ndim - 2)
+    )
+
+
 def _cache_write_read(entry, new: jax.Array, pos_idx):
     """Write one token into a cache entry (raw bf16 array OR int8+scale dict)
     and return (updated entry, dequantized full view for attention)."""
     if isinstance(entry, dict):  # quantized: {"q": int8, "s": f32}
         q, s = cm.kv_quantize(new)
-        eq = jax.lax.dynamic_update_slice(entry["q"], q, (0, pos_idx, 0, 0))
-        es = jax.lax.dynamic_update_slice(
-            entry["s"], s.astype(entry["s"].dtype), (0, pos_idx, 0, 0)
-        )
+        eq = _write_token(entry["q"], q, pos_idx)
+        es = _write_token(entry["s"], s, pos_idx)
         return {"q": eq, "s": es}, cm.kv_dequantize(eq, es)
-    e = jax.lax.dynamic_update_slice(entry, new.astype(entry.dtype), (0, pos_idx, 0, 0))
+    e = _write_token(entry, new, pos_idx)
     return e, e
 
 
@@ -213,14 +226,17 @@ def _attn(x, p, cfg: DecoderConfig, kind: str, positions, impl, cache=None, pos=
     new_cache = None
     if cache is not None:
         kc, vc = cache  # [B, T, K, D] (raw) or {"q","s"} (int8 + scale)
-        pos_idx = positions[0, 0] if positions.ndim == 2 else positions[0]
+        # scalar pos: all slots write one position; [B] pos: per-slot writes
+        pos_idx = jnp.asarray(
+            pos if pos is not None else positions[..., 0], jnp.int32
+        )
         kc, k_view = _cache_write_read(kc, k, pos_idx)
         vc, v_view = _cache_write_read(vc, v, pos_idx)
         out = cm.decode_attention(
             q,
             k_view,
             v_view,
-            valid_len=jnp.full((b,), pos_idx + 1, jnp.int32),
+            valid_len=jnp.broadcast_to(pos_idx + 1, (b,)).astype(jnp.int32),
             window=window,
             attn_softcap=cfg.attn_softcap,
             scale=cfg.query_scale,
@@ -374,7 +390,9 @@ def cache_logical(cfg: DecoderConfig):
 
 def decode_step(params, cache, tokens: jax.Array, pos: jax.Array, cfg: DecoderConfig,
                 *, embeds=None):
-    """One-token decode. tokens [B, 1], pos [] int32 (write position).
+    """One-token decode. tokens [B, 1]; pos [] int32 (lockstep write
+    position) or [B] int32 (per-slot positions for continuous batching —
+    each slot writes/attends its own cache prefix).
 
     Returns (logits [B, 1, V], new_cache).
     """
@@ -383,7 +401,10 @@ def decode_step(params, cache, tokens: jax.Array, pos: jax.Array, cfg: DecoderCo
         if embeds is None
         else embeds.astype(cm.DEFAULT_DTYPE)
     )
-    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = jnp.broadcast_to(
+        pos.reshape(-1, 1) if pos.ndim else pos, (x.shape[0], 1)
+    )
     ffn_kind = _ffn_kind(cfg)
     new_cache = {}
 

@@ -150,12 +150,18 @@ def _shared_block(x, x0, p, cfg: HybridConfig, positions, impl, cache=None, pos=
     k = cm.rope(k, positions, cfg.rope_theta)
     new_cache = None
     if cache is not None:
+        from repro.models.decoder import _write_token
+
         kc, vc = cache
-        pos_idx = positions[0, 0]
-        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, pos_idx, 0, 0))
-        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, pos_idx, 0, 0))
+        # scalar pos: all slots write one position; [B] pos: per-slot writes
+        pos_idx = jnp.asarray(
+            pos if pos is not None else positions[..., 0], jnp.int32
+        )
+        kc = _write_token(kc, k, pos_idx)
+        vc = _write_token(vc, v, pos_idx)
         a = cm.decode_attention(
-            q, kc, vc, valid_len=jnp.full((b,), pos_idx + 1, jnp.int32)
+            q, kc, vc,
+            valid_len=jnp.broadcast_to(pos_idx + 1, (b,)).astype(jnp.int32),
         )
         new_cache = (kc, vc)
     else:
@@ -236,7 +242,10 @@ def cache_logical(cfg: HybridConfig):
 def decode_step(params, cache, tokens, pos, cfg: HybridConfig):
     x0 = cm.embed(tokens, params["embed"])
     x = x0
-    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = jnp.broadcast_to(
+        pos.reshape(-1, 1) if pos.ndim else pos, (x.shape[0], 1)
+    )
     mcfg = cfg.mamba
 
     def super_body(x, inp):

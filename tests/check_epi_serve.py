@@ -1,0 +1,119 @@
+"""CI tier-2 smoke: end-to-end `serve --epi` against a synthetic dataset.
+
+Standalone (no pytest): builds a toy dataset file, pre-fits its posterior
+with one `abc_serve --once` sweep, then answers a mixed batch of 8
+forecast + counterfactual queries with `serve --epi` and asserts the
+responses are well-formed STRICT-JSON credible bands (no NaN/Infinity
+tokens), answered from the store (zero fits on the query path) in at most
+2 batched compiled calls.
+
+    PYTHONPATH=src python tests/check_epi_serve.py
+"""
+
+import json
+import os
+import sys
+import tempfile
+
+import numpy as np
+
+FIT_DAYS = 8
+HORIZON = 6
+FIT_ARGS = ["--days", str(FIT_DAYS), "--fit-particles", "16",
+            "--fit-batch", "256", "--fit-rounds", "1"]
+
+
+def build_dataset(path: str) -> None:
+    from repro.core.serving import save_dataset_file
+    from repro.epi.data import synthetic_dataset
+
+    ds = synthetic_dataset(
+        theta=(0.5, 0.2, 1.0), population=1e6, num_days=12, a0=100.0,
+        seed=11, name="toy", model="sir",
+    )
+    save_dataset_file(path, ds)
+
+
+def build_queries(path: str) -> int:
+    queries = [
+        {"dataset": "toy", "model": "sir", "horizon": HORIZON, "seed": s}
+        for s in range(4)
+    ] + [
+        {"dataset": "toy", "model": "sir", "horizon": HORIZON, "seed": s,
+         "schedule": "beta@4=0.5"}
+        for s in range(4)
+    ]
+    with open(path, "w") as f:
+        json.dump({"queries": queries}, f)
+    return len(queries)
+
+
+def strict_loads(text: str):
+    def refuse(token):
+        raise AssertionError(f"non-strict JSON token {token!r} in response")
+
+    return json.loads(text, parse_constant=refuse)
+
+
+def check_bands(resp: dict) -> None:
+    assert resp["total_days"] == FIT_DAYS + HORIZON, resp["total_days"]
+    assert resp["fit_days"] == FIT_DAYS
+    assert resp["channels"], "no channels in response"
+    for name, bands in resp["channels"].items():
+        for key in ("mean", "q05", "q25", "q50", "q75", "q95"):
+            assert key in bands, f"{name}: missing {key}"
+            vals = bands[key]
+            assert len(vals) == FIT_DAYS + HORIZON, (name, key, len(vals))
+            assert all(np.isfinite(vals)), (name, key)
+        lo, mid, hi = (np.asarray(bands[k]) for k in ("q05", "q50", "q95"))
+        assert (lo <= mid).all() and (mid <= hi).all(), (
+            f"{name}: quantile bands cross"
+        )
+    assert len(resp["observed"]) == len(resp["channels"])
+    for vals in resp["observed"].values():
+        assert len(vals) == FIT_DAYS
+
+
+def main() -> int:
+    from repro.launch import abc_serve, serve
+
+    with tempfile.TemporaryDirectory() as tmp:
+        data_dir = os.path.join(tmp, "data")
+        store = os.path.join(tmp, "store")
+        out = os.path.join(tmp, "responses.json")
+        os.makedirs(data_dir)
+        build_dataset(os.path.join(data_dir, "toy.json"))
+        n_queries = build_queries(os.path.join(tmp, "queries.json"))
+
+        # offline phase: the daemon fits the store entry (one cold fit) ...
+        refits = abc_serve.main(
+            ["--once", "--data-dir", data_dir, "--store", store,
+             "--models", "sir"] + FIT_ARGS
+        )
+        assert refits == 1, f"expected 1 cold fit, got {refits}"
+
+        # ... the query server answers WITHOUT fitting, <= 2 compiled calls
+        served = serve.main(
+            ["--epi", "--queries", os.path.join(tmp, "queries.json"),
+             "--data-dir", data_dir, "--store", store, "--out", out,
+             "--slots", "4", "--particles", "16"] + FIT_ARGS
+        )
+        assert served == n_queries, (served, n_queries)
+
+        with open(out) as f:
+            payload = strict_loads(f.read())
+        responses = payload["responses"]
+        stats = payload["stats"]
+        assert len(responses) == n_queries, len(responses)
+        for i, resp in enumerate(responses):
+            check_bands(resp)
+            assert resp["schedule"] is None if i < 4 else resp["schedule"], i
+        assert stats["fits"] == 0, f"query path fitted: {stats}"
+        assert stats["batched_calls"] <= 2, stats
+        print(f"[check_epi_serve] OK: {n_queries} queries, "
+              f"{stats['batched_calls']} batched calls, 0 query-path fits")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,111 @@
+"""Posterior persistence: atomic save, exact-path round-trip, loud
+corruption errors.
+
+Posteriors back the serving cache (repro.core.serving.PosteriorStore), so
+a crash mid-save must never leave a truncated file where a complete one
+was, and a corrupt file must fail loudly with a remediation hint instead
+of a bare zipfile traceback deep inside a serving loop.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.posterior import Posterior
+
+
+def _posterior(n=17, p=3, weights=True):
+    rng = np.random.default_rng(0)
+    return Posterior(
+        theta=rng.normal(size=(n, p)).astype(np.float32),
+        distances=rng.uniform(1, 2, size=n).astype(np.float32),
+        tolerance=1.5,
+        param_names=[f"p{j}" for j in range(p)],
+        runs=4,
+        simulations=1234,
+        wall_time_s=0.5,
+        weights=rng.uniform(size=n).astype(np.float32) if weights else None,
+    )
+
+
+def test_round_trip_exact_path(tmp_path):
+    """load(path) must round-trip save(path) — including a suffix-less
+    path, where bare np.savez would silently write `path + '.npz'`."""
+    post = _posterior()
+    for fname in ("post.npz", "post"):  # with and without the suffix
+        path = str(tmp_path / fname)
+        post.save(path)
+        assert os.path.exists(path), fname
+        back = Posterior.load(path)
+        np.testing.assert_array_equal(back.theta, post.theta)
+        np.testing.assert_array_equal(back.distances, post.distances)
+        np.testing.assert_array_equal(back.weights, post.weights)
+        assert back.tolerance == post.tolerance
+        assert list(back.param_names) == list(post.param_names)
+        assert (back.runs, back.simulations) == (post.runs, post.simulations)
+        assert back.wall_time_s == post.wall_time_s
+
+
+def test_round_trip_without_weights(tmp_path):
+    """Rejection-ABC posteriors have no weights; None survives the trip."""
+    post = _posterior(weights=False)
+    path = str(tmp_path / "post.npz")
+    post.save(path)
+    assert Posterior.load(path).weights is None
+
+
+def test_missing_file_is_not_corruption(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        Posterior.load(str(tmp_path / "nope.npz"))
+
+
+def test_corrupt_file_raises_loudly(tmp_path):
+    path = str(tmp_path / "post.npz")
+    _posterior().save(path)
+    with open(path, "rb") as f:
+        data = f.read()
+    with open(path, "wb") as f:
+        f.write(data[: len(data) // 2])  # truncated mid-write
+    with pytest.raises(ValueError, match="corrupt"):
+        Posterior.load(path)
+    with open(path, "w") as f:
+        f.write("not a zip at all")
+    with pytest.raises(ValueError, match="corrupt"):
+        Posterior.load(path)
+
+
+def test_missing_arrays_raise_loudly(tmp_path):
+    path = str(tmp_path / "post.npz")
+    with open(path, "wb") as f:
+        np.savez(f, theta=np.zeros((2, 2), np.float32))
+    with pytest.raises(ValueError, match="corrupt"):
+        Posterior.load(path)
+
+
+def test_crash_mid_save_preserves_previous_file(tmp_path, monkeypatch):
+    """The atomic-write contract: a failure before the rename leaves the
+    previously saved posterior intact (and no temp litter behind)."""
+    path = str(tmp_path / "post.npz")
+    first = _posterior(n=5)
+    first.save(path)
+
+    def boom(*a, **k):
+        raise RuntimeError("disk full")
+
+    monkeypatch.setattr(np, "savez", boom)
+    with pytest.raises(RuntimeError, match="disk full"):
+        _posterior(n=9).save(path)
+    monkeypatch.undo()
+    back = Posterior.load(path)
+    np.testing.assert_array_equal(back.theta, first.theta)
+    assert [f for f in os.listdir(tmp_path) if f.endswith(".tmp")] == []
+
+
+def test_top_subsets_weights():
+    post = _posterior(n=10)
+    top = post.top(4)
+    assert len(top) == 4
+    order = np.argsort(post.distances)[:4]
+    np.testing.assert_array_equal(top.weights, post.weights[order])
+    assert _posterior(weights=False).top(4).weights is None

@@ -1,0 +1,334 @@
+"""Serving layer: batched posterior queries, cache semantics, warm re-fits.
+
+Pins the serving acceptance contract: a mixed batch of >= 8 forecast /
+counterfactual queries across >= 2 schedules is answered via <= 2 compiled
+calls (jit-cache-size pinned), responses BIT-IDENTICAL to sequential
+`posterior_forecast` calls for the same (query, seed); a posterior-cache
+hit skips fitting entirely; a warm-started SMC re-fit reaches the
+recovery-test accuracy bar with fewer simulations than the cold fit; and
+truncated forecasts subsample with a seeded permutation instead of the
+biased first-k rows.
+"""
+
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.posterior import Posterior
+from repro.core.serving import (
+    EpiServer,
+    ForecastQuery,
+    PosteriorStore,
+    ServeConfig,
+    dataset_version,
+    forecast_bands,
+    load_dataset_file,
+    save_dataset_file,
+    subsample_particles,
+)
+from repro.core.smc import SMCConfig, run_smc_abc
+from repro.epi.data import synthetic_dataset
+from repro.epi.models import get_model
+from repro.epi.spec import EMPTY_SCHEDULE
+from repro.launch import abc_serve
+from repro.launch.abc_run import parse_intervention, posterior_forecast
+from test_posterior_recovery import DAYS, TRUTH, _assert_recovers, _dataset
+
+TINY_FIT = SMCConfig(
+    n_particles=16, batch_size=256, n_rounds=1, quantile=0.5, num_days=8,
+    backend="xla_fused", model="siard",
+)
+
+
+def _fake_posterior(model="siard", n=48, seed=0) -> Posterior:
+    """Prior samples standing in for a fit — forecasting is fit-agnostic."""
+    spec = get_model(model)
+    theta = np.asarray(
+        spec.prior().sample(jax.random.PRNGKey(seed), (n,)), np.float32
+    )
+    return Posterior(
+        theta=theta, distances=np.arange(n, dtype=np.float32),
+        tolerance=1.0, param_names=spec.param_names,
+    )
+
+
+# ------------------------------------------------------- batched answering
+def test_mixed_batch_bit_identical_in_two_compiled_calls():
+    """The acceptance pin: 8 queries (4 forecasts + 4 counterfactuals, two
+    schedule shapes) -> exactly 2 batched compiled calls, each compiled
+    ONCE (jit cache size), responses dict-equal (hence bit-identical
+    band floats) to sequential posterior_forecast."""
+    from repro.core.abc import ABCConfig
+
+    cfg = ServeConfig(
+        slots=4, forecast_particles=32, fit=dataclasses.replace(
+            TINY_FIT, num_days=10),
+    )
+    server = EpiServer(cfg)
+    post = _fake_posterior()
+    server.preload("synthetic_small", "siard", post)
+
+    sched = parse_intervention("alpha@5=0.5")
+    queries = [
+        ForecastQuery(dataset="synthetic_small", horizon=7, seed=i)
+        for i in range(4)
+    ] + [
+        ForecastQuery(dataset="synthetic_small", horizon=7, schedule=sched,
+                      seed=i)
+        for i in range(4)
+    ]
+    responses = server.answer(queries)
+    assert len(responses) == 8
+    assert server.fits == 0  # preloaded: no fitting on the query path
+    assert server.batched_calls == 2
+    assert server.kernels.n_compiled == 2
+    for _, batched in server.kernels._fns.values():
+        assert batched._cache_size() == 1
+
+    ds, _ = server.dataset("synthetic_small", "siard")
+    acfg = ABCConfig(num_days=10, model="siard")
+    for i, q in enumerate(queries):
+        seq = posterior_forecast(
+            post.theta, ds, acfg, q.horizon, schedule=q.schedule,
+            key=q.seed, max_particles=cfg.forecast_particles,
+        )
+        assert responses[i] == seq, f"query {i} diverged from sequential"
+        # strict JSON end to end
+        json.dumps(responses[i], allow_nan=False)
+
+
+def test_padded_final_chunk_still_matches_sequential():
+    """A group smaller than `slots` pads lanes by repeating lane 0 — the
+    padding must never leak into real responses."""
+    from repro.core.abc import ABCConfig
+
+    server = EpiServer(ServeConfig(
+        slots=4, forecast_particles=16,
+        fit=dataclasses.replace(TINY_FIT, num_days=10),
+    ))
+    post = _fake_posterior(n=20)
+    server.preload("synthetic_small", "siard", post)
+    queries = [
+        ForecastQuery(dataset="synthetic_small", horizon=5, seed=7),
+        ForecastQuery(dataset="synthetic_small", horizon=5, seed=8),
+        ForecastQuery(dataset="synthetic_small", horizon=5,
+                      schedule=EMPTY_SCHEDULE, seed=9),
+    ]
+    responses = server.answer(queries)
+    # empty-schedule counterfactuals share the no-schedule forecast SHAPE
+    # (scales ride theta columns), so all 3 queries fit one padded chunk
+    assert server.batched_calls == 1
+    ds, _ = server.dataset("synthetic_small", "siard")
+    acfg = ABCConfig(num_days=10, model="siard")
+    for q, resp in zip(queries, responses):
+        seq = posterior_forecast(post.theta, ds, acfg, q.horizon,
+                                 schedule=q.schedule, key=q.seed,
+                                 max_particles=16)
+        assert resp == seq
+
+
+# ------------------------------------------------------ subsample bugfix
+def test_truncated_bands_statistically_match_full_bands():
+    """topk accepted sets are distance-ordered; first-k truncation biases
+    the bands. The seeded-permutation subsample must track the full-set
+    bands closely while the first-k bands drift."""
+    model = "sir"
+    spec = get_model(model)
+    n = 512
+    raw = np.asarray(
+        spec.prior().sample(jax.random.PRNGKey(3), (n,)), np.float32
+    )
+    # a concentrated accepted-set-like cloud around the truth, then
+    # emulate distance ordering correlated with a parameter (low-distance
+    # particles have low beta) by sorting on the first column
+    truth = np.asarray(TRUTH[model], np.float32)
+    theta = truth + (raw - truth) * 0.3
+    theta = theta[np.argsort(theta[:, 0])]
+    ds = synthetic_dataset(theta=TRUTH[model], population=1e6, num_days=15,
+                           a0=100.0, seed=11, name="subsample_ds",
+                           model=model)
+
+    def bands(th, k):
+        return forecast_bands(th, ds, model=model, fit_days=15, horizon=5,
+                              key=4, max_particles=k)
+
+    full = bands(theta, n)
+    perm = bands(theta, 128)  # seeded-permutation subsample (the fix)
+    firstk = bands(theta[:128], 128)  # the old biased truncation
+
+    ch = spec.observed[0]
+    ref = np.asarray(full["channels"][ch]["q50"])
+    scale = np.abs(ref).mean() + 1.0
+
+    def err(b):
+        return np.abs(np.asarray(b["channels"][ch]["q50"]) - ref).mean() / scale
+
+    assert err(perm) < 0.15, "permutation subsample drifted from full bands"
+    assert err(perm) < err(firstk), (
+        f"seeded subsample ({err(perm):.3f}) should beat first-k "
+        f"truncation ({err(firstk):.3f})"
+    )
+
+
+def test_subsample_is_seeded_and_unbiased():
+    theta = np.arange(1000, dtype=np.float32).reshape(-1, 1)
+    a = subsample_particles(theta, 5, 200)
+    b = subsample_particles(theta, 5, 200)
+    c = subsample_particles(theta, 6, 200)
+    np.testing.assert_array_equal(a, b)  # deterministic in the seed
+    assert not np.array_equal(a, c)
+    assert abs(a.mean() - theta.mean()) < 40  # unbiased (first-k mean: 99.5)
+    np.testing.assert_array_equal(subsample_particles(theta, 5, 1000), theta)
+
+
+# ------------------------------------------------------------ cache hits
+def test_posterior_cache_hit_skips_fitting(tmp_path):
+    server = EpiServer(ServeConfig(
+        slots=2, forecast_particles=8, fit=TINY_FIT,
+        store_dir=str(tmp_path / "store"),
+    ))
+    q = ForecastQuery(dataset="synthetic_small", horizon=3, seed=0)
+    server.answer([q])
+    assert server.fits == 1
+    server.answer([dataclasses.replace(q, seed=5)])
+    assert server.fits == 1  # in-memory hit
+    # a FRESH server with the same store answers without fitting at all
+    server2 = EpiServer(ServeConfig(
+        slots=2, forecast_particles=8, fit=TINY_FIT,
+        store_dir=str(tmp_path / "store"),
+    ))
+    server2.answer([q])
+    assert server2.fits == 0  # store hit
+
+
+# ------------------------------------------------------------- warm start
+def test_warm_started_refit_fewer_sims_same_accuracy():
+    """Warm-starting SMC from a cached posterior must reach the recovery
+    bar of tests/test_posterior_recovery.py with FEWER simulations than
+    the cold fit (round 0 re-simulates n_particles instead of consuming
+    prior waves)."""
+    model = "sir"
+    ds = _dataset(model)
+    cold_cfg = SMCConfig(
+        n_particles=96, batch_size=4096, n_rounds=3, quantile=0.4,
+        num_days=DAYS, backend="xla_fused", model=model,
+    )
+    cold = run_smc_abc(ds, cold_cfg, key=1)
+    assert cold.weights is not None and cold.weights.shape == (96,)
+    warm_cfg = dataclasses.replace(
+        cold_cfg, n_rounds=2,
+        initial_particles=cold.theta, initial_weights=cold.weights,
+    )
+    warm = run_smc_abc(ds, warm_cfg, key=2)
+    assert warm.simulations < cold.simulations, (
+        warm.simulations, cold.simulations)
+    assert warm.tolerance <= cold.tolerance  # refined, not reset
+    _assert_recovers(warm.theta, model)
+
+
+def test_smc_initial_particles_validation():
+    with pytest.raises(ValueError, match="initial_weights"):
+        SMCConfig(initial_weights=np.ones(4))
+    with pytest.raises(ValueError):
+        SMCConfig(initial_particles=np.zeros((0, 3)))
+    with pytest.raises(ValueError):
+        SMCConfig(initial_particles=np.ones((4, 3)),
+                  initial_weights=np.ones(5))
+    with pytest.raises(ValueError):
+        SMCConfig(initial_particles=np.ones((4, 3)),
+                  initial_weights=np.zeros(4))  # zero-sum weights
+
+
+# ------------------------------------------------------------------ store
+def test_posterior_store_atomic_swap(tmp_path):
+    store = PosteriorStore(str(tmp_path))
+    p1, p2 = _fake_posterior(n=8, seed=1), _fake_posterior(n=8, seed=2)
+    store.put("k", "v1", p1)
+    assert store.version_of("k") == "v1"
+    np.testing.assert_array_equal(store.get("k", "v1").theta, p1.theta)
+    store.put("k", "v2", p2)
+    assert store.get("k", "v1") is None  # stale version: miss, not p1
+    version, latest = store.latest("k")
+    assert version == "v2"
+    np.testing.assert_array_equal(latest.theta, p2.theta)
+    npz = [f for f in os.listdir(tmp_path) if f.endswith(".npz")]
+    assert len(npz) == 1 and "v2" in npz[0]  # v1 payload pruned
+
+
+# ------------------------------------------------- dataset files & daemon
+def _write_dataset(path, scale=1.0, num_days=12):
+    ds = synthetic_dataset(theta=TRUTH["sir"], population=1e6,
+                           num_days=num_days, a0=100.0, seed=11,
+                           name="served", model="sir")
+    ds = dataclasses.replace(
+        ds, observed=(ds.observed * scale).astype(np.float32))
+    save_dataset_file(str(path), ds)
+    return ds
+
+
+def test_dataset_file_round_trip_and_version(tmp_path):
+    path = tmp_path / "served.json"
+    ds = _write_dataset(path)
+    back = load_dataset_file(str(path))
+    np.testing.assert_array_equal(back.observed, ds.observed)
+    assert back.name == ds.name and back.population == ds.population
+    assert dataset_version(back) == dataset_version(ds)
+    _write_dataset(path, scale=1.1)
+    assert dataset_version(load_dataset_file(str(path))) != dataset_version(ds)
+    with pytest.raises(ValueError, match="malformed"):
+        bad = tmp_path / "bad.json"
+        bad.write_text('{"name": "x"}')
+        load_dataset_file(str(bad))
+
+
+def test_daemon_refits_on_content_change_with_warm_start(tmp_path):
+    data_dir, store_dir = tmp_path / "data", tmp_path / "store"
+    data_dir.mkdir()
+    _write_dataset(data_dir / "served.json")
+    fit = dataclasses.replace(TINY_FIT, model="sir")
+
+    def make_server():
+        return EpiServer(ServeConfig(
+            fit=fit, data_dir=str(data_dir), store_dir=str(store_dir)))
+
+    s1 = make_server()
+    assert s1.refresh("served", "sir") == "cold_fit"
+    assert s1.refresh("served", "sir") == "cached"
+    # new daily data (content change) -> a FRESH process re-fits WARM from
+    # the stored previous version
+    _write_dataset(data_dir / "served.json", scale=1.05)
+    s2 = make_server()
+    assert s2.refresh("served", "sir") == "warm_refit"
+    assert s2.warm_fits == 1
+    assert s2.refresh("served", "sir") == "cached"
+
+
+def test_abc_serve_once_cli(tmp_path):
+    data_dir, store_dir = tmp_path / "data", tmp_path / "store"
+    data_dir.mkdir()
+    _write_dataset(data_dir / "served.json")
+    argv = ["--once", "--data-dir", str(data_dir), "--store", str(store_dir),
+            "--models", "sir", "--days", "8", "--fit-particles", "16",
+            "--fit-batch", "256", "--fit-rounds", "1"]
+    assert abc_serve.main(argv) == 1  # first sweep: one cold fit
+    assert abc_serve.main(argv) == 0  # content unchanged: all cached
+
+
+# ---------------------------------------------------------------- queries
+def test_forecast_query_from_json():
+    q = ForecastQuery.from_json({
+        "dataset": "italy", "model": "siard", "horizon": 10,
+        "schedule": "alpha@5=0.5", "seed": 3,
+    })
+    assert q.kind == "counterfactual"
+    assert q.schedule.breakpoints == (5,)
+    lifted = ForecastQuery.from_json({"dataset": "italy", "schedule": "none"})
+    assert lifted.schedule is EMPTY_SCHEDULE and lifted.kind == "counterfactual"
+    plain = ForecastQuery.from_json({"dataset": "italy"})
+    assert plain.schedule is None and plain.kind == "forecast"
+    with pytest.raises(ValueError, match="grammar string"):
+        ForecastQuery.from_json({"dataset": "italy", "schedule": {"day": 5}})

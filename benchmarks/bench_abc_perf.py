@@ -15,7 +15,6 @@ import subprocess
 import sys
 
 import jax
-import numpy as np
 
 from benchmarks.common import render_table, save_result, time_fn
 from benchmarks.roofline import abc_kernel_roofline

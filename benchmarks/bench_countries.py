@@ -9,11 +9,9 @@ adjusted on an individual basis") to keep CPU runtime in minutes.
 
 from __future__ import annotations
 
-import jax
 import numpy as np
 
 from benchmarks.common import render_table, save_result
-from repro.core.abc import ABCConfig, make_simulator
 from repro.core.priors import paper_prior
 from repro.core.smc import SMCConfig, run_smc_abc
 from repro.epi.data import get_dataset

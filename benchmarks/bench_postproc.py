@@ -6,7 +6,6 @@ strategy (more data crosses to host). Same checks here (claim C6)."""
 
 from __future__ import annotations
 
-import jax
 
 from benchmarks.common import render_table, save_result
 from repro.core.abc import ABCConfig, run_abc

@@ -10,10 +10,8 @@ and is excluded from timing rows). Validated claims:
 
 from __future__ import annotations
 
-import time
 
 import jax
-import numpy as np
 
 from benchmarks.common import render_table, save_result, time_fn
 from repro.core.abc import ABCConfig, abc_run_batch, make_simulator, run_abc

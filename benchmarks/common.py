@@ -9,6 +9,8 @@ from typing import Callable, Dict, List
 
 import jax
 
+from repro.ioutils import atomic_write_text
+
 RESULTS_DIR = Path(__file__).resolve().parents[1] / "experiments" / "bench"
 
 
@@ -38,10 +40,8 @@ def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> Dict[str, f
 
 
 def save_result(name: str, payload) -> Path:
-    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
     path = RESULTS_DIR / f"{name}.json"
-    path.write_text(json.dumps(payload, indent=1, default=float))
-    return path
+    return atomic_write_text(path, json.dumps(payload, indent=1, default=float))
 
 
 def render_table(headers: List[str], rows: List[List]) -> str:

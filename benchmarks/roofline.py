@@ -7,6 +7,7 @@ import json
 from pathlib import Path
 
 from benchmarks.common import render_table, save_result
+from repro.ioutils import atomic_write_text
 from repro.launch.analysis import HBM_BW, LINK_BW, PEAK_FLOPS
 
 DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
@@ -117,7 +118,7 @@ def write_advice_appendix(path=None) -> str:
                 f"{advice(c)}"
             )
     text = "\n".join(lines)
-    Path(path).write_text(text)
+    atomic_write_text(path, text)
     return str(path)
 
 

@@ -1,0 +1,35 @@
+"""Static-analysis subsystem: the AST lint pass + the jaxpr trace auditor.
+
+Run both passes locally with `python -m repro.analysis`; CI gates on them
+through `tests/check_analysis.py` against the committed zero-entry baseline
+`tests/analysis_baseline.txt`. See the README "Static analysis" section for
+the rule catalog and the suppression/baseline policy.
+
+NOTE: distinct from `repro.launch.analysis` (the HLO roofline/cost
+analyzer) — this package checks source and jaxprs, that one costs compiled
+modules.
+"""
+
+from repro.analysis.lint import RULES, run_lint
+from repro.analysis.report import (
+    SCHEMA,
+    Finding,
+    dump_report,
+    evaluate,
+    load_baseline,
+    make_report,
+)
+from repro.analysis.trace_audit import AUDIT_RULES, run_audit
+
+__all__ = [
+    "AUDIT_RULES",
+    "Finding",
+    "RULES",
+    "SCHEMA",
+    "dump_report",
+    "evaluate",
+    "load_baseline",
+    "make_report",
+    "run_audit",
+    "run_lint",
+]

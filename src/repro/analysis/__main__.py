@@ -1,0 +1,87 @@
+"""CLI: `python -m repro.analysis [--pass lint|audit|all] [--quick] ...`
+
+Exit code 0 when every finding is in the baseline (and no baseline entry is
+stale), 1 otherwise — same contract as tests/check_analysis.py, which is a
+thin wrapper over this module plus the committed baseline path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis.lint import run_lint
+from repro.analysis.report import (
+    dump_report,
+    evaluate,
+    load_baseline,
+    make_report,
+)
+from repro.analysis.trace_audit import run_audit
+
+
+def repo_root() -> Path:
+    """The checkout root (this file lives at src/repro/analysis/)."""
+    return Path(__file__).resolve().parents[3]
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo static analysis: AST lint + jaxpr trace audit",
+    )
+    parser.add_argument(
+        "--pass", dest="passes", choices=("lint", "audit", "all"),
+        default="all", help="which pass to run (default: all)",
+    )
+    parser.add_argument(
+        "--quick", action="store_true",
+        help="audit axis-coverage combos instead of the full cross product",
+    )
+    parser.add_argument(
+        "--baseline", type=Path, default=None,
+        help="baseline file of allowed finding keys "
+             "(default: tests/analysis_baseline.txt)",
+    )
+    parser.add_argument(
+        "--json-out", type=Path, default=None,
+        help="write the analysis-report/v1 JSON here",
+    )
+    parser.add_argument(
+        "--list-rules", action="store_true", help="print the rule catalog",
+    )
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        from repro.analysis.lint import RULES
+        from repro.analysis.trace_audit import AUDIT_RULES
+
+        for name, desc in {**RULES, **AUDIT_RULES}.items():
+            print(f"{name:28s} {desc}")
+        return 0
+
+    root = repo_root()
+    findings, passes = [], []
+    if args.passes in ("lint", "all"):
+        passes.append("lint")
+        findings.extend(run_lint(root))
+    if args.passes in ("audit", "all"):
+        passes.append("trace_audit")
+        findings.extend(run_audit(quick=args.quick, log=print))
+
+    report = make_report(findings, passes)
+    if args.json_out:
+        dump_report(report, args.json_out)
+        print(f"[analysis] report -> {args.json_out}")
+
+    baseline_path = args.baseline
+    if baseline_path is None:
+        default = root / "tests" / "analysis_baseline.txt"
+        baseline_path = default if default.exists() else None
+    known = load_baseline(baseline_path)
+    return evaluate(known, findings)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,566 @@
+"""AST lint pass: repo contracts as named, suppressible rules.
+
+Each rule encodes an invariant a past PR fixed by hand (see ISSUE/CHANGES
+history) so the violation class can never land again:
+
+  non-atomic-artifact-write   artifacts must go through repro.ioutils
+                              .atomic_write — a bare np.savez / json.dump /
+                              open(path, "w") / Path.write_text to a final
+                              path is exactly the truncation bug PR 7 fixed
+                              in Posterior.save.
+  host-sync-under-trace       .item() / jax.device_get / float()/int()/
+                              np.asarray of a traced *parameter* inside a
+                              jit / lax control-flow region forces a device
+                              sync (or a tracer error) in the hot path.
+  python-rng-under-trace      np.random.* / random.* under trace silently
+                              bakes ONE host-drawn value into the compiled
+                              program — every wave reuses it.
+  time-under-trace            time.time()/perf_counter()/monotonic() under
+                              trace is a compile-time constant, not a
+                              measurement.
+  scalar-closure-capture      a jitted function capturing `x = float(arg)` /
+                              `int(arg)` from its factory's scope bakes a
+                              per-call value as a compile constant — the
+                              shape-cache contract wants it traced (or a
+                              const lane). The silent in-jit tile clamp bug.
+  suppression-missing-reason  `# analysis: allow(rule)` without a reason
+                              comment — suppressions must say why.
+
+Suppression: a trailing comment on the flagged line, or a comment in the
+contiguous comment block directly above it, of the form
+
+    # analysis: allow(rule-name) — reason why this site is exempt
+
+Traced-context detection is intentionally structural (no imports resolved):
+a function is traced if it is decorated with jit/pmap/vmap (directly or via
+functools.partial), passed by name or as a lambda to jit / lax.while_loop /
+lax.scan / lax.cond / lax.fori_loop / vmap / pmap / shard_map / pallas_call,
+nested inside a traced function, or called by simple name from traced code
+in the same module. Parameters bound in static_argnames/static_argnums are
+NOT traced values and never trip the host-sync rule.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.report import Finding
+
+#: rule registry: name -> one-line description (the README catalog renders
+#: from here so docs and code cannot drift)
+RULES: Dict[str, str] = {
+    "non-atomic-artifact-write": (
+        "artifact writes must go through repro.ioutils.atomic_write "
+        "(bare np.savez/np.save/json.dump/pickle.dump/open(...,'w')/"
+        "Path.write_text can leave a truncated file at the final path)"
+    ),
+    "host-sync-under-trace": (
+        ".item()/jax.device_get, or float()/int()/np.asarray/np.array of a "
+        "traced parameter, inside a jit/lax control-flow region"
+    ),
+    "python-rng-under-trace": (
+        "np.random.*/random.* under trace bakes one host-drawn value into "
+        "the compiled program"
+    ),
+    "time-under-trace": (
+        "time.time()/perf_counter()/monotonic() under trace is a "
+        "compile-time constant, not a measurement"
+    ),
+    "scalar-closure-capture": (
+        "a traced function captures a float(param)/int(param) scalar from "
+        "its factory scope — belongs in traced args or const lanes"
+    ),
+    "suppression-missing-reason": (
+        "# analysis: allow(...) suppressions must carry a reason"
+    ),
+}
+
+#: callables whose function-valued arguments become traced code
+_TRACE_WRAPPERS = {
+    "jit", "pmap", "vmap", "while_loop", "scan", "cond", "switch",
+    "fori_loop", "shard_map", "pallas_call", "checkpoint", "remat", "grad",
+    "value_and_grad",
+}
+#: decorator suffixes that make the decorated def traced
+_TRACE_DECORATORS = {"jit", "pmap", "vmap", "pallas_call", "custom_jvp",
+                     "custom_vjp"}
+_HOST_SYNC_CONVERTERS = {"float", "int", "bool", "complex"}
+_NP_ALIASES = {"np", "numpy"}
+_WRITE_MODES = {"w", "wb", "a", "ab", "w+", "wb+", "a+", "x", "xb"}
+#: file-writing calls checked by non-atomic-artifact-write:
+#: dotted-suffix -> index of the file-object/path argument
+_FILE_ARG_OF = {"savez": 0, "savez_compressed": 0, "save": 0, "dump": 1}
+
+_ALLOW_RE = re.compile(
+    r"#\s*analysis:\s*allow\(([A-Za-z0-9_-]+)\)\s*(.*)"
+)
+
+
+def _dotted(node: ast.AST) -> Tuple[str, ...]:
+    """('jax','lax','while_loop') for jax.lax.while_loop; () if not a name."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return ()
+
+
+def _root_names(node: ast.AST) -> Set[str]:
+    """All Name roots loaded anywhere inside an expression."""
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+class _Suppressions:
+    """Per-file `# analysis: allow(rule) — reason` directives."""
+
+    def __init__(self, source: str, path: str):
+        self.by_line: Dict[int, Set[str]] = {}
+        self.missing_reason: List[Finding] = []
+        self._comment_lines: Set[int] = set()
+        for i, raw in enumerate(source.splitlines(), start=1):
+            stripped = raw.strip()
+            if stripped.startswith("#"):
+                self._comment_lines.add(i)
+            m = _ALLOW_RE.search(raw)
+            if not m:
+                continue
+            rule, reason = m.group(1), m.group(2)
+            self.by_line.setdefault(i, set()).add(rule)
+            if not reason.strip(" -—:\t"):
+                self.missing_reason.append(Finding(
+                    rule="suppression-missing-reason", path=path, line=i,
+                    context=f"allow({rule})",
+                    message="suppression has no reason — say why this site "
+                            "is exempt after the closing paren",
+                ))
+
+    def allows(self, rule: str, line: int) -> bool:
+        """Directive on the line itself or in the comment block above it."""
+        if rule in self.by_line.get(line, ()):
+            return True
+        lookback = line - 1
+        while lookback in self._comment_lines:
+            if rule in self.by_line.get(lookback, ()):
+                return True
+            lookback -= 1
+        return False
+
+
+class _FunctionInfo:
+    def __init__(self, node: ast.FunctionDef, parent: Optional["_FunctionInfo"]):
+        self.node = node
+        self.parent = parent
+        self.children: List[_FunctionInfo] = []
+        self.traced = False
+        self.params = self._param_names(node)
+        self.static_params = self._static_params(node)
+        # simple-name calls made directly by this function (for transitive
+        # traced-closure propagation)
+        self.called_names: Set[str] = set()
+
+    @staticmethod
+    def _param_names(node: ast.FunctionDef) -> Tuple[str, ...]:
+        a = node.args
+        names = [p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+        return tuple(names)
+
+    @staticmethod
+    def _static_params(node: ast.FunctionDef) -> Set[str]:
+        """Params named by static_argnames/static_argnums in a jit decorator
+        (directly or through functools.partial)."""
+        static: Set[str] = set()
+        a = node.args
+        positional = [p.arg for p in (*a.posonlyargs, *a.args)]
+        for dec in node.decorator_list:
+            if not isinstance(dec, ast.Call):
+                continue
+            callee = _dotted(dec.func)
+            calls = [dec]
+            if callee and callee[-1] == "partial":
+                # functools.partial(jax.jit, static_argnames=...)
+                inner = dec.args[0] if dec.args else None
+                if inner is None or _dotted(inner)[-1:] != ("jit",):
+                    continue
+            elif not (callee and callee[-1] == "jit"):
+                continue
+            for call in calls:
+                for kw in call.keywords:
+                    if kw.arg == "static_argnames":
+                        for c in ast.walk(kw.value):
+                            if isinstance(c, ast.Constant) and isinstance(
+                                c.value, str
+                            ):
+                                static.add(c.value)
+                    elif kw.arg == "static_argnums":
+                        for c in ast.walk(kw.value):
+                            if isinstance(c, ast.Constant) and isinstance(
+                                c.value, int
+                            ) and 0 <= c.value < len(positional):
+                                static.add(positional[c.value])
+        return static
+
+    @property
+    def traced_params(self) -> Set[str]:
+        return set(self.params) - self.static_params
+
+
+class _ModuleIndex(ast.NodeVisitor):
+    """First pass: function tree, traced roots, call graph."""
+
+    def __init__(self):
+        self.functions: List[_FunctionInfo] = []
+        self.by_name: Dict[Tuple[Optional[ast.AST], str], _FunctionInfo] = {}
+        self._stack: List[_FunctionInfo] = []
+        #: lambdas passed to trace wrappers: (lambda node, enclosing info)
+        self.traced_lambdas: List[Tuple[ast.Lambda, Optional[_FunctionInfo]]] = []
+
+    def _current(self) -> Optional[_FunctionInfo]:
+        return self._stack[-1] if self._stack else None
+
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        info = _FunctionInfo(node, self._current())
+        if info.parent is not None:
+            info.parent.children.append(info)
+        self.functions.append(info)
+        scope = info.parent.node if info.parent else None
+        self.by_name[(scope, node.name)] = info
+        for dec in node.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            callee = _dotted(target)
+            if callee and callee[-1] == "partial" and isinstance(dec, ast.Call):
+                if dec.args and _dotted(dec.args[0])[-1:] and \
+                        _dotted(dec.args[0])[-1] in _TRACE_DECORATORS:
+                    info.traced = True
+            elif callee and callee[-1] in _TRACE_DECORATORS:
+                info.traced = True
+        self._stack.append(info)
+        self.generic_visit(node)
+        self._stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Call(self, node: ast.Call):
+        cur = self._current()
+        callee = _dotted(node.func)
+        if callee and cur is not None and len(callee) == 1:
+            cur.called_names.add(callee[0])
+        if callee and callee[-1] in _TRACE_WRAPPERS:
+            for arg in (*node.args, *(kw.value for kw in node.keywords)):
+                if isinstance(arg, ast.Name):
+                    self._mark_traced_name(arg.id)
+                elif isinstance(arg, ast.Lambda):
+                    self.traced_lambdas.append((arg, cur))
+        self.generic_visit(node)
+
+    def _mark_traced_name(self, name: str):
+        # resolve in the lexical scope chain: innermost def wins
+        scopes = [info.node for info in reversed(self._stack)] + [None]
+        for scope in scopes:
+            info = self.by_name.get((scope, name))
+            if info is not None:
+                info.traced = True
+                return
+
+    def propagate(self):
+        """Traced closure: nested defs + same-module simple-name callees."""
+        changed = True
+        while changed:
+            changed = False
+            for info in self.functions:
+                if not info.traced:
+                    continue
+                for child in info.children:
+                    if not child.traced:
+                        child.traced = True
+                        changed = True
+                for name in info.called_names:
+                    # resolve against siblings upward through the chain,
+                    # then module scope
+                    scope_chain: List[Optional[ast.AST]] = []
+                    p = info.parent
+                    while p is not None:
+                        scope_chain.append(p.node)
+                        p = p.parent
+                    scope_chain.append(None)
+                    for scope in scope_chain:
+                        callee = self.by_name.get((scope, name))
+                        if callee is not None:
+                            if not callee.traced:
+                                callee.traced = True
+                                changed = True
+                            break
+
+
+def _assigned_names(node: ast.FunctionDef) -> Set[str]:
+    """Names bound inside a function body (stores, loop targets, withitems,
+    params) — everything that is NOT a free variable."""
+    bound: Set[str] = set(_FunctionInfo._param_names(node))
+    for child in ast.walk(node):
+        if child is node:
+            continue
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            bound.add(child.name)
+        elif isinstance(child, ast.Name) and isinstance(
+            child.ctx, (ast.Store, ast.Del)
+        ):
+            bound.add(child.id)
+    return bound
+
+
+class Linter:
+    """Lint one file; collect Findings (suppressions already applied)."""
+
+    def __init__(self, path: Path, repo_root: Path, source: Optional[str] = None):
+        self.path = path
+        self.rel = str(path.relative_to(repo_root))
+        self.source = source if source is not None else path.read_text()
+        self.findings: List[Finding] = []
+        self.suppressions = _Suppressions(self.source, self.rel)
+
+    # ------------------------------------------------------------------
+    def run(self) -> List[Finding]:
+        tree = ast.parse(self.source, filename=self.rel)
+        index = _ModuleIndex()
+        index.visit(tree)
+        index.propagate()
+        self._enclosing: Dict[int, str] = {}
+        for info in index.functions:
+            for child in ast.walk(info.node):
+                lineno = getattr(child, "lineno", None)
+                if lineno is not None and lineno not in self._enclosing:
+                    self._enclosing[lineno] = info.node.name
+
+        if not self.rel.endswith("ioutils.py"):
+            self._check_atomic_writes(tree)
+        for info in index.functions:
+            if info.traced:
+                self._check_traced_body(info)
+                self._check_scalar_captures(info)
+        for lam, encl in index.traced_lambdas:
+            self._check_traced_expr(lam, encl)
+        self.findings.extend(self.suppressions.missing_reason)
+        return self.findings
+
+    # ------------------------------------------------------------------
+    def _emit(self, rule: str, node: ast.AST, context: str, message: str):
+        line = getattr(node, "lineno", 0)
+        if self.suppressions.allows(rule, line):
+            return
+        self.findings.append(Finding(
+            rule=rule, path=self.rel, line=line, context=context,
+            message=message,
+        ))
+
+    def _context_of(self, node: ast.AST) -> str:
+        return self._enclosing.get(getattr(node, "lineno", 0), "<module>")
+
+    # ------------------------------- rule: non-atomic-artifact-write --
+    def _check_atomic_writes(self, tree: ast.Module):
+        # names bound as `with atomic_write(...) as f` anywhere in the file;
+        # scoping finer than per-file buys nothing here (a name bound from
+        # atomic_write in one function shadowing a bare handle in another
+        # would itself be flagged at its own open())
+        atomic_handles: Set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.With, ast.AsyncWith)):
+                for item in node.items:
+                    call = item.context_expr
+                    if isinstance(call, ast.Call) and _dotted(call.func)[-1:] \
+                            == ("atomic_write",):
+                        if isinstance(item.optional_vars, ast.Name):
+                            atomic_handles.add(item.optional_vars.id)
+
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = _dotted(node.func)
+            ctx = self._context_of(node)
+            if callee == ("open",):
+                mode = None
+                if len(node.args) >= 2 and isinstance(node.args[1], ast.Constant):
+                    mode = node.args[1].value
+                for kw in node.keywords:
+                    if kw.arg == "mode" and isinstance(kw.value, ast.Constant):
+                        mode = kw.value.value
+                if isinstance(mode, str) and mode in _WRITE_MODES:
+                    self._emit(
+                        "non-atomic-artifact-write", node, ctx,
+                        f"open(..., {mode!r}) writes the final path directly; "
+                        "use `with atomic_write(path, ...)` instead",
+                    )
+            elif callee and callee[-1] == "write_text" and len(callee) > 1:
+                self._emit(
+                    "non-atomic-artifact-write", node, ctx,
+                    ".write_text() replaces the file non-atomically; use "
+                    "repro.ioutils.atomic_write_text",
+                )
+            elif callee and callee[-1] in _FILE_ARG_OF and len(callee) > 1:
+                # np.savez/np.save/json.dump/pickle.dump(file_or_path, ...)
+                if callee[-1] in ("savez", "savez_compressed", "save") and \
+                        callee[0] not in _NP_ALIASES:
+                    continue
+                if callee[-1] == "dump" and callee[0] not in (
+                    "json", "pickle", "yaml", "toml"
+                ):
+                    continue
+                idx = _FILE_ARG_OF[callee[-1]]
+                file_arg = node.args[idx] if len(node.args) > idx else None
+                if isinstance(file_arg, ast.Name) and \
+                        file_arg.id in atomic_handles:
+                    continue
+                self._emit(
+                    "non-atomic-artifact-write", node, ctx,
+                    f"{'.'.join(callee)} must write through a "
+                    "`with atomic_write(path, ...)` handle",
+                )
+
+    # ------------------------------------ rules in traced functions ---
+    def _check_traced_body(self, info: _FunctionInfo):
+        name = info.node.name
+        for node in ast.walk(info.node):
+            if not isinstance(node, ast.Call):
+                continue
+            self._check_traced_call(node, name, info.traced_params)
+
+    def _check_traced_expr(self, lam: ast.Lambda, encl: Optional[_FunctionInfo]):
+        name = f"{encl.node.name}.<lambda>" if encl else "<lambda>"
+        params = {p.arg for p in (*lam.args.posonlyargs, *lam.args.args,
+                                  *lam.args.kwonlyargs)}
+        for node in ast.walk(lam):
+            if isinstance(node, ast.Call):
+                self._check_traced_call(node, name, params)
+
+    def _check_traced_call(self, node: ast.Call, context: str,
+                           traced_params: Set[str]):
+        callee = _dotted(node.func)
+        if not callee:
+            # method call like x.item()
+            if isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "item":
+                self._emit(
+                    "host-sync-under-trace", node, context,
+                    ".item() forces a device->host sync under trace",
+                )
+            return
+        suffix = callee[-1]
+        if suffix == "item" and len(callee) > 1:
+            self._emit(
+                "host-sync-under-trace", node, context,
+                ".item() forces a device->host sync under trace",
+            )
+        elif suffix in ("device_get", "block_until_ready") and "jax" in callee:
+            self._emit(
+                "host-sync-under-trace", node, context,
+                f"jax.{suffix} under trace forces a device->host sync",
+            )
+        elif (
+            callee in {(c,) for c in _HOST_SYNC_CONVERTERS}
+            or (callee[0] in _NP_ALIASES and suffix in ("asarray", "array"))
+        ):
+            roots = set()
+            for arg in node.args:
+                roots |= _root_names(arg)
+            hit = roots & traced_params
+            if hit:
+                self._emit(
+                    "host-sync-under-trace", node, context,
+                    f"{'.'.join(callee)}() of traced value(s) "
+                    f"{sorted(hit)} pulls them to host (or raises a "
+                    "TracerConversionError) under trace",
+                )
+        elif len(callee) >= 2 and callee[0] in _NP_ALIASES and \
+                callee[1] == "random":
+            self._emit(
+                "python-rng-under-trace", node, context,
+                f"{'.'.join(callee)} draws on the HOST at trace time — the "
+                "compiled program replays one fixed value; use jax.random",
+            )
+        elif len(callee) == 2 and callee[0] == "random":
+            self._emit(
+                "python-rng-under-trace", node, context,
+                f"{'.'.join(callee)} draws on the host at trace time; use "
+                "jax.random",
+            )
+        elif len(callee) == 2 and callee[0] == "time" and callee[1] in (
+            "time", "perf_counter", "monotonic", "time_ns",
+            "perf_counter_ns", "monotonic_ns",
+        ):
+            self._emit(
+                "time-under-trace", node, context,
+                f"time.{callee[1]}() under trace is evaluated ONCE at trace "
+                "time and baked into the compiled program",
+            )
+
+    # ------------------------------- rule: scalar-closure-capture -----
+    def _check_scalar_captures(self, info: _FunctionInfo):
+        """A traced fn whose free variable is bound in an enclosing factory
+        as float(...)/int(...) OF A FACTORY PARAMETER — a per-call scalar
+        baked as a compile constant. Literal constants are deliberate
+        statics and stay allowed."""
+        if info.parent is None:
+            return
+        bound = _assigned_names(info.node)
+        free = {
+            n.id for n in ast.walk(info.node)
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)
+            and n.id not in bound
+        }
+        if not free:
+            return
+        anc = info.parent
+        while anc is not None:
+            anc_params = set(anc.params)
+            for stmt in ast.walk(anc.node):
+                if not isinstance(stmt, ast.Assign):
+                    continue
+                targets = [
+                    t.id for t in stmt.targets if isinstance(t, ast.Name)
+                ]
+                captured = [t for t in targets if t in free]
+                if not captured:
+                    continue
+                val = stmt.value
+                if isinstance(val, ast.Call) and _dotted(val.func) in {
+                    ("float",), ("int",)
+                }:
+                    arg_roots = set()
+                    for a in val.args:
+                        arg_roots |= _root_names(a)
+                    if arg_roots & anc_params:
+                        self._emit(
+                            "scalar-closure-capture", stmt,
+                            info.node.name,
+                            f"{captured[0]} = "
+                            f"{_dotted(val.func)[0]}(...) of factory "
+                            f"parameter(s) {sorted(arg_roots & anc_params)} "
+                            f"is captured by traced fn "
+                            f"{info.node.name!r} as a compile constant — "
+                            "pass it as a traced arg or const lane",
+                        )
+            # names bound in this ancestor are not free above it
+            free -= set(anc.params) | _assigned_names(anc.node)
+            anc = anc.parent
+
+
+def default_targets(repo_root: Path) -> List[Path]:
+    """The lint scope: src/repro + benchmarks (tests write fixtures freely)."""
+    targets = []
+    for sub in ("src/repro", "benchmarks"):
+        base = repo_root / sub
+        if base.exists():
+            targets.extend(sorted(base.rglob("*.py")))
+    return targets
+
+
+def run_lint(repo_root: Path, paths: Optional[List[Path]] = None
+             ) -> List[Finding]:
+    findings: List[Finding] = []
+    for path in (paths or default_targets(repo_root)):
+        findings.extend(Linter(path, repo_root).run())
+    return findings

@@ -30,6 +30,8 @@ import jax
 import ml_dtypes  # noqa: F401 — registers bfloat16 etc. with np.dtype()
 import numpy as np
 
+from repro.ioutils import atomic_write
+
 
 def _flatten_with_paths(tree):
     flat = jax.tree_util.tree_leaves_with_path(tree)
@@ -68,15 +70,16 @@ def save_checkpoint(
         arr = np.ascontiguousarray(arr)
         # raw-bytes storage: np.save corrupts extension dtypes (bfloat16);
         # the manifest carries dtype/shape for reconstruction
+        # analysis: allow(non-atomic-artifact-write) — writes land in the
+        # uncommitted `<step>.tmp/` staging dir; the directory rename below
+        # is the atomic commit, so per-leaf files never exist at a final path
         np.save(tmp / _leaf_filename(i), arr.reshape(-1).view(np.uint8))
         manifest["leaves"].append(
             {"path": path, "file": _leaf_filename(i), "shape": shape,
              "dtype": str(arr.dtype)}
         )
-    with open(tmp / "manifest.json", "w") as f:
+    with atomic_write(tmp / "manifest.json", "w") as f:
         json.dump(manifest, f)
-        f.flush()
-        os.fsync(f.fileno())
     if final.exists():
         shutil.rmtree(final)
     os.rename(tmp, final)  # atomic commit

@@ -4,7 +4,8 @@ The paper's algorithm, verbatim in structure:
 
   repeat until `target_accepted` samples accepted:
     theta  ~ prior, vectorized          [B, p]
-    D_s    ~ simulator(theta)           [B, 3, T]   (or fused distance)
+    D_s    ~ simulator(theta)           [B, n_obs, T]  (or fused distance;
+                                        n_obs = 3 for the paper's SIARD)
     dist   = ||D_s - D||                [B]
     accept = dist <= tolerance
     return samples to host under a *fixed-shape* strategy (XLA constraint):
@@ -31,7 +32,7 @@ Two wave-loop drivers share the per-wave math:
 
 The engine is resumable (ABCState) and backend-pluggable:
   backend="xla"        paper-faithful full-trajectory simulate + distance
-  backend="xla_fused"  running-distance scan (no [B,3,T] materialization)
+  backend="xla_fused"  running-distance scan (no [B, n_obs, T] tensor)
   backend="pallas"     fused VMEM-resident Pallas kernel (repro.kernels)
 
 Every backend accepts every registered (summary, distance) pair
@@ -45,8 +46,6 @@ with the weights/selectors riding scalar const lanes. The default
 from __future__ import annotations
 
 import dataclasses
-import os
-import tempfile
 import time
 import zipfile
 from typing import Callable, NamedTuple, Optional, Tuple
@@ -70,6 +69,7 @@ from repro.epi import engine
 from repro.epi.data import CountryData
 from repro.epi.models import get_model
 from repro.epi.spec import InterventionSchedule
+from repro.ioutils import atomic_write
 
 Array = jax.Array
 
@@ -653,28 +653,16 @@ class ABCState:
         )
 
     def save(self, path: str) -> None:
-        """Atomic save: write to a temp file in the same directory, fsync,
-        then rename over the target. An interrupted save (crash, preemption
-        mid-campaign) can never leave a truncated checkpoint at `path` — the
-        previous complete file, if any, survives."""
+        """Atomic save via the shared `repro.ioutils.atomic_write` helper:
+        an interrupted save (crash, preemption mid-campaign) can never leave
+        a truncated checkpoint at `path` — the previous complete file, if
+        any, survives."""
         th, d = self.to_arrays()
-        directory = os.path.dirname(os.path.abspath(path)) or "."
-        fd, tmp = tempfile.mkstemp(
-            prefix=os.path.basename(path) + ".", suffix=".tmp", dir=directory
-        )
-        try:
-            with os.fdopen(fd, "wb") as f:
-                np.savez(
-                    f, run_idx=self.run_idx, simulations=self.simulations,
-                    theta=th, dist=d,
-                )
-                f.flush()
-                os.fsync(f.fileno())
-            os.replace(tmp, path)  # atomic commit
-        except BaseException:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
-            raise
+        with atomic_write(path, "wb") as f:
+            np.savez(
+                f, run_idx=self.run_idx, simulations=self.simulations,
+                theta=th, dist=d,
+            )
 
     _REQUIRED_KEYS = ("run_idx", "simulations", "theta", "dist")
 

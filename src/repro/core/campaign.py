@@ -60,6 +60,7 @@ from repro.core.summaries import get_summary
 from repro.epi.data import get_dataset
 from repro.epi.models import get_model
 from repro.epi.spec import InterventionSchedule
+from repro.ioutils import atomic_write_text
 
 
 @dataclasses.dataclass(frozen=True)
@@ -263,8 +264,6 @@ class CampaignReport:
     compiled_shapes: int = 0
 
     def save(self, path: str | Path) -> Path:
-        path = Path(path)
-        path.parent.mkdir(parents=True, exist_ok=True)
         payload = {
             "config": self.config,
             "wall_time_s": self.wall_time_s,
@@ -274,10 +273,9 @@ class CampaignReport:
         # allow_nan=False keeps the artifact strict JSON (a stray NaN/inf
         # would otherwise serialize as a non-JSON literal and break every
         # downstream consumer of the nightly artifact)
-        path.write_text(
-            json.dumps(_jsonable(payload), indent=1, allow_nan=False)
+        return atomic_write_text(
+            path, json.dumps(_jsonable(payload), indent=1, allow_nan=False)
         )
-        return path
 
     def summary_table(self) -> str:
         headers = [

@@ -1,7 +1,9 @@
 """Batched distance functions between simulated and observed data.
 
-The paper uses the Euclidean distance over the flattened [3, T] observed
-channels (A, R, D). We also provide normalized variants used in ablations.
+The paper uses the Euclidean distance over the flattened observed channels
+— [3, T] = (A, R, D) for its SIARD model; every function here is generic
+over the channel count, so the shapes below are [B, C, T] with C the
+model's n_observed. We also provide normalized variants used in ablations.
 """
 
 from __future__ import annotations
@@ -10,16 +12,16 @@ import jax.numpy as jnp
 
 
 def euclidean_distance(simulated: jnp.ndarray, observed: jnp.ndarray) -> jnp.ndarray:
-    """dist(D_s, D) = ||D_s - D||_2 over the trailing [3, T] axes.
+    """dist(D_s, D) = ||D_s - D||_2 over the trailing [C, T] axes.
 
-    simulated: [B, 3, T]; observed: [3, T]  ->  [B].
+    simulated: [B, C, T]; observed: [C, T]  ->  [B].
     """
     diff = simulated - observed[None]
     return jnp.sqrt(jnp.sum(diff * diff, axis=(-2, -1)))
 
 
 def mean_absolute_distance(simulated: jnp.ndarray, observed: jnp.ndarray) -> jnp.ndarray:
-    """Mean absolute error over channels x days. [B, 3, T], [3, T] -> [B]."""
+    """Mean absolute error over channels x days. [B, C, T], [C, T] -> [B]."""
     diff = jnp.abs(simulated - observed[None])
     return jnp.mean(diff, axis=(-2, -1))
 

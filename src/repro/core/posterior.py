@@ -3,12 +3,12 @@
 from __future__ import annotations
 
 import dataclasses
-import os
-import tempfile
 import zipfile
 from typing import Dict, Optional, Sequence
 
 import numpy as np
+
+from repro.ioutils import atomic_write
 
 
 @dataclasses.dataclass
@@ -90,12 +90,12 @@ class Posterior:
         return "\n".join(rows)
 
     def save(self, path: str) -> None:
-        """Atomic save (the ABCState.save pattern): write to a temp file in
-        the target directory, fsync, then rename over `path`. A crash
-        mid-write can never leave a truncated file — essential once
-        posteriors back a serving cache. Writing through a file object also
-        keeps the EXACT path given (bare np.savez silently appends ".npz"
-        when the suffix is missing, so load(path) would miss save(path))."""
+        """Atomic save through the shared `repro.ioutils.atomic_write`
+        helper: a crash mid-write can never leave a truncated file at `path`
+        — essential once posteriors back a serving cache — and writing
+        through a file object keeps the EXACT path given (a bare np.savez
+        silently appends ".npz" when the suffix is missing, so load(path)
+        would miss save(path))."""
         arrays = dict(
             theta=self.theta,
             distances=self.distances,
@@ -107,20 +107,8 @@ class Posterior:
         )
         if self.weights is not None:
             arrays["weights"] = self.weights
-        directory = os.path.dirname(os.path.abspath(path)) or "."
-        fd, tmp = tempfile.mkstemp(
-            prefix=os.path.basename(path) + ".", suffix=".tmp", dir=directory
-        )
-        try:
-            with os.fdopen(fd, "wb") as f:
-                np.savez(f, **arrays)
-                f.flush()
-                os.fsync(f.fileno())
-            os.replace(tmp, path)  # atomic commit
-        except BaseException:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
-            raise
+        with atomic_write(path, "wb") as f:
+            np.savez(f, **arrays)
 
     _REQUIRED_KEYS = (
         "theta", "distances", "tolerance", "param_names", "runs",

@@ -48,14 +48,12 @@ from repro.core.abc import (
     WaveLoopOutput,
     WaveRunner,
     calibrate_tolerance,
-    make_simulator,
     run_abc,
     wave_capacity,
     wave_loop_body,
 )
-from repro.core.priors import UniformBoxPrior, schedule_prior
+from repro.core.priors import UniformBoxPrior
 from repro.epi.data import get_dataset
-from repro.epi.models import get_model
 
 
 def device_mesh(n: int, devices: Optional[Sequence] = None) -> Mesh:

@@ -37,7 +37,6 @@ import dataclasses
 import hashlib
 import json
 import os
-import tempfile
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -52,6 +51,7 @@ from repro.core.summaries import get_summary
 from repro.epi import engine
 from repro.epi.data import CountryData, get_dataset
 from repro.epi.models import get_model
+from repro.ioutils import atomic_write_text as _atomic_write_text
 from repro.epi.spec import EpiModelConfig, InterventionSchedule
 
 # --------------------------------------------------------------- particles
@@ -141,6 +141,9 @@ class ForecastKernelCache:
         # closure with their own traced breakpoints + theta scale columns
         sched = None if fc_sched is None or fc_sched.is_empty else fc_sched
         n_windows = 0 if sched is None else sched.n_windows
+        # analysis: allow(scalar-closure-capture) — total_days is part of
+        # key_of(), so baking it is the cache design: one compile per
+        # forecast length, keyed, never a silent recompile
         days = int(total_days)
 
         def core(theta, key_, population, a0, r0, d0, breakpoints):
@@ -367,24 +370,6 @@ def load_dataset_file(path: str, model=None) -> CountryData:
             )
         ds = dataclasses.replace(ds, model=spec.name)
     return ds
-
-
-def _atomic_write_text(path: str, text: str) -> None:
-    directory = os.path.dirname(os.path.abspath(path)) or "."
-    os.makedirs(directory, exist_ok=True)
-    fd, tmp = tempfile.mkstemp(
-        prefix=os.path.basename(path) + ".", suffix=".tmp", dir=directory
-    )
-    try:
-        with os.fdopen(fd, "w") as f:
-            f.write(text)
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, path)
-    except BaseException:
-        if os.path.exists(tmp):
-            os.unlink(tmp)
-        raise
 
 
 # ------------------------------------------------------------------ store

@@ -63,7 +63,6 @@ import dataclasses
 import functools
 import json
 import os
-import tempfile
 import time
 from pathlib import Path
 from typing import Callable, Dict, Optional, Tuple
@@ -73,6 +72,7 @@ import jax.numpy as jnp
 import numpy as np
 
 # accelerator ceilings (TPU v5e class) shared with benchmarks/roofline.py
+from repro.ioutils import atomic_write
 from repro.launch.analysis import HBM_BW, PEAK_FLOPS
 
 _REPO = Path(__file__).resolve().parents[3]
@@ -418,21 +418,9 @@ class TuningCache:
     def put(self, key: str, entry: Dict) -> None:
         self._load()
         self._entries[key] = entry
-        self.path.parent.mkdir(parents=True, exist_ok=True)
         payload = {"schema": CACHE_SCHEMA, "entries": self._entries}
-        fd, tmp = tempfile.mkstemp(
-            prefix=self.path.name + ".", suffix=".tmp", dir=str(self.path.parent)
-        )
-        try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(payload, f, indent=1, sort_keys=True)
-                f.flush()
-                os.fsync(f.fileno())
-            os.replace(tmp, self.path)
-        except BaseException:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
-            raise
+        with atomic_write(self.path, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
 
 
 # --------------------------------------------------------------------------

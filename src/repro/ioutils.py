@@ -1,0 +1,65 @@
+"""The ONE atomic-artifact-write helper (repo contract, enforced by lint).
+
+Three PRs in a row shipped fixes for the same bug class: an artifact
+(posterior .npz, tuning cache, campaign report) written with a bare
+``np.savez``/``json.dump``/``open(path, "w")`` that an interrupted process
+leaves truncated at its final path — and every fix re-implemented the same
+tmp + fsync + rename dance locally. This module factors that dance out of
+``core/posterior.py``, ``core/tuning.py`` and ``checkpoint/checkpointer.py``
+into one helper, and ``repro.analysis`` lints the rest of the tree so a new
+bare write cannot land (rule ``non-atomic-artifact-write``).
+
+Contract: within ``atomic_write`` the file object points at a temp file in
+the TARGET directory (same filesystem, so the final rename is atomic); on a
+clean exit the data is flushed + fsynced and renamed over ``path`` in one
+``os.replace``; on any error the temp file is removed and the previous
+complete artifact, if any, survives untouched. Writing through a file
+object also keeps the EXACT path given (a bare ``np.savez(path)`` silently
+appends ".npz" when the suffix is missing, so ``load(path)`` would miss
+``save(path)`` — the PR 7 ``Posterior.save`` bug).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+import tempfile
+from pathlib import Path
+from typing import IO, Iterator
+
+
+@contextlib.contextmanager
+def atomic_write(path: str | os.PathLike, mode: str = "w") -> Iterator[IO]:
+    """Context manager yielding a temp-file object committed to `path`.
+
+    ``mode`` is "w" (text) or "wb" (binary). The parent directory is created
+    if missing. Usage::
+
+        with atomic_write(out, "wb") as f:
+            np.savez(f, **arrays)
+    """
+    if mode not in ("w", "wb"):
+        raise ValueError(f"atomic_write mode must be 'w' or 'wb', got {mode!r}")
+    path = os.fspath(path)
+    directory = os.path.dirname(os.path.abspath(path)) or "."
+    os.makedirs(directory, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(
+        prefix=os.path.basename(path) + ".", suffix=".tmp", dir=directory
+    )
+    try:
+        with os.fdopen(fd, mode) as f:
+            yield f
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)  # atomic commit
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def atomic_write_text(path: str | os.PathLike, text: str) -> Path:
+    """Atomically replace `path` with `text` (the JSON-artifact one-liner)."""
+    with atomic_write(path, "w") as f:
+        f.write(text)
+    return Path(path)

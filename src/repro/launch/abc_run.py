@@ -29,8 +29,9 @@ from repro.core.abc import ABCConfig, ABCState, run_abc
 from repro.core.distributed import make_runner, make_wave_runner
 from repro.core.summaries import DISTANCE_KINDS, list_summaries
 from repro.epi.data import get_dataset
-from repro.epi.models import get_model, list_models
+from repro.epi.models import list_models
 from repro.epi.spec import InterventionSchedule
+from repro.ioutils import atomic_write_text
 from repro.launch.mesh import make_host_mesh
 
 
@@ -140,8 +141,6 @@ def run_scaling_cli(args):
     XLA_FLAGS=--xla_force_host_platform_device_count=N) and reports
     parallel_efficiency / scaling_overhead_pct per (model, backend) cell.
     """
-    import os
-
     from repro.core.scaling import (
         ScalingConfig,
         format_report,
@@ -165,9 +164,9 @@ def run_scaling_cli(args):
     print()
     print(format_report(report))
     if args.scaling_out:
-        os.makedirs(os.path.dirname(args.scaling_out) or ".", exist_ok=True)
-        with open(args.scaling_out, "w") as f:
-            json.dump(report, f, indent=1, allow_nan=False)
+        atomic_write_text(
+            args.scaling_out, json.dumps(report, indent=1, allow_nan=False)
+        )
         print(f"[scaling] report saved to {args.scaling_out}")
     return report
 
@@ -450,11 +449,7 @@ def main(argv=None):
         )
         text = json.dumps(bands, indent=1, allow_nan=False)
         if args.forecast_out:
-            import os
-
-            os.makedirs(os.path.dirname(args.forecast_out) or ".", exist_ok=True)
-            with open(args.forecast_out, "w") as f:
-                f.write(text)
+            atomic_write_text(args.forecast_out, text)
             print(f"[abc] forecast bands saved to {args.forecast_out}")
         else:
             print(text)

@@ -20,8 +20,9 @@ import time
 import traceback
 from pathlib import Path
 
-import jax
+import jax  # noqa: F401  (locks the forced device count before other imports)
 
+from repro.ioutils import atomic_write_text
 from repro.launch.analysis import roofline_from_compiled
 from repro.launch.mesh import make_production_mesh, set_mesh_compat
 from repro.launch.shapes import SHAPES, SHAPE_ORDER, applicable
@@ -118,7 +119,7 @@ def main():
                 try:
                     rec = run_cell(arch, shape_name, multi_pod, tag=args.tag,
                                    microbatch=args.microbatch)
-                    path.write_text(json.dumps(rec, indent=1))
+                    atomic_write_text(path, json.dumps(rec, indent=1))
                     r = rec["roofline"]
                     print(
                         f"OK    {label}: compile={rec['compile_s']:.0f}s "
@@ -134,7 +135,9 @@ def main():
                            "mesh": "2x16x16" if multi_pod else "16x16",
                            "status": "fail", "error": f"{type(e).__name__}: {e}",
                            "traceback": traceback.format_exc()[-3000:]}
-                    path.with_suffix(".fail.json").write_text(json.dumps(err, indent=1))
+                    atomic_write_text(
+                        path.with_suffix(".fail.json"), json.dumps(err, indent=1)
+                    )
                     print(f"FAIL  {label}: {type(e).__name__}: {str(e)[:300]}", flush=True)
     print(f"\ndry-run complete: ok={n_ok} skip={n_skip} fail={n_fail}")
     if n_fail:

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ioutils import atomic_write_text
 from repro.launch.mesh import make_host_mesh, set_mesh_compat
 from repro.models.registry import get_model
 
@@ -194,11 +195,7 @@ def run_epi_cli(args):
         {"responses": responses, "stats": stats}, indent=1, allow_nan=False
     )
     if args.out:
-        import os
-
-        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
-        with open(args.out, "w") as f:
-            f.write(text)
+        atomic_write_text(args.out, text)
         print(f"[serve] {len(responses)} responses saved to {args.out}",
               file=sys.stderr)
     else:

@@ -13,12 +13,10 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from functools import partial
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models import common as cm
 from repro.models import moe as moe_lib

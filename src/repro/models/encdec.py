@@ -7,7 +7,6 @@ sinusoidal encoder positions, learned decoder positions, MHA (kv == heads).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ feature of the Zamba family — is kept.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -20,8 +20,7 @@ logic is pure-python and fully unit-tested (tests/test_runtime.py).
 from __future__ import annotations
 
 import dataclasses
-import heapq
-from typing import Callable, Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Set
 
 
 @dataclasses.dataclass

@@ -1,0 +1,49 @@
+#!/usr/bin/env python
+"""CI gate over the static-analysis passes (modeled on check_new_failures).
+
+Runs the AST lint pass and the jaxpr trace auditor (src/repro/analysis) and
+compares every finding key against the committed baseline
+`tests/analysis_baseline.txt`. The job:
+
+  * FAILS (exit 1) if any finding is not in the baseline — a new contract
+    violation is caught at PR time;
+  * FAILS (exit 1) if a baseline entry matches no finding — a stale entry
+    is a fixed violation still allowlisted, i.e. a site that could regress
+    silently. Delete the line;
+  * PASSES only when findings and baseline agree exactly (both empty, in
+    the healthy state).
+
+Usage (what CI runs):
+
+    PYTHONPATH=src python tests/check_analysis.py            # both passes
+    PYTHONPATH=src python tests/check_analysis.py --pass lint
+    PYTHONPATH=src python tests/check_analysis.py --quick    # axis-coverage
+    PYTHONPATH=src python tests/check_analysis.py --json-out report.json
+
+The gate decision itself is `repro.analysis.report.evaluate` — a pure
+function of (baseline keys, findings) unit-tested by
+tests/test_analysis_rules.py; this script only wires the committed baseline
+path in front of `python -m repro.analysis`.
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+HERE = Path(__file__).resolve().parent
+BASELINE = HERE / "analysis_baseline.txt"
+sys.path.insert(0, str(HERE.parent / "src"))
+
+from repro.analysis.__main__ import main as analysis_main  # noqa: E402
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if not any(a == "--baseline" or a.startswith("--baseline=") for a in argv):
+        argv = ["--baseline", str(BASELINE)] + argv
+    return analysis_main(argv)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

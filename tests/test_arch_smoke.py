@@ -152,7 +152,6 @@ def test_param_counts_plausible():
 
 def test_kv_quant_decode_matches_bf16(monkeypatch):
     """int8 KV cache decode stays close to the bf16-cache decode."""
-    import os
     model = get_model("internlm2-20b", smoke=True)
     params = model.init_params(jax.random.PRNGKey(0))
     batch = {"tokens": jnp.ones((2, 1), jnp.int32),

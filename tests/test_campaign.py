@@ -1,7 +1,6 @@
 """Campaign subsystem: grid fan-out, compile reuse, checkpoint/resume,
 aggregated report (the acceptance surface of the multi-scenario runner)."""
 
-import dataclasses
 import json
 from pathlib import Path
 

@@ -1,9 +1,5 @@
 """Checkpoint/restore: atomicity, async overlap, keep-k GC, elastic reshard."""
 
-import json
-import os
-import shutil
-import threading
 
 import jax
 import jax.numpy as jnp

@@ -4,7 +4,6 @@ on a partially accepting final wave, and the 1-device-mesh degenerate."""
 
 import jax
 import numpy as np
-import pytest
 
 from conftest import run_in_subprocess
 from repro.core.abc import ABCConfig, ABCState, run_abc

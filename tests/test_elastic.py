@@ -1,7 +1,6 @@
 """Elastic rescale: a checkpoint written on one topology restores onto a
 different device count with the new mesh's shardings (reshard-on-load)."""
 
-import numpy as np
 import pytest
 
 from conftest import run_in_subprocess

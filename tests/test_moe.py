@@ -3,9 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.models import moe as moe_lib
 from repro.models.moe import MoEConfig, init_moe, moe_ffn, moe_ffn_global
 
 

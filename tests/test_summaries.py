@@ -20,7 +20,6 @@ from repro.core.abc import ABCConfig, make_simulator, run_abc
 from repro.core.distances import DISTANCES
 from repro.core.priors import paper_prior
 from repro.core.summaries import (
-    DISTANCE_KINDS,
     SUMMARIES,
     SummarySpec,
     apply_summary,
@@ -28,7 +27,6 @@ from repro.core.summaries import (
     get_summary,
     lower_summary,
     num_bins,
-    summary_distance,
     summary_pairs,
 )
 from repro.epi import engine

@@ -1,11 +1,21 @@
-"""Cross-model simulator throughput: every registry model x every backend.
+"""Cross-model simulator throughput: every registry model x every backend,
+plus the spatial-metapopulation region-scaling cells.
 
     PYTHONPATH=src python benchmarks/bench_model_sweep.py [--batch 16384]
 
 Times the batched theta -> distance simulator (one ABC run's inner loop) for
 each registered compartmental model on the xla / xla_fused / pallas
 backends, reporting simulations per second and the per-model state/param
-dimensions that size the kernel's VMEM tiles.
+dimensions that size the kernel's VMEM tiles. The metapop cells regionalize
+`metapop_seir` to R in --metapop-regions (ring mobility) on xla_fused —
+the backend that covers every R (the pallas kernel's const-lane budget caps
+it at R<=10) — tracking how throughput decays as the state width grows
+R-fold.
+
+Emits the gate-compatible `bench-artifact/v1` envelope: every cell carries
+`wall_s` + roofline fields (repro.core.tuning cost model), diffed against
+`experiments/bench/baselines/model_sweep.json` by
+tests/check_bench_regression.py.
 """
 
 import argparse
@@ -15,13 +25,33 @@ from pathlib import Path
 import jax
 
 sys.path.insert(0, str(Path(__file__).resolve().parent))
-from common import render_table, save_result, time_fn  # noqa: E402
+from _harness import emit_artifact, roofline_fields  # noqa: E402
+from common import render_table, time_fn  # noqa: E402
 
 from repro.core.abc import ABCConfig, make_simulator  # noqa: E402
 from repro.epi.data import get_dataset  # noqa: E402
 from repro.epi.models import get_model, list_models  # noqa: E402
+from repro.epi.spec import regionalize  # noqa: E402
 
 DAYS = 20
+
+
+def _bench_cell(spec, ds, backend: str, batch: int):
+    """Time one (spec, backend) simulator cell; returns the cell dict."""
+    theta = spec.prior().sample(jax.random.PRNGKey(0), (batch,))
+    key = jax.random.PRNGKey(1)
+    cfg = ABCConfig(batch_size=batch, num_days=DAYS, chunk_size=batch,
+                    backend=backend, model=spec)
+    sim = jax.jit(make_simulator(ds, cfg))
+    t = time_fn(sim, theta, key, warmup=1, iters=3)
+    sps = batch / t["min_s"]
+    return {
+        "wall_s": t["min_s"],
+        "sims_per_s": sps,
+        "batch": batch,
+        "days": DAYS,
+        **roofline_fields(spec, DAYS, batch, t["min_s"]),
+    }
 
 
 def main(argv=None):
@@ -29,28 +59,56 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=16384)
     ap.add_argument("--backends", nargs="+",
                     default=["xla", "xla_fused", "pallas"])
+    ap.add_argument("--metapop-regions", nargs="+", type=int,
+                    default=[1, 10, 100],
+                    help="region counts of the metapop_seir scaling cells "
+                         "(xla_fused; empty list skips them)")
+    ap.add_argument("--metapop-batch", type=int, default=None,
+                    help="batch for the metapop cells (default: --batch; "
+                         "R=100 widens state 100x, so large batches are "
+                         "slow on CPU)")
     args = ap.parse_args(argv)
 
-    rows, payload = [], []
+    rows, cells = [], {}
     for name in list_models():
         spec = get_model(name)
         ds = get_dataset("synthetic_small", num_days=DAYS, model=name)
-        theta = spec.prior().sample(jax.random.PRNGKey(0), (args.batch,))
-        key = jax.random.PRNGKey(1)
         for backend in args.backends:
-            cfg = ABCConfig(batch_size=args.batch, num_days=DAYS,
-                            chunk_size=args.batch, backend=backend, model=name)
-            sim = jax.jit(make_simulator(ds, cfg))
-            t = time_fn(sim, theta, key, warmup=1, iters=3)
-            sps = args.batch / t["min_s"]
-            rows.append([name, spec.n_state, spec.n_params, backend,
-                         f"{t['min_s']*1e3:.1f}", f"{sps:,.0f}"])
-            payload.append({"model": name, "backend": backend,
-                            "batch": args.batch, "days": DAYS, **t,
-                            "sims_per_s": sps})
+            cell = _bench_cell(spec, ds, backend, args.batch)
+            cells[f"{name}/{backend}"] = cell
+            rows.append([name, spec.total_state, spec.n_params, backend,
+                         f"{cell['wall_s']*1e3:.1f}",
+                         f"{cell['sims_per_s']:,.0f}"])
+
+    # region-scaling cells: metapop_seir regionalized to each R, ring
+    # mobility; xla_fused covers every R (pallas lane budget caps R at 10)
+    mp_batch = args.metapop_batch or args.batch
+    for n_regions in args.metapop_regions:
+        spec = regionalize(get_model("metapop_seir"), n_regions, "ring:0.1")
+        ds = get_dataset("synthetic_small", num_days=DAYS, model=spec)
+        cell = _bench_cell(spec, ds, "xla_fused", mp_batch)
+        cells[f"metapop_seir_r{n_regions}/xla_fused"] = cell
+        rows.append([f"metapop_seir_r{n_regions}", spec.total_state,
+                     spec.n_params, "xla_fused",
+                     f"{cell['wall_s']*1e3:.1f}",
+                     f"{cell['sims_per_s']:,.0f}"])
+
     print(render_table(
-        ["model", "n_state", "n_params", "backend", "min_ms", "sims/s"], rows))
-    path = save_result("model_sweep", payload)
+        ["model", "total_state", "n_params", "backend", "min_ms", "sims/s"],
+        rows))
+    # parity: the swept registry and region axis — deterministic by
+    # construction, so silent benchmark narrowing trips the gate
+    parity = {
+        "registry_models": sorted(list_models()),
+        "metapop_regions": sorted(args.metapop_regions),
+    }
+    path = emit_artifact(
+        "model_sweep",
+        cells=cells,
+        parity=parity,
+        meta={"batch": args.batch, "metapop_batch": mp_batch, "days": DAYS,
+              "backends": args.backends},
+    )
     print(f"\nsaved {path}")
 
 

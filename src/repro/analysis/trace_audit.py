@@ -256,12 +256,17 @@ class Combo:
     summary: Optional[str]
     distance: str
     sched_shape: int  # number of intervention windows (0 = no schedule)
+    #: regionalize the model to this R at audit time (1 = as registered;
+    #: note metapop_seir is ALREADY 4-region as registered, so the model
+    #: axis audits the regional path even at regions=1)
+    regions: int = 1
 
     @property
     def tag(self) -> str:
         return (
             f"{self.model}/{self.backend}/{self.summary or 'identity'}/"
             f"{self.distance}/sched{self.sched_shape}"
+            + (f"/r{self.regions}" if self.regions > 1 else "")
         )
 
 
@@ -277,12 +282,24 @@ def registered_combos(quick: bool = False) -> List[Combo]:
     distances = list(DISTANCE_KINDS)
     sched_shapes = [0, 2]
     if not quick:
-        return [
+        full = [
             Combo(m, b, su, d, ss)
             for m, b, su, d, ss in itertools.product(
                 models, backends, summaries, distances, sched_shapes
             )
         ]
+        # region-axis column: audit regionalize-at-audit-time cells (a
+        # coupled metapop and an uncoupled base model) across every backend
+        # and both pooling modes — a bounded slice, not a full R axis of
+        # the cross product
+        full += [
+            Combo(m, b, su, distances[0], ss, regions=3)
+            for m in ("metapop_seir", "seir") if m in models
+            for b in backends
+            for su in (None, "region_pooled")
+            for ss in sched_shapes
+        ]
+        return full
     base = Combo(models[0], "xla_fused", None, distances[0], 0)
     combos = {base}
     for m in models:
@@ -295,16 +312,32 @@ def registered_combos(quick: bool = False) -> List[Combo]:
         combos.add(dataclasses.replace(base, distance=d))
     for ss in sched_shapes:
         combos.add(dataclasses.replace(base, sched_shape=ss))
+    # region-axis coverage: one coupled and one uncoupled regionalized cell
+    if "metapop_seir" in models:
+        combos.add(dataclasses.replace(
+            base, model="metapop_seir", regions=3, summary="region_pooled"
+        ))
+    if "seir" in models:
+        combos.add(dataclasses.replace(base, model="seir", regions=3))
     return sorted(combos, key=lambda c: c.tag)
 
 
-def _schedule_for(shape: int, days: Sequence[int], model: str):
+def _resolve_spec(combo: Combo):
+    """The combo's model spec, regionalized at audit time if regions > 1."""
+    from repro.epi.models import get_model
+    from repro.epi.spec import regionalize
+
+    spec = get_model(combo.model)
+    if combo.regions > 1:
+        spec = regionalize(spec, combo.regions, "ring:0.1")
+    return spec
+
+
+def _schedule_for(shape: int, days: Sequence[int], spec):
     if shape == 0:
         return None
-    from repro.epi.models import get_model
     from repro.epi.spec import InterventionSchedule
 
-    spec = get_model(model)
     return InterventionSchedule.inferred(
         (spec.param_names[0],), tuple(days[:shape])
     )
@@ -322,23 +355,22 @@ def _build_combo(combo: Combo, batch_size: int, num_days: int,
     )
     from repro.core.priors import schedule_prior
     from repro.epi.data import get_dataset
-    from repro.epi.models import get_model
 
+    spec = _resolve_spec(combo)
     cfg = ABCConfig(
         batch_size=batch_size,
         chunk_size=batch_size,
         num_days=num_days,
         backend=combo.backend,
-        model=combo.model,
+        model=spec,
         summary=combo.summary,
         distance=combo.distance,
-        schedule=_schedule_for(combo.sched_shape, sched_days, combo.model),
+        schedule=_schedule_for(combo.sched_shape, sched_days, spec),
         wave_loop="device",
         interpret=True if combo.backend == "pallas" else None,
     )
-    spec = get_model(combo.model)
     prior = schedule_prior(spec, cfg.schedule)
-    dataset = get_dataset("synthetic_small", num_days, combo.model)
+    dataset = get_dataset("synthetic_small", num_days, spec)
     if combo.backend == "pallas":
         sim = make_simulator(dataset, cfg)
         loop = build_wave_loop(prior, lambda th, k, _d: sim(th, k), cfg)
@@ -368,10 +400,9 @@ def _scenario_variants(combo: Combo, cfg, num_days: int):
     dataset AND different breakpoint days of the same window count."""
     from repro.core.abc import scenario_data
     from repro.epi.data import get_dataset, synthetic_dataset
-    from repro.epi.models import get_model
 
-    spec = get_model(combo.model)
-    ds_a = get_dataset("synthetic_small", num_days, combo.model)
+    spec = _resolve_spec(combo)
+    ds_a = get_dataset("synthetic_small", num_days, spec)
     ds_b = synthetic_dataset(
         theta=spec.default_theta, population=5e6, num_days=num_days,
         a0=50.0, seed=11, name="audit_variant", model=spec,
@@ -379,7 +410,7 @@ def _scenario_variants(combo: Combo, cfg, num_days: int):
     variants = [scenario_data(ds_a, cfg), scenario_data(ds_b, cfg)]
     if combo.sched_shape:
         cfg_late = dataclasses.replace(
-            cfg, schedule=_schedule_for(combo.sched_shape, (9, 19), combo.model)
+            cfg, schedule=_schedule_for(combo.sched_shape, (9, 19), spec)
         )
         variants.append(scenario_data(ds_a, cfg_late))
     return variants

@@ -63,6 +63,8 @@ from repro.core.summaries import (
     get_distance_kind,
     get_summary,
     lower_summary,
+    pool_channels,
+    pool_factor,
     summary_distance,
 )
 from repro.epi import engine
@@ -124,6 +126,12 @@ class ABCConfig:
     #: experiments/tuning/ at simulator-build time (repro.core.tuning);
     #: explicitly set tile/scan_unroll values always win over the cache
     autotune: bool = False
+    #: metapop models only: a row-stochastic [R, R] mobility matrix (nested
+    #: tuples) overriding the spec's static one — validated loudly here (rows
+    #: must sum to 1); None keeps the model's own matrix. The matrix is a
+    #: RUNTIME value on every backend (fconst lanes on pallas), so mobility
+    #: sweeps share one compilation.
+    mobility: Optional[Tuple[Tuple[float, ...], ...]] = None
 
     def __post_init__(self):
         if self.strategy not in ("outfeed", "topk"):
@@ -143,6 +151,17 @@ class ABCConfig:
             resolve_tile(self.batch_size, self.tile)
         if self.scan_unroll is not None and self.scan_unroll < 1:
             raise ValueError(f"scan_unroll must be >= 1, got {self.scan_unroll}")
+        if self.mobility is not None:
+            from repro.epi.spec import validate_mobility
+
+            # normalizes to nested float tuples (keeps the frozen config
+            # hashable) and raises loudly on non-row-stochastic rows; the
+            # region count must match the model's (checked at simulator
+            # build, where the spec is resolved)
+            object.__setattr__(
+                self, "mobility",
+                validate_mobility(self.mobility, len(self.mobility)),
+            )
         if self.wave_loop == "device" and self.strategy == "topk":
             # the device loop compacts EVERY sub-tolerance sample (outfeed
             # harvest semantics); it has no per-wave k cap, so pairing it
@@ -180,6 +199,23 @@ def run_param_names(cfg: ABCConfig, spec) -> Tuple[str, ...]:
 
 
 SimulatorFn = Callable[[Array, Array], Array]  # (theta [B,p], key) -> dist [B]
+
+
+def resolved_mobility(cfg: ABCConfig, spec) -> Optional[Array]:
+    """cfg.mobility as an [R, R] f32 array, checked against the spec's
+    region count; None defers to the spec's own (validated) matrix."""
+    if cfg.mobility is None:
+        return None
+    if not spec.is_regional:
+        raise ValueError(
+            f"cfg.mobility set but model {spec.name!r} has no region axis"
+        )
+    if len(cfg.mobility) != spec.n_regions:
+        raise ValueError(
+            f"cfg.mobility is {len(cfg.mobility)}x{len(cfg.mobility)} but "
+            f"model {spec.name!r} has {spec.n_regions} regions"
+        )
+    return jnp.asarray(cfg.mobility, jnp.float32)
 
 
 class ScenarioData(NamedTuple):
@@ -225,6 +261,8 @@ def make_parametric_simulator(spec, cfg: ABCConfig):
         )
     schedule = cfg.schedule
     summary = cfg.summary_spec
+    mob = resolved_mobility(cfg, spec)
+    pool = pool_factor(summary, spec.n_regions)
     # identity summaries keep the legacy full-trajectory distance functions
     # (bit-compat for all three registered distances); a real summary lowers
     # as a post-hoc transform on the paper-faithful path
@@ -238,18 +276,21 @@ def make_parametric_simulator(spec, cfg: ABCConfig):
         )
         if cfg.backend == "xla":
             sim = engine.simulate_observed(
-                spec, theta, key, mcfg, schedule, breakpoints
+                spec, theta, key, mcfg, schedule, breakpoints, mobility=mob
             )
             if dist_fn is not None:
                 return dist_fn(sim, observed)
-            lowered = lower_summary(summary, cfg.distance, observed)
+            lowered = lower_summary(
+                summary, cfg.distance, observed, n_regions=spec.n_regions
+            )
             return summary_distance(
-                cfg.distance, lowered, apply_summary(summary, sim)
+                cfg.distance, lowered,
+                apply_summary(summary, pool_channels(sim, pool, axis=-2)),
             )
         d, _ = engine.simulate_observed_lowmem(
             spec, theta, key, mcfg, observed, schedule, breakpoints,
             summary=summary, distance=cfg.distance,
-            unroll=cfg.scan_unroll or 1,
+            unroll=cfg.scan_unroll or 1, mobility=mob,
         )
         return d
 
@@ -310,6 +351,8 @@ def make_simulator(dataset: CountryData, cfg: ABCConfig) -> SimulatorFn:
     else:  # pallas
         from repro.kernels import ops as kernel_ops
 
+        mob = resolved_mobility(cfg, spec)
+
         def simulator(theta: Array, key: Array) -> Array:
             # The kernel uses a counter-based hash RNG; derive a 32-bit seed
             # from the threefry key so runs stay deterministic & resumable.
@@ -328,6 +371,7 @@ def make_simulator(dataset: CountryData, cfg: ABCConfig) -> SimulatorFn:
                 interpret=cfg.interpret,
                 summary=cfg.summary_spec,
                 distance=cfg.distance,
+                mobility=mob,
             )
 
     return simulator

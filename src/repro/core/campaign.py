@@ -65,10 +65,15 @@ from repro.ioutils import atomic_write_text
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
-    """One cell of the campaign grid."""
+    """One cell of the campaign grid.
+
+    `model` is a registry name or a `CompartmentalModel` spec object — spec
+    objects let a campaign sweep ad-hoc regionalized models (e.g.
+    `regionalize(get_model("seir"), 100, "ring:0.1")`) without registering
+    them; the spec's name tags the scenario and its checkpoint directory."""
 
     dataset: str
-    model: str
+    model: object  # registry name (str) or CompartmentalModel spec
     backend: str = "xla_fused"
     seed: int = 0
     #: optional intervention schedule (lockdown-day x scale sweeps); cells
@@ -83,8 +88,13 @@ class Scenario:
     distance: str = "euclidean"
 
     @property
+    def model_tag(self) -> str:
+        """Filesystem/JSON-safe model label (spec objects tag by name)."""
+        return self.model if isinstance(self.model, str) else self.model.name
+
+    @property
     def name(self) -> str:
-        base = f"{self.dataset}__{self.model}__{self.backend}__s{self.seed}"
+        base = f"{self.dataset}__{self.model_tag}__{self.backend}__s{self.seed}"
         if self.schedule is not None and not self.schedule.is_empty:
             base += f"__{self.schedule.tag()}"
         spec = get_summary(self.summary)
@@ -100,7 +110,9 @@ class CampaignConfig:
     """Grid spec + per-scenario ABC settings + campaign-level policy."""
 
     datasets: Tuple[str, ...]
-    models: Tuple[str, ...] = ("siard",)
+    #: registry names and/or CompartmentalModel spec objects (ad-hoc
+    #: regionalized models sweep without registration; see Scenario.model)
+    models: Tuple[object, ...] = ("siard",)
     backends: Tuple[str, ...] = ("xla_fused",)
     seeds: Tuple[int, ...] = (0,)
     #: intervention-scenario grid axis: each entry is an InterventionSchedule
@@ -326,7 +338,12 @@ class _ShapeCache:
         return len(self._entries)
 
     def key_of(self, sc: Scenario, group=None) -> tuple:
-        key = (sc.model, self.cfg.num_days, self.cfg.batch_size, sc.backend)
+        # key on the RESOLVED spec (hashable by design), not the name: the
+        # spec carries the region axis (n_regions, mobility, coupled), so a
+        # 100-region scenario can never alias its single-region namesake's
+        # compiled loop, while registered names still dedupe to one entry
+        spec = get_model(sc.model)
+        key = (spec, self.cfg.num_days, self.cfg.batch_size, sc.backend)
         if group is not None and len(group) > 1:
             # a sharded loop is compiled against its device group's mesh;
             # scenarios on the same group still share one compilation
@@ -414,7 +431,7 @@ class _ScenarioRun:
             else "+".join(str(d.id) for d in self.group)
         )
         self.result = ScenarioResult(
-            name=sc.name, dataset=sc.dataset, model=sc.model,
+            name=sc.name, dataset=sc.dataset, model=sc.model_tag,
             backend=sc.backend, seed=sc.seed, status="pending",
             device=device_label,
         )
@@ -578,8 +595,13 @@ class _ScenarioRun:
 
     def _checkpoint(self, out, done: bool):
         fills = np.asarray(out.fill_counts)
+        # spec-object models serialize by tag (a spec holds functions, which
+        # are not checkpoint-meta material); everything else as-is
+        sc_meta = dataclasses.asdict(
+            dataclasses.replace(self.sc, model=self.sc.model_tag)
+        )
         meta = {
-            "scenario": dataclasses.asdict(self.sc),
+            "scenario": sc_meta,
             "run_idx": self.state.run_idx,
             "simulations": self.state.simulations,
             "n_accepted": int(out.n_accepted),
@@ -632,7 +654,13 @@ def run_campaign(cfg: CampaignConfig, verbose: bool = False) -> CampaignReport:
             r.ckpt.wait()
 
     report = CampaignReport(
-        config=dataclasses.asdict(cfg),
+        # spec-object models serialize by name tag (specs hold functions)
+        config=dataclasses.asdict(dataclasses.replace(
+            cfg,
+            models=tuple(
+                m if isinstance(m, str) else m.name for m in cfg.models
+            ),
+        )),
         scenarios=[r.result for r in runs],
         wall_time_s=time.time() - t0,
         compiled_shapes=cache.n_compiled,

@@ -12,7 +12,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from functools import partial
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,8 +37,12 @@ class SMCConfig:
     backend: str = "xla_fused"
     max_waves_per_round: int = 200
     min_tolerance: float = 0.0
-    #: registry name of the compartmental model to infer (repro.epi.models)
-    model: str = "siard"
+    #: compartmental model to infer: a registry name or a CompartmentalModel
+    #: spec object (ad-hoc regionalized metapop specs work unregistered)
+    model: object = "siard"
+    #: metapop models only: row-stochastic [R, R] mobility override (nested
+    #: tuples), forwarded to the simulator (see ABCConfig.mobility)
+    mobility: Optional[Tuple[Tuple[float, ...], ...]] = None
     #: distance kind over summary values (core.summaries.DISTANCE_KINDS)
     distance: str = "euclidean"
     #: summary statistic (SummarySpec / registry name / None = raw daily);
@@ -257,6 +261,7 @@ def run_smc_abc(
         interpret=cfg.interpret,
         distance=cfg.distance,
         summary=cfg.summary,
+        mobility=cfg.mobility,
     )
     simulator = make_simulator(dataset, abc_cfg)
     sim_jit = jax.jit(simulator)

@@ -86,8 +86,15 @@ class SummarySpec:
     #: bin length in days; 1 = daily (no binning), 7 = weekly totals. The
     #: final bin may be partial (it flushes on the last day regardless).
     bin_days: int = 1
-    #: optional per-channel weights (length n_observed); None = all 1.0
+    #: optional per-channel weights (length n_observed); None = all 1.0.
+    #: For metapop models, either the flattened total channel count or the
+    #: per-region count (then tiled identically across regions).
     channel_weights: Optional[Tuple[float, ...]] = None
+    #: metapop models only: sum each observed channel across regions BEFORE
+    #: the transform chain, comparing national aggregates instead of
+    #: per-region series (the region axis of the summary accumulator
+    #: collapses; requires `n_regions` at lowering time). No-op at R=1.
+    region_pool: bool = False
 
     def __post_init__(self):
         if self.bin_days < 1:
@@ -108,6 +115,7 @@ class SummarySpec:
             and not self.log1p
             and self.bin_days == 1
             and self.channel_weights is None
+            and not self.region_pool
         )
 
     def tag(self) -> str:
@@ -130,6 +138,8 @@ class SummarySpec:
             parts.append("log1p")
         if self.channel_weights is not None:
             parts.append("w" + "-".join(f"{w:g}" for w in self.channel_weights))
+        if self.region_pool:
+            parts.append("rpool")
         return "_".join(parts)
 
 
@@ -141,6 +151,8 @@ SUMMARIES = {
     "cumulative": SummarySpec("cumulative", cumulative=True),
     "log_daily": SummarySpec("log_daily", log1p=True),
     "log_weekly": SummarySpec("log_weekly", bin_days=7, log1p=True),
+    # metapop: per-channel national aggregates; identical to "identity" at R=1
+    "region_pooled": SummarySpec("region_pooled", region_pool=True),
 }
 
 
@@ -222,6 +234,32 @@ def flush_mask(num_days: int, bin_days: int) -> Array:
     return jnp.asarray(m, jnp.float32)
 
 
+def pool_factor(spec: SummarySpec, n_regions: int) -> int:
+    """Static region-pooling factor: `n_regions` when this spec pools the
+    region axis of a metapop series, else 1 (identity). Backends branch on
+    this at trace time, so R=1 and non-pooling paths stay bit-exact."""
+    return n_regions if (spec.region_pool and n_regions > 1) else 1
+
+
+def pool_channels(x: Array, pool: int, axis: int = -1) -> Array:
+    """Sum a region-major flattened channel axis across regions.
+
+    `axis` (-1 for per-day vectors [..., R*n], -2 for series [..., R*n, T])
+    has length pool*n laid out region-major (channel r*n+c, matching
+    `CompartmentalModel.total_observed_idx`); the result drops the region
+    factor, length n. `pool <= 1` returns the input unchanged (bit-exact)."""
+    if pool <= 1:
+        return x
+    axis = axis % x.ndim
+    n_chan = x.shape[axis]
+    if n_chan % pool:
+        raise ValueError(
+            f"cannot pool axis of length {n_chan} by region factor {pool}"
+        )
+    shape = x.shape[:axis] + (pool, n_chan // pool) + x.shape[axis + 1:]
+    return jnp.sum(x.reshape(shape), axis=axis)
+
+
 def apply_summary(spec: SummarySpec, series: Array) -> Array:
     """Vectorized summary transform, running-bin layout: [..., n_obs, T] ->
     [..., n_obs, T] where entry t holds the within-bin running value at day t
@@ -246,27 +284,42 @@ def apply_summary(spec: SummarySpec, series: Array) -> Array:
     return v
 
 
-def lower_summary(spec: SummarySpec, distance: str, observed: Array) -> LoweredSummary:
+def lower_summary(
+    spec: SummarySpec, distance: str, observed: Array, n_regions: int = 1
+) -> LoweredSummary:
     """Precompute the observed-side summary + weights for one pair.
 
     `observed` [n_obs, T] may be a traced value (the campaign threads
     datasets through compiled wave loops as arguments); every output is then
     traced too. The flags vector is always concrete here — the Pallas path
     re-feeds it as a runtime argument so sweeps share one compiled kernel.
+
+    For metapop models `observed` carries the region-major flattened channel
+    axis ([R*n, T], `CompartmentalModel.total_observed_idx` order) and
+    `n_regions` must be passed; a region-pooling spec then sums the observed
+    side across regions here, so the lowered layout matches the pooled
+    simulated series the backends feed to the accumulator. Per-region
+    `channel_weights` (length n_obs / R) are tiled identically across
+    regions.
     """
     kind = get_distance_kind(distance)
     obs = jnp.asarray(observed, jnp.float32)
+    pool = pool_factor(spec, n_regions)
+    obs = pool_channels(obs, pool, axis=-2)
     n_obs, num_days = obs.shape
     s = apply_summary(spec, obs)
     fl = flush_mask(num_days, spec.bin_days)
     nb = num_bins(num_days, spec.bin_days)
     if spec.channel_weights is not None:
-        if len(spec.channel_weights) != n_obs:
+        cw = spec.channel_weights
+        if len(cw) != n_obs and n_regions > 1 and len(cw) * n_regions == n_obs:
+            cw = cw * n_regions  # per-region weights, tiled region-major
+        if len(cw) != n_obs:
             raise ValueError(
                 f"summary {spec.tag()!r} has {len(spec.channel_weights)} channel "
                 f"weights for {n_obs} observed channels"
             )
-        w = jnp.asarray(spec.channel_weights, jnp.float32)
+        w = jnp.asarray(cw, jnp.float32)
     else:
         w = jnp.ones((n_obs,), jnp.float32)
     if kind.normalize:

@@ -167,6 +167,8 @@ def _flops_per_sample_day(model, schedule, summary, distance: str) -> float:
     from repro.core.summaries import (
         get_distance_kind,
         get_summary,
+        pool_channels,
+        pool_factor,
         running_day,
     )
     from repro.epi import engine
@@ -175,25 +177,29 @@ def _flops_per_sample_day(model, schedule, summary, distance: str) -> float:
     spec = get_summary(summary)
     kind = get_distance_kind(distance)
     b = 256  # large enough to amortize the few per-day scalar ops
-    n_obs = model.n_observed
-    obs_idx = model.observed_idx
+    pool = pool_factor(spec, model.n_regions)
+    n_obs = model.total_observed // pool  # summary channels after pooling
+    obs_idx = model.total_observed_idx
     width = model.n_params
     if schedule is not None and not schedule.is_empty:
         width += schedule.shape(model).n_scales
 
     def day(theta, state, cum, binv, acc, day_idx, obs_t, flush_t, seed, idx):
-        z = ref.hash_normals(seed, idx, day_idx, model.n_transitions)
+        z = ref.hash_normals(
+            seed, idx, day_idx, model.total_transitions, model.ctr_slots
+        )
         th_d = engine.effective_theta(model, schedule, theta, day_idx)
         nxt = engine.tau_leap_step(model, state, th_d, z, 1e6)
         cum, binv, acc = running_day(
             spec, kind, jnp.ones((n_obs,), jnp.float32),
-            nxt[..., obs_idx], obs_t, flush_t, cum, binv, acc,
+            pool_channels(nxt[..., obs_idx], pool), obs_t, flush_t, cum,
+            binv, acc,
         )
         return nxt, cum, binv, acc
 
     args = (
         jnp.zeros((b, width), jnp.float32),          # theta
-        jnp.zeros((b, model.n_state), jnp.float32),  # state
+        jnp.zeros((b, model.total_state), jnp.float32),  # state (all regions)
         jnp.zeros((b, n_obs), jnp.float32),          # cum carry
         jnp.zeros((b, n_obs), jnp.float32),          # bin carry
         jnp.zeros((b,), jnp.float32),                # distance accumulator
@@ -213,6 +219,7 @@ class CostModel:
     model: str
     days: int
     theta_width: int  # params + schedule scale columns
+    #: region-major flattened totals (== the per-region counts at R=1)
     n_transitions: int
     n_state: int
     n_observed: int
@@ -222,6 +229,7 @@ class CostModel:
     fused_bytes_per_sample: float
     #: naive-path bytes per sample-DAY: noise + trajectory + state round trip
     naive_bytes_per_sample_day: float
+    n_regions: int = 1
 
     def flops(self, n_samples: float, days: Optional[int] = None) -> float:
         return n_samples * (days or self.days) * self.flops_per_sample_day
@@ -266,13 +274,15 @@ def cost_model(
         model=spec.name,
         days=int(days),
         theta_width=width,
-        n_transitions=spec.n_transitions,
-        n_state=spec.n_state,
-        n_observed=spec.n_observed,
+        n_transitions=spec.total_transitions,
+        n_state=spec.total_state,
+        n_observed=spec.total_observed,
+        n_regions=spec.n_regions,
         flops_per_sample_day=f,
         fused_bytes_per_sample=(width + 1) * 4.0,
         naive_bytes_per_sample_day=(
-            (spec.n_transitions + spec.n_observed + 2 * spec.n_state) * 4.0
+            (spec.total_transitions + spec.total_observed
+             + 2 * spec.total_state) * 4.0
         ),
     )
 

@@ -49,7 +49,8 @@ class CountryData:
     model: str = "siard"
     #: the observed channel names themselves — carried on the dataset so
     #: compatibility never needs a registry lookup (datasets may come from
-    #: unregistered or since-replaced specs)
+    #: unregistered or since-replaced specs). Metapop datasets carry the
+    #: region-major flattened labels ("I@r0", "R@r0", "I@r1", ...).
     observed_channels: Tuple[str, ...] = ("A", "R", "D")
 
     @property
@@ -66,8 +67,10 @@ class CountryData:
         )
 
     def compatible_with(self, spec: CompartmentalModel) -> bool:
-        """A spec can fit this dataset iff its observed channels line up."""
-        return spec.observed == self.observed_channels
+        """A spec can fit this dataset iff its observed channels line up
+        (for metapop specs: the flattened per-region labels, so region
+        count mismatches are caught too)."""
+        return spec.observed_labels == self.observed_channels
 
 
 def synthetic_dataset(
@@ -124,7 +127,7 @@ def synthetic_dataset(
         true_theta=tuple(float(x) for x in theta),
         synthetic=True,
         model=spec.name,
-        observed_channels=spec.observed,
+        observed_channels=spec.observed_labels,
     )
 
 
@@ -201,7 +204,7 @@ def get_dataset(
             if not base.compatible_with(spec):
                 raise ValueError(
                     f"dataset {name!r} holds (A, R, D) series; model "
-                    f"{spec.name!r} observes {spec.observed}"
+                    f"{spec.name!r} observes {spec.observed_labels}"
                 )
             ds = dataclasses.replace(base, model=spec.name, true_theta=None)
         else:

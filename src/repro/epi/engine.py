@@ -21,6 +21,17 @@ All three entry points optionally take an `InterventionSchedule`: theta then
 carries extra per-window scale columns and each day's hazards are computed
 with that day's window-effective parameters (`effective_param_rows` — the
 row-level helper the Pallas kernel shares, like `drain_and_apply`).
+
+Spatial metapopulation specs (`model.is_regional`) take a tensor region
+path: state/noise/observed flatten region-major to `[..., R * n]` (see the
+spec module docstring), channel rows carry a trailing region axis `[..., R]`
+with parameter rows broadcast as `[..., 1]`, and the coupled-mass rows are a
+single `[R, R] @ [..., R]` einsum per coupled compartment — so a 100-region
+model costs one contraction per day, not an unrolled R^2 expression. The
+flat R=1 uncoupled branch is untouched code, keeping every registered model
+bit-identical to pre-metapop releases (pinned by tests/test_metapop.py).
+An optional traced `mobility` [R, R] override (like the `breakpoints`
+override) lets mobility sweeps share one compilation.
 """
 
 from __future__ import annotations
@@ -35,23 +46,62 @@ from repro.epi.spec import (
     EpiModelConfig,
     InterventionSchedule,
     ScheduleShape,
+    identity_mobility,
 )
+
+
+def mobility_matrix(model: CompartmentalModel, mobility=None) -> jax.Array:
+    """Resolve the [R, R] f32 coupling matrix: a traced override, the spec's
+    static matrix, or the identity."""
+    mob = model.mobility if mobility is None else mobility
+    if mob is None:
+        mob = identity_mobility(model.n_regions)
+    return jnp.asarray(mob, jnp.float32)
+
+
+def _seed_vector(model: CompartmentalModel, value) -> jax.Array:
+    """[R] day-0 seed counts: `value` in `seed_region`, zero elsewhere."""
+    return (
+        jnp.zeros((model.n_regions,), jnp.float32)
+        .at[model.seed_region]
+        .set(jnp.asarray(value, jnp.float32))
+    )
 
 
 def initial_state(
     model: CompartmentalModel, theta: jax.Array, cfg: EpiModelConfig
 ) -> jax.Array:
-    """Spec step 1: theta [..., n_params] -> state [..., n_state]."""
+    """Spec step 1: theta [..., n_params] -> state [..., total_state].
+
+    Metapop specs seed region `seed_region` with (a0, r0, d0); every other
+    region starts fully susceptible at population / R.
+    """
     theta = jnp.asarray(theta, jnp.float32)
-    pc = tuple(theta[..., k] for k in range(model.n_params))
+    if not model.is_regional:
+        pc = tuple(theta[..., k] for k in range(model.n_params))
+        rows = model.initial_rows(
+            pc,
+            cfg.population,
+            jnp.asarray(cfg.a0, jnp.float32),
+            jnp.asarray(cfg.r0, jnp.float32),
+            jnp.asarray(cfg.d0, jnp.float32),
+        )
+        return jnp.stack(list(rows), axis=-1).astype(jnp.float32)
+    R, C = model.n_regions, model.n_state
+    batch = theta.shape[:-1]
+    pc = tuple(theta[..., k : k + 1] for k in range(model.n_params))
     rows = model.initial_rows(
         pc,
-        cfg.population,
-        jnp.asarray(cfg.a0, jnp.float32),
-        jnp.asarray(cfg.r0, jnp.float32),
-        jnp.asarray(cfg.d0, jnp.float32),
+        cfg.population / R,
+        _seed_vector(model, cfg.a0),
+        _seed_vector(model, cfg.r0),
+        _seed_vector(model, cfg.d0),
     )
-    return jnp.stack(list(rows), axis=-1).astype(jnp.float32)
+    rows = [
+        jnp.broadcast_to(jnp.asarray(r, jnp.float32), batch + (R,)) for r in rows
+    ]
+    # [..., R, C] -> region-major flat [..., R*C]
+    return jnp.stack(rows, axis=-1).reshape(batch + (R * C,)).astype(jnp.float32)
 
 
 def effective_param_rows(
@@ -122,14 +172,40 @@ def _breakpoint_scalars(schedule, breakpoints):
 
 
 def hazards(
-    model: CompartmentalModel, state: jax.Array, theta: jax.Array, population: float
+    model: CompartmentalModel,
+    state: jax.Array,
+    theta: jax.Array,
+    population: float,
+    mobility=None,
 ) -> jax.Array:
-    """Transition rates: state [..., n_state] -> h [..., n_transitions]."""
-    sc = tuple(state[..., k] for k in range(model.n_state))
-    pc = tuple(theta[..., k] for k in range(model.n_params))
-    h = jnp.stack(list(model.hazard_rows(sc, pc, population)), axis=-1)
-    # Hazards are rates of counting processes; they cannot be negative.
-    return jnp.maximum(h, 0.0)
+    """Transition rates: state [..., total_state] -> h [..., total_transitions].
+
+    Metapop specs evaluate all regions at once: channel rows carry a trailing
+    region axis, parameters broadcast as [..., 1] rows, and each coupled
+    compartment contributes one mobility-weighted mass row via a single
+    [R, R] contraction. `mobility` optionally overrides the spec's static
+    matrix with a traced [R, R] value (mobility sweeps share one compile).
+    """
+    if not model.is_regional:
+        sc = tuple(state[..., k] for k in range(model.n_state))
+        pc = tuple(theta[..., k] for k in range(model.n_params))
+        h = jnp.stack(list(model.hazard_rows(sc, pc, population)), axis=-1)
+        # Hazards are rates of counting processes; they cannot be negative.
+        return jnp.maximum(h, 0.0)
+    R, C, T = model.n_regions, model.n_state, model.n_transitions
+    batch = state.shape[:-1]
+    st = state.reshape(batch + (R, C))
+    sc = tuple(st[..., k] for k in range(C))  # each [..., R]
+    pc = tuple(theta[..., k : k + 1] for k in range(model.n_params))
+    mob = mobility_matrix(model, mobility)
+    coupled = tuple(
+        jnp.einsum("rq,...q->...r", mob, st[..., j]) for j in model.coupled_idx
+    )
+    rows = model.hazard_rows(sc + coupled, pc, population / R)
+    h = jnp.stack(
+        [jnp.broadcast_to(r, batch + (R,)) for r in rows], axis=-1
+    )  # [..., R, T]
+    return jnp.maximum(h, 0.0).reshape(batch + (R * T,))
 
 
 def drain_and_apply(model: CompartmentalModel, sc, raw_counts):
@@ -165,10 +241,23 @@ def drain_and_apply(model: CompartmentalModel, sc, raw_counts):
 def apply_transitions(
     model: CompartmentalModel, state: jax.Array, n_raw: jax.Array
 ) -> jax.Array:
-    """Tensor-layout wrapper around `drain_and_apply`."""
-    sc = (state[..., k] for k in range(model.n_state))
-    raw = [n_raw[..., k] for k in range(model.n_transitions)]
-    return jnp.stack(drain_and_apply(model, sc, raw), axis=-1)
+    """Tensor-layout wrapper around `drain_and_apply`.
+
+    Metapop specs drain per region: the channel/count rows carry a trailing
+    region axis, so the shared row-level clamp logic applies unchanged.
+    """
+    if not model.is_regional:
+        sc = (state[..., k] for k in range(model.n_state))
+        raw = [n_raw[..., k] for k in range(model.n_transitions)]
+        return jnp.stack(drain_and_apply(model, sc, raw), axis=-1)
+    R, C, T = model.n_regions, model.n_state, model.n_transitions
+    batch = state.shape[:-1]
+    st = state.reshape(batch + (R, C))
+    nr = n_raw.reshape(batch + (R, T))
+    sc = (st[..., k] for k in range(C))
+    raw = [nr[..., k] for k in range(T)]
+    out = drain_and_apply(model, sc, raw)  # rows [..., R]
+    return jnp.stack(out, axis=-1).reshape(batch + (R * C,))
 
 
 def tau_leap_step(
@@ -177,12 +266,15 @@ def tau_leap_step(
     theta: jax.Array,
     noise: jax.Array,
     population: float,
+    mobility=None,
 ) -> jax.Array:
-    """One day of tau-leaping given standard-normal noise [..., n_transitions].
+    """One day of tau-leaping given standard-normal noise
+    [..., total_transitions] (region-major: slot r * n_transitions + k is
+    region r's transition k).
 
     n_k = floor(h_k + sqrt(h_k) * z_k), clamped to sources (paper steps 2-4).
     """
-    h = hazards(model, state, theta, population)
+    h = hazards(model, state, theta, population, mobility)
     n_raw = jnp.floor(h + jnp.sqrt(h) * noise)
     return apply_transitions(model, state, n_raw)
 
@@ -194,8 +286,11 @@ def simulate(
     cfg: EpiModelConfig,
     schedule: Optional[InterventionSchedule] = None,
     breakpoints=None,
+    mobility=None,
 ) -> jax.Array:
-    """Full state trajectory [B, T, n_state] (state *after* each day's update).
+    """Full state trajectory [B, T, total_state] (state *after* each day's
+    update; region-major channels for metapop specs, reshape with
+    `regional_view` for an explicit [B, R, T, n_state] axis).
 
     Noise is drawn with jax.random (threefry) — the paper-faithful path.
     With a `schedule`, theta is the widened [..., n_params + n_scales] layout
@@ -213,16 +308,25 @@ def simulate(
         # path (simulate_observed_lowmem) for the same key.
         z = jax.random.normal(
             jax.random.fold_in(key, day),
-            batch_shape + (model.n_transitions,),
+            batch_shape + (model.total_transitions,),
             jnp.float32,
         )
         th_d = effective_theta(model, schedule, theta, day, bp)
-        nxt = tau_leap_step(model, state, th_d, z, cfg.population)
+        nxt = tau_leap_step(model, state, th_d, z, cfg.population, mobility)
         return nxt, nxt
 
     _, traj = jax.lax.scan(step, state0, jnp.arange(cfg.num_days))
-    # traj: [T, B, n_state] -> [B, T, n_state]
+    # traj: [T, B, total_state] -> [B, T, total_state]
     return jnp.moveaxis(traj, 0, -2)
+
+
+def regional_view(series: jax.Array, model: CompartmentalModel) -> jax.Array:
+    """Unflatten the region-major channel axis: [..., R*n, T] -> [..., R, n, T]
+    (works for observed series and, with n = n_state, state trajectories
+    transposed channel-major)."""
+    R = model.n_regions
+    n = series.shape[-2] // R
+    return series.reshape(series.shape[:-2] + (R, n) + series.shape[-1:])
 
 
 def simulate_observed(
@@ -232,11 +336,13 @@ def simulate_observed(
     cfg: EpiModelConfig,
     schedule: Optional[InterventionSchedule] = None,
     breakpoints=None,
+    mobility=None,
 ) -> jax.Array:
-    """Observed channels only: [B, n_observed, T] (the paper's D_s layout)."""
-    traj = simulate(model, theta, key, cfg, schedule, breakpoints)
-    obs = traj[..., model.observed_idx]  # [B, T, n_obs]
-    return jnp.swapaxes(obs, -1, -2)  # [B, n_obs, T]
+    """Observed channels only: [B, total_observed, T] (the paper's D_s
+    layout; metapop channels flatten region-major, channel r*n_obs + m)."""
+    traj = simulate(model, theta, key, cfg, schedule, breakpoints, mobility)
+    obs = traj[..., model.total_observed_idx]  # [B, T, total_obs]
+    return jnp.swapaxes(obs, -1, -2)  # [B, total_obs, T]
 
 
 def simulate_observed_lowmem(
@@ -250,6 +356,7 @@ def simulate_observed_lowmem(
     summary=None,
     distance: str = "euclidean",
     unroll: int = 1,
+    mobility=None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Fused simulate + running summary-distance accumulation.
 
@@ -271,22 +378,26 @@ def simulate_observed_lowmem(
         get_distance_kind,
         get_summary,
         lower_summary,
+        pool_channels,
+        pool_factor,
         running_day,
         running_finalize,
     )
 
     spec = get_summary(summary)
     kind = get_distance_kind(distance)
-    lowered = lower_summary(spec, distance, observed)
+    lowered = lower_summary(spec, distance, observed, n_regions=model.n_regions)
+    pool = pool_factor(spec, model.n_regions)
     theta = jnp.asarray(theta, jnp.float32)
     batch_shape = theta.shape[:-1]
-    obs_idx = model.observed_idx
+    obs_idx = model.total_observed_idx
     state0 = initial_state(model, theta, cfg)
     # derive from state0 so the carries inherit its varying mesh axes when
     # this runs inside shard_map (scan carries must have uniform vma types)
     acc0 = state0[..., 0] * 0.0
-    chan0 = state0[..., obs_idx] * 0.0  # [..., n_obs] cum/bin carries
-    obs_by_day = jnp.swapaxes(lowered.obs_summary, 0, 1)  # [T, n_obs]
+    # [..., n_chan] cum/bin carries (region-pooled channels pool the sims)
+    chan0 = pool_channels(state0[..., obs_idx], pool) * 0.0
+    obs_by_day = jnp.swapaxes(lowered.obs_summary, 0, 1)  # [T, n_chan]
     bp = _breakpoint_scalars(schedule, breakpoints)
 
     def step(carry, inp):
@@ -294,13 +405,14 @@ def simulate_observed_lowmem(
         day, obs_t, flush_t = inp
         z = jax.random.normal(
             jax.random.fold_in(key, day),
-            batch_shape + (model.n_transitions,),
+            batch_shape + (model.total_transitions,),
             jnp.float32,
         )
         th_d = effective_theta(model, schedule, theta, day, bp)
-        nxt = tau_leap_step(model, state, th_d, z, cfg.population)
+        nxt = tau_leap_step(model, state, th_d, z, cfg.population, mobility)
         cum, binv, acc = running_day(
-            spec, kind, lowered.weights, nxt[..., obs_idx], obs_t, flush_t,
+            spec, kind, lowered.weights,
+            pool_channels(nxt[..., obs_idx], pool), obs_t, flush_t,
             cum, binv, acc,
         )
         return (nxt, cum, binv, acc), None

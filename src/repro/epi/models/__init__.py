@@ -68,6 +68,10 @@ def _declarative_key(model: CompartmentalModel) -> tuple:
         model.stoichiometry,
         model.observed,
         model.default_theta,
+        model.n_regions,
+        model.mobility,
+        model.coupled,
+        model.seed_region,
         _fn_key(model.hazard_rows),
         _fn_key(model.initial_rows),
     )
@@ -105,6 +109,7 @@ from repro.epi.models import siard as _siard  # noqa: E402
 from repro.epi.models import sir as _sir  # noqa: E402
 from repro.epi.models import seir as _seir  # noqa: E402
 from repro.epi.models import seiard as _seiard  # noqa: E402
+from repro.epi.models import metapop_seir as _metapop_seir  # noqa: E402
 
 DEFAULT_MODEL = _siard.MODEL
 

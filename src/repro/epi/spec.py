@@ -38,6 +38,22 @@ constant layout reserves the same three slots. Models are free to
 reinterpret them (SIR/SEIR treat a0 as a generic day-0 case count), but a
 model needing MORE day-0 inputs requires widening `InitialFn`, the fconsts
 layout in kernels/abc_sim.py and `CountryData` together.
+
+Spatial metapopulation models: a spec may declare `n_regions` (R) copies of
+its compartments coupled through a row-stochastic `mobility` matrix. State,
+transitions and observed channels then flatten region-major — channel
+`r * n_state + c` is compartment c of region r — and every layer (engine,
+fused scan, Pallas kernel, summaries, datasets) consumes that layout through
+the `total_*` properties, with R=1 degenerating bit-identically to the flat
+single-population layout. Hazards see coupling through the `coupled` field:
+for each named compartment, the engine appends one EXTRA state row per
+region holding the mobility-weighted mass sum_q mobility[r][q] * x_q, so a
+metapop-aware `hazard_rows` receives n_state local rows followed by
+len(coupled) coupled rows and stays row-level (the same body runs in the XLA
+engine, where rows carry a trailing region axis, and in the Pallas kernel,
+where regions unroll into separate VREG rows at trace time). Each region
+holds population / R people; the dataset's (a0, r0, d0) day-0 counts seed
+`seed_region` only, every other region starting fully susceptible.
 """
 
 from __future__ import annotations
@@ -47,10 +63,91 @@ from typing import Callable, NamedTuple, Sequence, Tuple
 
 Rows = Sequence  # sequence of same-shape arrays, one per channel
 
-#: (state_rows, param_rows, population) -> one rate array per transition
+#: (state_rows, param_rows, population) -> one rate array per transition;
+#: metapop-aware hazards additionally receive len(coupled) coupled-mass rows
+#: appended to state_rows
 HazardFn = Callable[[Rows, Rows, object], Tuple]
 #: (param_rows, population, a0, r0, d0) -> one array per compartment
 InitialFn = Callable[[Rows, object, object, object, object], Tuple]
+
+#: tolerance for row-stochasticity of mobility rows (f32 inputs)
+_ROW_SUM_TOL = 1e-5
+
+
+def identity_mobility(n_regions: int) -> Tuple[Tuple[float, ...], ...]:
+    """The zero-coupling matrix: every region keeps all of its own mass."""
+    return tuple(
+        tuple(1.0 if q == r else 0.0 for q in range(n_regions))
+        for r in range(n_regions)
+    )
+
+
+def validate_mobility(mobility, n_regions: int) -> Tuple[Tuple[float, ...], ...]:
+    """Normalize + validate a mobility matrix: [R][R], non-negative rows each
+    summing to 1 (row-stochastic). Raises a loud ValueError otherwise."""
+    rows = tuple(tuple(float(x) for x in row) for row in mobility)
+    if len(rows) != n_regions or any(len(r) != n_regions for r in rows):
+        raise ValueError(
+            f"mobility must be a [{n_regions}][{n_regions}] matrix, got "
+            f"shape ({len(rows)}, {tuple(len(r) for r in rows)})"
+        )
+    for r, row in enumerate(rows):
+        if any(x < 0.0 for x in row):
+            raise ValueError(
+                f"mobility row {r} has negative entries: {row} — rows must "
+                "be non-negative probabilities"
+            )
+        s = sum(row)
+        if abs(s - 1.0) > _ROW_SUM_TOL:
+            raise ValueError(
+                f"mobility row {r} sums to {s!r}, not 1: mobility must be "
+                "row-stochastic (each region's mass weights sum to 1)"
+            )
+    return rows
+
+
+def make_mobility(spec: str, n_regions: int) -> Tuple[Tuple[float, ...], ...]:
+    """Build a mobility matrix from the CLI grammar (--mobility):
+
+      * "identity"     — no inter-region coupling (block-diagonal dynamics)
+      * "uniform:EPS"  — each region keeps 1-EPS, spreads EPS evenly over
+                         the other R-1 regions (fully-mixed gravity-free)
+      * "ring:EPS"     — each region keeps 1-EPS, sends EPS/2 to each ring
+                         neighbour (1-D lattice with wraparound)
+    """
+    kind, _, arg = spec.partition(":")
+    if kind == "identity":
+        if arg:
+            raise ValueError(f"identity mobility takes no argument: {spec!r}")
+        return identity_mobility(n_regions)
+    if kind not in ("uniform", "ring"):
+        raise ValueError(
+            f"unknown mobility kind {spec!r}; grammar: identity | "
+            "uniform:EPS | ring:EPS"
+        )
+    if not arg:
+        raise ValueError(f"mobility {kind!r} needs a coupling strength: {spec!r}")
+    eps = float(arg)
+    if not 0.0 <= eps <= 1.0:
+        raise ValueError(f"mobility coupling must be in [0, 1], got {eps}")
+    if n_regions == 1:
+        return identity_mobility(1)
+    rows = []
+    for r in range(n_regions):
+        row = [0.0] * n_regions
+        row[r] = 1.0 - eps
+        if kind == "uniform":
+            for q in range(n_regions):
+                if q != r:
+                    row[q] = eps / (n_regions - 1)
+        else:  # ring
+            if n_regions == 2:
+                row[(r + 1) % 2] = eps
+            else:
+                row[(r - 1) % n_regions] += eps / 2.0
+                row[(r + 1) % n_regions] += eps / 2.0
+        rows.append(tuple(row))
+    return validate_mobility(rows, n_regions)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,6 +175,21 @@ class CompartmentalModel:
     default_theta: Tuple[float, ...]
     prior_lows: Tuple[float, ...] | None = None
     doc: str = ""
+    #: spatial metapopulation: number of coupled regions sharing these
+    #: dynamics; R=1 (the default) is the flat single-population layout
+    n_regions: int = 1
+    #: row-stochastic [R][R] coupling matrix — mobility[r][q] weights region
+    #: q's mass in region r's coupled rows. None defaults to the identity
+    #: (zero coupling) whenever regions or coupled compartments are declared.
+    mobility: Tuple[Tuple[float, ...], ...] | None = None
+    #: compartments whose mobility-weighted mass rows are appended to the
+    #: state rows seen by hazard_rows (in this order) — a metapop-aware
+    #: hazard reads its force-of-infection mass from these instead of the
+    #: local rows
+    coupled: Tuple[str, ...] = ()
+    #: region seeded with the dataset's (a0, r0, d0) day-0 counts; all other
+    #: regions start fully susceptible at population / n_regions
+    seed_region: int = 0
 
     def __post_init__(self):
         ns, np_, nt = len(self.compartments), len(self.param_names), len(self.stoichiometry)
@@ -103,9 +215,37 @@ class CompartmentalModel:
             if name not in self.compartments:
                 raise ValueError(f"{self.name}: observed {name!r} is not a compartment")
         if nt > 8:
-            # the counter-based RNG reserves 8 counter slots per day
-            # (kernels/rng.day_transition_ctr); widen the layout to go beyond
+            # the counter-based RNG reserves 8 counter slots per day PER
+            # REGION at R=1 (kernels/rng.day_transition_ctr); metapop models
+            # widen the per-day stride via `ctr_slots`, but the per-region
+            # transition count stays capped
             raise ValueError(f"{self.name}: at most 8 transitions supported, got {nt}")
+        # ---- spatial metapopulation fields ----
+        if not isinstance(self.n_regions, int) or self.n_regions < 1:
+            raise ValueError(
+                f"{self.name}: n_regions must be a positive int, got "
+                f"{self.n_regions!r}"
+            )
+        object.__setattr__(self, "coupled", tuple(self.coupled))
+        for name in self.coupled:
+            if name not in self.compartments:
+                raise ValueError(
+                    f"{self.name}: coupled {name!r} is not a compartment"
+                )
+        if not 0 <= self.seed_region < self.n_regions:
+            raise ValueError(
+                f"{self.name}: seed_region {self.seed_region} out of range "
+                f"for {self.n_regions} regions"
+            )
+        if self.mobility is None:
+            if self.coupled or self.n_regions > 1:
+                object.__setattr__(
+                    self, "mobility", identity_mobility(self.n_regions)
+                )
+        else:
+            object.__setattr__(
+                self, "mobility", validate_mobility(self.mobility, self.n_regions)
+            )
 
     # ------------------------------------------------------------ dimensions
     @property
@@ -133,6 +273,58 @@ class CompartmentalModel:
         """Source compartment index of each transition (the -1 entry)."""
         return tuple(row.index(-1) for row in self.stoichiometry)
 
+    # ------------------------------------------------- region-major totals
+    # The flattened metapop layout: channel r * n_state + c is compartment c
+    # of region r; transitions and observed channels flatten the same way.
+    # At R=1 every total_* equals its per-region counterpart, so generic
+    # layers index with these unconditionally.
+    @property
+    def total_state(self) -> int:
+        return self.n_regions * self.n_state
+
+    @property
+    def total_transitions(self) -> int:
+        return self.n_regions * self.n_transitions
+
+    @property
+    def total_observed(self) -> int:
+        return self.n_regions * self.n_observed
+
+    @property
+    def total_observed_idx(self) -> Tuple[int, ...]:
+        """Observed channel indices into the region-major flattened state."""
+        local = self.observed_idx
+        return tuple(
+            r * self.n_state + c for r in range(self.n_regions) for c in local
+        )
+
+    @property
+    def observed_labels(self) -> Tuple[str, ...]:
+        """Per-channel labels of the flattened observed layout (dataset
+        rows): the plain compartment names at R=1, `C@rN` per region else."""
+        if self.n_regions == 1:
+            return self.observed
+        return tuple(
+            f"{c}@r{r}" for r in range(self.n_regions) for c in self.observed
+        )
+
+    @property
+    def coupled_idx(self) -> Tuple[int, ...]:
+        return tuple(self.compartments.index(c) for c in self.coupled)
+
+    @property
+    def is_regional(self) -> bool:
+        """True when the spec leaves the flat R=1 uncoupled layout — the
+        engine/kernel then take the generalized region paths."""
+        return self.n_regions > 1 or bool(self.coupled)
+
+    @property
+    def ctr_slots(self) -> int:
+        """Per-day counter stride of the hash RNG: 8 at R=1 (the legacy
+        layout, bit-identity-critical), widened in sublane-sized steps for
+        metapop models whose total transition count exceeds it."""
+        return max(8, -(-self.total_transitions // 8) * 8)
+
     # ------------------------------------------------------------------ misc
     def prior(self):
         """The model's uniform box prior U(lows, highs)."""
@@ -146,10 +338,42 @@ class CompartmentalModel:
             f"({', '.join(self.compartments)}), {self.n_params} params, "
             f"{self.n_transitions} transitions, observed ({', '.join(self.observed)})"
         ]
+        if self.n_regions > 1:
+            lines[0] += f", {self.n_regions} regions"
         for row, src in zip(self.stoichiometry, self.transition_sources):
             dst = row.index(1)
             lines.append(f"  {self.compartments[src]} -> {self.compartments[dst]}")
+        if self.coupled:
+            lines.append(f"  coupled mass rows: {', '.join(self.coupled)}")
         return "\n".join(lines)
+
+
+def regionalize(
+    model: CompartmentalModel,
+    n_regions: int,
+    mobility=None,
+    name: str | None = None,
+    seed_region: int = 0,
+) -> CompartmentalModel:
+    """A spatial variant of `model` with R regions coupled by `mobility`.
+
+    `mobility` is a matrix, a `make_mobility` grammar string ("ring:0.1") or
+    None (identity). The per-region dynamics are unchanged; only metapop-
+    aware models (non-empty `coupled`) actually exchange mass — regionalizing
+    an uncoupled model yields R independent copies, useful for scaling
+    studies. Validation (row-stochasticity, shape) happens in the spec's
+    __post_init__ and fails loudly.
+    """
+    if isinstance(mobility, str):
+        mobility = make_mobility(mobility, n_regions)
+    return dataclasses.replace(
+        model,
+        name=name or (model.name if n_regions == model.n_regions
+                      else f"{model.name}_r{n_regions}"),
+        n_regions=n_regions,
+        mobility=mobility,
+        seed_region=seed_region,
+    )
 
 
 class ScheduleShape(NamedTuple):

@@ -73,7 +73,9 @@ from repro.epi.spec import CompartmentalModel, ScheduleShape
 from repro.kernels import rng as krng
 
 # fconsts layout (f32): [population, a0, r0, d0, mean_scale, 0...,
-#                        summary channel weights at lanes 8..8+n_obs]
+#                        summary channel weights at lanes 8..8+n_chan,
+#                        row-major mobility matrix at lanes
+#                        8+n_chan..8+n_chan+R*R (metapop models only)]
 # iconsts layout (i32): [seed, breakpoint_0..breakpoint_{n_windows-1}, 0...,
 #                        summary flags at lanes _SUM_ILANE.._SUM_ILANE+4]
 _CONST_LANES = 128
@@ -88,6 +90,32 @@ _SUM_ILANE = 120
 _MEAN_SCALE_LANE = 4
 #: first fconst lane of the per-channel summary weights
 _WEIGHT_LANE = 8
+
+
+def n_summary_channels(model: CompartmentalModel, pool: int) -> int:
+    """Summary channels the kernel accumulates: the region-major flattened
+    observed count, divided by the static region-pooling factor."""
+    assert model.total_observed % pool == 0, (model.name, pool)
+    return model.total_observed // pool
+
+
+def mobility_lane(model: CompartmentalModel, pool: int) -> int:
+    """First fconst lane of the row-major mobility matrix (after the
+    summary channel weights)."""
+    return _WEIGHT_LANE + n_summary_channels(model, pool)
+
+
+def kernel_lane_budget_ok(model: CompartmentalModel, pool: int) -> bool:
+    """Whether this model's weights + mobility fit the 128 fconst lanes.
+
+    Metapop models need n_chan weight lanes plus R*R mobility lanes; at
+    R=10 with 2 unpooled observed channels that is exactly 128. Larger R
+    must route through the XLA backends (ops.abc_sim_distance raises a
+    loud ValueError pointing there)."""
+    lanes = mobility_lane(model, pool)
+    if model.is_regional:
+        lanes += model.n_regions * model.n_regions
+    return lanes <= _CONST_LANES
 
 
 def sublane_pad(n: int) -> int:
@@ -118,16 +146,28 @@ def _kernel(
     num_days: int,
     tile: int,
     sched: ScheduleShape | None = None,
+    pool: int = 1,
 ):
     """Generic Pallas kernel body, specialized per model spec. Shapes:
     theta_ref  (Pp, TB)  — params x samples (transposed, sublane-padded);
                            rows n_params.. are window-major intervention
                            scales when `sched` is set
-    obs_ref    (Op, Tp)  — rows 0..n_obs-1 = OBSERVED-SIDE SUMMARY values
-                           per day (running-bin layout, padded)
-    fconst_ref (1, 128)  — f32 scalars (incl. summary weights / mean scale)
+    obs_ref    (Op, Tp)  — rows 0..n_chan-1 = OBSERVED-SIDE SUMMARY values
+                           per day (running-bin layout, padded; region-major
+                           flattened — or region-pooled when `pool` > 1)
+    fconst_ref (1, 128)  — f32 scalars (incl. summary weights / mean scale /
+                           row-major mobility matrix for metapop models)
     iconst_ref (1, 128)  — i32 scalars (seed, breakpoint days, summary flags)
     dist_ref   (1, TB)   — output summary distances
+
+    Metapop models carry the region axis as extra UNROLLED (1, TB) rows:
+    state/hazard/noise rows are region-major flattened (row r * n + j),
+    per-region seeding and population P/R match the XLA engine, the
+    mobility-weighted coupled rows are built from fconst mobility lanes, and
+    the RNG counter stream widens to `model.ctr_slots` slots per day. At
+    R=1 every regional term collapses (one region, slot stride 8, identity
+    weights), so single-region kernels stay bit-identical to the pre-metapop
+    body — pinned by tests/test_metapop.py.
     """
     population = fconst_ref[0, 0]
     a0 = fconst_ref[0, 1]
@@ -142,14 +182,30 @@ def _kernel(
     # compiled kernel serves every (summary, distance) pair): the kernel
     # body below is the traced-select twin of core.summaries.running_day
     mean_scale = fconst_ref[0, _MEAN_SCALE_LANE]
+    n_chan = n_summary_channels(model, pool)
     weights = tuple(
-        fconst_ref[0, _WEIGHT_LANE + m] for m in range(model.n_observed)
+        fconst_ref[0, _WEIGHT_LANE + m] for m in range(n_chan)
     )
     cumulative = iconst_ref[0, _SUM_ILANE + 0]
     use_log1p = iconst_ref[0, _SUM_ILANE + 1]
     power = iconst_ref[0, _SUM_ILANE + 2]
     root = iconst_ref[0, _SUM_ILANE + 3]
     bin_days = iconst_ref[0, _SUM_ILANE + 4]
+
+    # region geometry: flat models are the R=1 degenerate case throughout
+    R = model.n_regions
+    C = model.n_state
+    T = model.n_transitions
+    slots = model.ctr_slots
+    pop_r = population / R if R > 1 else population
+    if model.is_regional:
+        # mobility rides fconst lanes (row-major), like the breakpoints: a
+        # mobility sweep reuses one compiled kernel
+        ml = mobility_lane(model, pool)
+        mob = tuple(
+            tuple(fconst_ref[0, ml + r * R + q] for q in range(R))
+            for r in range(R)
+        )
 
     # global sample index of each lane in this tile
     tile_idx = pl.program_id(0)
@@ -161,47 +217,90 @@ def _kernel(
         theta_ref[k : k + 1, :] for k in range(theta_width(model, sched))
     )
 
-    # spec step 1: initial state rows + summary carries (cum/bin per observed
+    # spec step 1: initial state rows + summary carries (cum/bin per summary
     # channel) + distance accumulator (base params only — interventions scale
-    # hazards, never the day-0 seeding)
-    state0 = model.initial_rows(pc[: model.n_params], population, a0, r0, d0)
+    # hazards, never the day-0 seeding). Region `seed_region` receives the
+    # dataset's day-0 counts; every other region starts fully susceptible.
+    state0 = []
+    for r in range(R):
+        if R > 1:
+            z = 1.0 if r == model.seed_region else 0.0
+            rows = model.initial_rows(
+                pc[: model.n_params], pop_r, a0 * z, r0 * z, d0 * z
+            )
+        else:
+            rows = model.initial_rows(pc[: model.n_params], pop_r, a0, r0, d0)
+        state0.extend(rows)
     acc0 = jnp.zeros_like(state0[0])
-    n_obs = model.n_observed
-    chan0 = tuple(jnp.zeros_like(state0[0]) for _ in range(2 * n_obs))
+    chan0 = tuple(jnp.zeros_like(state0[0]) for _ in range(2 * n_chan))
 
     obs_idx = model.observed_idx
     n_obs_rows = obs_ref.shape[0]
-    ns = model.n_state
+    ns = R * C
 
     def day_step(day, carry):
         sc = list(carry[:ns])
-        cum = list(carry[ns : ns + n_obs])
-        binr = list(carry[ns + n_obs : ns + 2 * n_obs])
-        acc = carry[ns + 2 * n_obs]
+        cum = list(carry[ns : ns + n_chan])
+        binr = list(carry[ns + n_chan : ns + 2 * n_chan])
+        acc = carry[ns + 2 * n_chan]
         # day-effective params: the window selects unroll into straight-line
         # VREG selects (shared row-level code with the XLA engine)
         pc_d = engine.effective_param_rows(model, sched, pc, day, breakpoints)
-        # spec step 2: hazards (rates cannot be negative)
-        h = [jnp.maximum(row, 0.0) for row in model.hazard_rows(sc, pc_d, population)]
-        # spec step 3: Gaussian tau-leap counts, generated in-register
-        raw = []
-        for k in range(model.n_transitions):
-            z = krng.normal(seed, idx, krng.day_transition_ctr(day, k))
-            raw.append(jnp.floor(h[k] + jnp.sqrt(h[k]) * z))
-        # spec step 4: sequential source-draining clamp + stoichiometry —
-        # shared row-level code with the XLA engine (unrolls at trace time)
-        sc = engine.drain_and_apply(model, sc, raw)
+        new_sc = []
+        for r in range(R):
+            sc_r = sc[r * C : (r + 1) * C]
+            # coupled rows: mobility-weighted compartment mass, appended
+            # after the local compartments (spec contract) — unrolls into
+            # R multiply-adds per coupled compartment
+            extra = []
+            for j in model.coupled_idx:
+                row = mob[r][0] * sc[j]
+                for q in range(1, R):
+                    row = row + mob[r][q] * sc[q * C + j]
+                extra.append(row)
+            # spec step 2: hazards (rates cannot be negative)
+            h = [
+                jnp.maximum(row, 0.0)
+                for row in model.hazard_rows(
+                    tuple(sc_r) + tuple(extra), pc_d, pop_r
+                )
+            ]
+            # spec step 3: Gaussian tau-leap counts, generated in-register;
+            # counter slot r*T + k in the slots-per-day stream (slot stride
+            # 8 and r=0 at R=1 — the legacy layout)
+            raw = []
+            for k in range(T):
+                z = krng.normal(
+                    seed, idx, krng.day_transition_ctr(day, r * T + k, slots)
+                )
+                raw.append(jnp.floor(h[k] + jnp.sqrt(h[k]) * z))
+            # spec step 4: sequential source-draining clamp + stoichiometry —
+            # shared row-level code with the XLA engine (unrolls at trace
+            # time; per-region, the stoichiometry is block-diagonal)
+            new_sc.extend(engine.drain_and_apply(model, sc_r, raw))
+        sc = new_sc
 
         # running summary-distance accumulation (beyond-paper fusion,
         # DESIGN.md §2): the traced-select form of summaries.running_day.
         # Identity + euclidean (all-false selects, weights 1.0) is bit-
         # identical to the legacy per-channel squared accumulation.
+        # Region-pooled summaries sum each channel across regions here,
+        # collapsing the carry to n_obs rows.
+        if pool > 1:
+            xs = []
+            for j in obs_idx:
+                x = sc[j]
+                for r in range(1, R):
+                    x = x + sc[r * C + j]
+                xs.append(x)
+        else:
+            xs = [sc[g] for g in model.total_observed_idx]
         obs_t = pl.load(obs_ref, (slice(0, n_obs_rows), pl.dslice(day, 1)))
         flush = jnp.logical_or(
             (day + 1) % bin_days == 0, day == num_days - 1
         ).astype(jnp.float32)
-        for m, j in enumerate(obs_idx):
-            x = sc[j]
+        for m in range(n_chan):
+            x = xs[m]
             c = cum[m] + x
             v = jnp.where(cumulative == 1, c, x)
             # cumulative channels bin by their latest LEVEL, rates by the
@@ -216,7 +315,7 @@ def _kernel(
         return (*sc, *cum, *binr, acc)
 
     carry = jax.lax.fori_loop(0, num_days, day_step, (*state0, *chan0, acc0))
-    acc = carry[ns + 2 * n_obs] * mean_scale
+    acc = carry[ns + 2 * n_chan] * mean_scale
     dist_ref[...] = jnp.where(root == 1, jnp.sqrt(acc), acc)
 
 
@@ -231,6 +330,7 @@ def abc_sim_distance_kernel(
     tile: int,
     interpret: bool | None = None,
     sched: ScheduleShape | None = None,
+    pool: int = 1,
 ) -> jax.Array:
     """Raw pallas_call wrapper; returns distances [1, B]. See ops.py for the
     user-facing API (padding, layout, backend selection).
@@ -243,11 +343,12 @@ def abc_sim_distance_kernel(
     p_pad, batch = theta_t.shape
     assert p_pad == sublane_pad(theta_width(model, sched)) and batch % tile == 0
     o_pad, t_pad = obs_pad.shape
-    assert o_pad == sublane_pad(model.n_observed)
+    assert o_pad == sublane_pad(n_summary_channels(model, pool))
     grid = (batch // tile,)
     return pl.pallas_call(
         functools.partial(
-            _kernel, model=model, num_days=num_days, tile=tile, sched=sched
+            _kernel, model=model, num_days=num_days, tile=tile, sched=sched,
+            pool=pool,
         ),
         grid=grid,
         in_specs=[

@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.summaries import N_FLAGS, get_summary, lower_summary
+from repro.core.summaries import N_FLAGS, get_summary, lower_summary, pool_factor
+from repro.epi import engine
 from repro.kernels import abc_sim
 
 _CONST_LANES = abc_sim._CONST_LANES
@@ -75,6 +76,7 @@ def abc_sim_distance(
     breakpoints=None,  # [n_windows] i32 traced override of schedule days
     summary=None,  # SummarySpec / registry name / None (identity)
     distance: str = "euclidean",  # core.summaries.DISTANCE_KINDS name
+    mobility=None,  # [R, R] row-stochastic override (metapop models)
 ) -> jax.Array:
     """Fused simulate+distance for a batch of parameter samples. Returns [B].
 
@@ -88,7 +90,10 @@ def abc_sim_distance(
     way: the observed side is pre-summarized here and the selector flags /
     channel weights / mean scale are traced scalar-lane values, so a summary
     or distance sweep also reuses one compiled kernel (pinned by a jit-cache
-    test in tests/test_summaries.py).
+    test in tests/test_summaries.py). For metapop models the [R, R] mobility
+    matrix rides fconst lanes the same way (a mobility sweep reuses one
+    compiled kernel) — which also caps the kernel at roughly R <= 10;
+    larger metapop runs must use the XLA backends (loud ValueError here).
     """
     if model is None:
         from repro.epi.models import DEFAULT_MODEL as model  # noqa: N811
@@ -104,18 +109,34 @@ def abc_sim_distance(
             breakpoints = jnp.asarray(schedule.breakpoints, jnp.int32)
     if breakpoints is None:
         breakpoints = jnp.zeros((0,), jnp.int32)
-    lowered = lower_summary(get_summary(summary), distance, observed)
+    spec = get_summary(summary)
+    pool = pool_factor(spec, model.n_regions)
+    if not abc_sim.kernel_lane_budget_ok(model, pool):
+        raise ValueError(
+            f"model {model.name!r} (R={model.n_regions}, "
+            f"{abc_sim.n_summary_channels(model, pool)} summary channels) "
+            f"exceeds the kernel's {_CONST_LANES} const-lane budget for "
+            "weights + mobility; use backend='xla_fused' (or 'xla') for "
+            "large metapop models"
+        )
+    if model.is_regional:
+        mob = engine.mobility_matrix(model, mobility)
+    else:
+        mob = jnp.zeros((0, 0), jnp.float32)
+    lowered = lower_summary(spec, distance, observed, n_regions=model.n_regions)
     return _abc_sim_distance_jit(
         theta, seed, lowered.obs_summary, breakpoints, lowered.weights,
-        lowered.mean_scale, lowered.flags, population=population, a0=a0,
+        lowered.mean_scale, lowered.flags, mob, population=population, a0=a0,
         r0=r0, d0=d0, tile=tile, interpret=interpret, model=model, sched=sched,
+        pool=pool,
     )
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "population", "a0", "r0", "d0", "tile", "interpret", "model", "sched"
+        "population", "a0", "r0", "d0", "tile", "interpret", "model", "sched",
+        "pool",
     ),
 )
 def _abc_sim_distance_jit(
@@ -123,9 +144,10 @@ def _abc_sim_distance_jit(
     seed: jax.Array,
     observed: jax.Array,  # PRE-SUMMARIZED observed side (running-bin layout)
     breakpoints: jax.Array,
-    weights: jax.Array,  # [n_obs] f32 summary channel weights
+    weights: jax.Array,  # [n_chan] f32 summary channel weights
     mean_scale: jax.Array,  # [] f32 distance finalizer scale
     flags: jax.Array,  # [N_FLAGS] i32 summary/distance selectors
+    mob: jax.Array,  # [R, R] f32 mobility ([0, 0] for flat models)
     *,
     population: float,
     a0: float,
@@ -135,21 +157,26 @@ def _abc_sim_distance_jit(
     interpret: bool,
     model,
     sched,
+    pool: int = 1,
 ) -> jax.Array:
     theta = jnp.asarray(theta, jnp.float32)
     batch, n_params = theta.shape
     width = abc_sim.theta_width(model, sched)
+    n_chan = abc_sim.n_summary_channels(model, pool)
     assert n_params == width, (theta.shape, model.name, sched)
-    assert observed.shape[0] == model.n_observed, (observed.shape, model.name)
+    assert observed.shape[0] == n_chan, (observed.shape, model.name, pool)
     num_days = observed.shape[1]
     n_windows = sched.n_windows if sched is not None else 0
     assert breakpoints.shape == (n_windows,), (breakpoints.shape, sched)
-    assert weights.shape == (model.n_observed,), (weights.shape, model.name)
+    assert weights.shape == (n_chan,), (weights.shape, model.name, pool)
     assert flags.shape == (N_FLAGS,), flags.shape
+    n_mob = model.n_regions if model.is_regional else 0
+    assert mob.shape == (n_mob, n_mob), (mob.shape, model.name)
     # lane-budget guards: breakpoints grow up from lane 1, summary flags sit
-    # at fixed tail lanes, weights live above the four model scalars
+    # at fixed tail lanes, weights (then mobility) live above the four model
+    # scalars — abc_sim_distance raises loudly before tracing ever gets here
     assert 1 + n_windows <= abc_sim._SUM_ILANE, n_windows
-    assert abc_sim._WEIGHT_LANE + model.n_observed <= _CONST_LANES
+    assert abc_sim.kernel_lane_budget_ok(model, pool), (model.name, pool)
 
     # tile arrives pre-resolved (resolve_tile); only an auto tile may pad
     pad_b = (-batch) % tile
@@ -157,10 +184,10 @@ def _abc_sim_distance_jit(
     theta_t = jnp.swapaxes(theta, 0, 1)  # [width, B]
     theta_t = jnp.pad(theta_t, ((0, p_pad - width), (0, pad_b)))
 
-    o_pad = abc_sim.sublane_pad(model.n_observed)
+    o_pad = abc_sim.sublane_pad(n_chan)
     t_pad = int(np.ceil(num_days / 128) * 128)
     obs_pad = jnp.zeros((o_pad, t_pad), jnp.float32)
-    obs_pad = obs_pad.at[: model.n_observed, :num_days].set(
+    obs_pad = obs_pad.at[:n_chan, :num_days].set(
         jnp.asarray(observed, jnp.float32)
     )
 
@@ -173,9 +200,14 @@ def _abc_sim_distance_jit(
         jnp.asarray(mean_scale, jnp.float32)
     )
     wl = abc_sim._WEIGHT_LANE
-    fconsts = fconsts.at[0, wl : wl + model.n_observed].set(
+    fconsts = fconsts.at[0, wl : wl + n_chan].set(
         jnp.asarray(weights, jnp.float32)
     )
+    if n_mob:
+        ml = abc_sim.mobility_lane(model, pool)
+        fconsts = fconsts.at[0, ml : ml + n_mob * n_mob].set(
+            jnp.asarray(mob, jnp.float32).reshape(-1)
+        )
     iconsts = jnp.zeros((1, _CONST_LANES), jnp.int32)
     iconsts = iconsts.at[0, 0].set(jnp.asarray(seed, jnp.uint32).astype(jnp.int32))
     if n_windows:
@@ -195,6 +227,7 @@ def _abc_sim_distance_jit(
         tile=tile,
         interpret=interpret,
         sched=sched,
+        pool=pool,
     )
     return dist[0, :batch]
 

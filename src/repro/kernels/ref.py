@@ -16,6 +16,8 @@ from repro.core.summaries import (
     get_distance_kind,
     get_summary,
     lower_summary,
+    pool_channels,
+    pool_factor,
     running_day,
     running_finalize,
 )
@@ -24,11 +26,17 @@ from repro.epi.spec import CompartmentalModel, EpiModelConfig
 from repro.kernels import rng as krng
 
 
-def hash_normals(seed, idx: jax.Array, day, n_transitions: int = 5) -> jax.Array:
-    """Noise block [B, n_transitions] for one day from the counter stream."""
+def hash_normals(
+    seed, idx: jax.Array, day, n_transitions: int = 5, slots: int = 8
+) -> jax.Array:
+    """Noise block [B, n_transitions] for one day from the counter stream.
+
+    For metapop models `n_transitions` is the flattened region-major total
+    (R * per-region transitions) and `slots` is `model.ctr_slots`; at R=1
+    both collapse to the legacy (n_transitions, 8) layout bit-exactly."""
     cols = []
     for k in range(n_transitions):
-        cols.append(krng.normal(seed, idx, krng.day_transition_ctr(day, k)))
+        cols.append(krng.normal(seed, idx, krng.day_transition_ctr(day, k, slots)))
     return jnp.stack(cols, axis=-1)
 
 
@@ -45,6 +53,7 @@ def abc_sim_distance_ref(
     schedule=None,  # InterventionSchedule; theta carries its scale columns
     summary=None,  # SummarySpec / registry name / None (identity)
     distance: str = "euclidean",  # core.summaries.DISTANCE_KINDS name
+    mobility=None,  # [R, R] row-stochastic override (metapop models)
 ) -> jax.Array:
     """Distances [B]: simulate T days with hash RNG, summary distance vs
     observed. Default (identity, euclidean) is the paper's raw Euclidean and
@@ -55,7 +64,9 @@ def abc_sim_distance_ref(
         from repro.epi.models import DEFAULT_MODEL as model  # noqa: N811
     spec = get_summary(summary)
     kind = get_distance_kind(distance)
-    lowered = lower_summary(spec, distance, observed)
+    lowered = lower_summary(spec, distance, observed, n_regions=model.n_regions)
+    pool = pool_factor(spec, model.n_regions)
+    mob = engine.mobility_matrix(model, mobility) if model.is_regional else None
     theta = jnp.asarray(theta, jnp.float32)
     batch = theta.shape[0]
     num_days = observed.shape[1]
@@ -66,21 +77,28 @@ def abc_sim_distance_ref(
     state0 = engine.initial_state(model, theta, cfg)
     obs_by_day = jnp.swapaxes(lowered.obs_summary, 0, 1)  # [T, n_obs]
 
+    obs_idx = model.total_observed_idx
+
     def step(carry, inp):
         state, cum, binv, acc = carry
         day, obs_t, flush_t = inp
-        z = hash_normals(seed, idx, day, model.n_transitions)  # [B, n_trans]
+        z = hash_normals(
+            seed, idx, day, model.total_transitions, model.ctr_slots
+        )  # [B, R * n_trans]
         th_d = engine.effective_theta(model, schedule, theta, day)
-        nxt = engine.tau_leap_step(model, state, th_d, z, cfg.population)
+        nxt = engine.tau_leap_step(
+            model, state, th_d, z, cfg.population, mobility=mob
+        )
         cum, binv, acc = running_day(
-            spec, kind, lowered.weights, nxt[..., model.observed_idx], obs_t,
+            spec, kind, lowered.weights,
+            pool_channels(nxt[..., obs_idx], pool), obs_t,
             flush_t, cum, binv, acc,
         )
         return (nxt, cum, binv, acc), None
 
     days = jnp.arange(num_days, dtype=jnp.uint32)
     acc0 = state0[..., 0] * 0.0  # inherits varying mesh axes under shard_map
-    chan0 = state0[..., model.observed_idx] * 0.0
+    chan0 = pool_channels(state0[..., obs_idx], pool) * 0.0
     (state_f, _, _, acc), _ = jax.lax.scan(
         step, (state0, chan0, chan0, acc0), (days, obs_by_day, lowered.flush)
     )

@@ -70,6 +70,10 @@ def normal(seed, idx, ctr) -> jnp.ndarray:
     return r * jnp.cos(_TWO_PI * u2)
 
 
-def day_transition_ctr(day, k) -> jnp.ndarray:
-    """Counter layout: 8 transition slots per day (5 used)."""
-    return jnp.asarray(day, jnp.uint32) * np.uint32(8) + jnp.asarray(k, jnp.uint32)
+def day_transition_ctr(day, k, slots: int = 8) -> jnp.ndarray:
+    """Counter layout: `slots` transition slots per day (8 by default, 5
+    used by the paper's SIARD). Metapop models widen to
+    `CompartmentalModel.ctr_slots` (the next multiple of 8 above
+    R * n_transitions, flattened region-major: slot r * n_transitions + k);
+    at R=1 that is exactly 8, so single-region streams are unchanged."""
+    return jnp.asarray(day, jnp.uint32) * np.uint32(slots) + jnp.asarray(k, jnp.uint32)

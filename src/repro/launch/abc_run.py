@@ -29,8 +29,8 @@ from repro.core.abc import ABCConfig, ABCState, run_abc
 from repro.core.distributed import make_runner, make_wave_runner
 from repro.core.summaries import DISTANCE_KINDS, list_summaries
 from repro.epi.data import get_dataset
-from repro.epi.models import list_models
-from repro.epi.spec import InterventionSchedule
+from repro.epi.models import get_model, list_models
+from repro.epi.spec import InterventionSchedule, regionalize
 from repro.ioutils import atomic_write_text
 from repro.launch.mesh import make_host_mesh
 
@@ -185,9 +185,18 @@ def run_campaign_cli(args, parser):
                 f"{flag} has no effect with --campaign; use the grid flag "
                 f"{flag}s instead"
             )
+    models = tuple(args.models)
+    if args.regions > 1:
+        # regionalize every grid model: the campaign's shape cache keys on
+        # the resolved spec object, so spec-object cells behave like names
+        models = tuple(
+            regionalize(get_model(m), args.regions,
+                        args.mobility or "identity")
+            for m in models
+        )
     cfg = CampaignConfig(
         datasets=tuple(args.datasets),
-        models=tuple(args.models),
+        models=models,
         backends=tuple(args.backends),
         seeds=tuple(args.seeds),
         interventions=tuple(
@@ -226,6 +235,17 @@ def main(argv=None):
     ap.add_argument("--model", default="siard", choices=list_models(),
                     help="compartmental model to infer (registry name; the "
                          "paper's SIARD model is the default)")
+    ap.add_argument("--regions", type=int, default=1,
+                    help="regionalize --model into an N-region spatial "
+                         "metapopulation (see repro.epi.spec.regionalize); "
+                         "only metapop-aware models (e.g. metapop_seir) "
+                         "exchange mass between regions — others become N "
+                         "independent copies. 1 = the unchanged model")
+    ap.add_argument("--mobility", default="",
+                    help="mobility matrix for --regions > 1: 'identity' "
+                         "(uncoupled), 'uniform:EPS' or 'ring:EPS' "
+                         "(row-stochastic; see repro.epi.spec.make_mobility); "
+                         "default identity")
     ap.add_argument("--tolerance", type=float, default=1.6e4,
                     help="absolute epsilon; use --auto-tolerance to calibrate")
     ap.add_argument("--auto-tolerance", type=float, default=0.0, metavar="Q",
@@ -348,6 +368,14 @@ def main(argv=None):
                     help="path for the forecast JSON (default: stdout)")
     args = ap.parse_args(argv)
 
+    if args.regions < 1:
+        ap.error("--regions must be >= 1")
+    if args.mobility and args.regions == 1:
+        ap.error("--mobility has no effect without --regions > 1")
+    if args.scaling and (args.regions > 1 or args.mobility):
+        ap.error("--regions/--mobility are not supported with --scaling; "
+                 "regionalized specs go through single-run or --campaign")
+
     if args.campaign:
         return run_campaign_cli(args, ap)
     if args.scaling:
@@ -372,7 +400,12 @@ def main(argv=None):
         if value != ap.get_default(flag.lstrip("-").replace("-", "_")):
             ap.error(f"{flag} has no effect without --scaling")
 
-    ds = get_dataset(args.dataset, num_days=args.days, model=args.model)
+    model = args.model
+    if args.regions > 1:
+        model = regionalize(
+            get_model(args.model), args.regions, args.mobility or "identity"
+        )
+    ds = get_dataset(args.dataset, num_days=args.days, model=model)
     schedule = parse_intervention(args.intervention)
     interpret = _interpret_flag(args.interpret)
     tolerance = args.tolerance
@@ -381,7 +414,7 @@ def main(argv=None):
 
         pilot_cfg = ABCConfig(batch_size=args.batch, tolerance=1.0,
                               num_days=args.days, backend=args.backend,
-                              strategy="topk", top_k=1, model=args.model,
+                              strategy="topk", top_k=1, model=model,
                               schedule=schedule, interpret=interpret,
                               summary=args.summary, distance=args.distance)
         tolerance = calibrate_tolerance(ds, pilot_cfg, key=args.seed,
@@ -397,7 +430,7 @@ def main(argv=None):
         num_days=args.days,
         backend=args.backend,
         max_runs=args.max_runs,
-        model=args.model,
+        model=model,
         wave_loop=args.wave_loop,
         schedule=schedule,
         interpret=interpret,

@@ -1,0 +1,405 @@
+"""Spatial metapopulation acceptance surface (the region-axis refactor).
+
+Four layers of protection:
+
+  * R=1 BIT-IDENTITY — every pre-metapop registered model must produce
+    byte-for-byte the distances frozen in tests/data/r1_pins.npz (captured
+    against the pre-refactor tree) on all four compute paths. The region
+    axis is a refactor, not a fork: single-region users get the exact same
+    streams.
+  * mobility validation — malformed matrices fail loudly at spec
+    construction, never silently renormalize.
+  * coupling correctness — identity mobility factorizes into R independent
+    single-region runs (same noise slices, exact equality), and the R=4
+    metapop_seir kernel matches its hash-RNG oracle / the XLA paths.
+  * end-to-end — ABC posterior recovery on metapop_seir, and a 100-region
+    campaign smoke driving the shape cache with spec-object scenarios.
+"""
+
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.abc import ABCConfig, make_simulator, resolved_mobility, run_abc
+from repro.core.summaries import (
+    get_summary,
+    lower_summary,
+    summary_distance,
+)
+from repro.epi import engine
+from repro.epi.data import get_dataset, synthetic_dataset
+from repro.epi.models import get_model
+from repro.epi.spec import (
+    EpiModelConfig,
+    identity_mobility,
+    make_mobility,
+    regionalize,
+    validate_mobility,
+)
+from repro.kernels import abc_sim, ops, ref
+
+PINS = Path(__file__).parent / "data" / "r1_pins.npz"
+
+# the capture-time constants of tests/data/capture_r1_pins.py — changing
+# them here would recompute different quantities than the frozen pins
+PIN_BATCH, PIN_DAYS, PIN_SEED, PIN_KEY = 16, 14, 123, 5
+
+
+# ---------------------------------------------------------------------------
+# R=1 bit-identity: the refactor must not move a single bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", ["seiard", "seir", "siard", "sir"])
+def test_r1_bit_identity_pins(model):
+    """All four compute paths reproduce the pre-metapop golden distances
+    EXACTLY (np.testing.assert_array_equal, not allclose)."""
+    pins = np.load(PINS)
+    spec = get_model(model)
+    ds = get_dataset("synthetic_small", num_days=PIN_DAYS, model=spec)
+    cfg = ds.model_config()
+    theta = spec.prior().sample(jax.random.PRNGKey(0), (PIN_BATCH,))
+    obs = jnp.asarray(ds.observed, jnp.float32)
+    # inputs first: if these drift the distance comparison is meaningless
+    np.testing.assert_array_equal(np.asarray(theta), pins[f"{model}/theta"])
+    np.testing.assert_array_equal(np.asarray(obs), pins[f"{model}/observed"])
+
+    common = dict(population=cfg.population, a0=cfg.a0, r0=cfg.r0, d0=cfg.d0)
+    key = jax.random.PRNGKey(PIN_KEY)
+    got = {
+        "pallas": ops.abc_sim_distance(
+            theta, np.uint32(PIN_SEED), obs, model=spec, **common
+        ),
+        "oracle": ref.abc_sim_distance_ref(
+            theta, np.uint32(PIN_SEED), obs, model=spec, **common
+        ),
+        "xla_fused": engine.simulate_observed_lowmem(
+            spec, theta, key, cfg, obs
+        )[0],
+    }
+    sim = engine.simulate_observed(spec, theta, key, cfg)
+    lowered = lower_summary(get_summary(None), "euclidean", obs)
+    got["xla"] = summary_distance("euclidean", lowered, sim)
+    for backend, val in got.items():
+        np.testing.assert_array_equal(
+            np.asarray(val), pins[f"{model}/{backend}"],
+            err_msg=(
+                f"{model}/{backend} drifted from its pre-metapop pin — the "
+                "region-axis refactor changed an R=1 stream"
+            ),
+        )
+
+
+def test_r1_rng_slots_unchanged():
+    """Counter widening keeps slots=8 for every R=1 model (the hash-RNG
+    stream layout the pins freeze) and widens only past 8 transitions."""
+    for name in ("sir", "seir", "siard", "seiard"):
+        assert get_model(name).ctr_slots == 8, name
+    mp = get_model("metapop_seir")  # 4 regions x 3 transitions = 12 -> 16
+    assert mp.ctr_slots == 16
+    r100 = regionalize(mp, 100, "ring:0.1")  # 300 -> 304
+    assert r100.ctr_slots == 304
+
+
+# ---------------------------------------------------------------------------
+# mobility validation: loud failures, sound grammar
+# ---------------------------------------------------------------------------
+
+def test_validate_mobility_rejects_wrong_shape():
+    with pytest.raises(ValueError, match=r"\[3\]\[3\] matrix"):
+        validate_mobility(((1.0, 0.0), (0.0, 1.0)), 3)
+    with pytest.raises(ValueError, match=r"\[2\]\[2\] matrix"):
+        validate_mobility(((1.0, 0.0, 0.0), (0.0, 1.0, 0.0)), 2)
+
+
+def test_validate_mobility_rejects_negative_entries():
+    with pytest.raises(ValueError, match="negative"):
+        validate_mobility(((1.5, -0.5), (0.0, 1.0)), 2)
+
+
+def test_validate_mobility_rejects_non_row_stochastic():
+    with pytest.raises(ValueError, match="row-stochastic"):
+        validate_mobility(((0.5, 0.4), (0.0, 1.0)), 2)
+
+
+def test_regionalize_rejects_bad_matrix_at_spec_construction():
+    bad = ((1.0, 0.0, 0.0), (0.0, 1.0, 0.0), (0.0, 0.0, 0.5))
+    with pytest.raises(ValueError, match="row-stochastic"):
+        regionalize(get_model("seir"), 3, bad)
+
+
+def test_make_mobility_grammar():
+    assert make_mobility("identity", 3) == identity_mobility(3)
+    for spec_str in ("uniform:0.2", "ring:0.1"):
+        m = validate_mobility(make_mobility(spec_str, 5), 5)
+        assert all(abs(sum(row) - 1.0) < 1e-9 for row in m)
+        assert all(abs(m[r][r] - (1.0 - float(spec_str.split(":")[1]))) < 1e-9
+                   for r in range(5))
+    # ring sends eps/2 to each lattice neighbour (wraparound)
+    ring = make_mobility("ring:0.2", 4)
+    assert ring[0][1] == pytest.approx(0.1) and ring[0][3] == pytest.approx(0.1)
+    assert ring[0][2] == 0.0
+    for bad in ("gravity:0.1", "uniform", "ring:1.5", "identity:0.1"):
+        with pytest.raises(ValueError):
+            make_mobility(bad, 4)
+
+
+def test_abc_config_mobility_validation():
+    with pytest.raises(ValueError, match="row-stochastic"):
+        ABCConfig(mobility=((0.5, 0.4), (0.0, 1.0)))
+    cfg = ABCConfig(model="seir", mobility=identity_mobility(2))
+    with pytest.raises(ValueError, match="no region axis"):
+        resolved_mobility(cfg, get_model("seir"))
+
+
+# ---------------------------------------------------------------------------
+# coupling correctness
+# ---------------------------------------------------------------------------
+
+def test_identity_mobility_equals_independent_regions():
+    """With identity mobility, the R-region trajectory factorizes into R
+    independent single-region runs fed the matching region-major noise
+    slices — exact equality, whole trajectory."""
+    R = 3
+    metapop = regionalize(get_model("metapop_seir"), R, "identity")
+    r1 = regionalize(get_model("metapop_seir"), 1, "identity",
+                     name="metapop_r1_ref")
+    cfg = EpiModelConfig(
+        population=3e6, num_days=12, a0=90.0, r0=4.0, d0=2.0
+    )
+    theta = metapop.prior().sample(jax.random.PRNGKey(2), (8,))
+    key = jax.random.PRNGKey(9)
+    traj = np.asarray(engine.simulate(metapop, theta, key, cfg))
+
+    T = metapop.n_transitions
+    states = []
+    for r in range(R):
+        seed = r == metapop.seed_region
+        sub = EpiModelConfig(
+            population=cfg.population / R, num_days=cfg.num_days,
+            a0=cfg.a0 if seed else 0.0, r0=cfg.r0 if seed else 0.0,
+            d0=cfg.d0 if seed else 0.0,
+        )
+        states.append(engine.initial_state(r1, theta, sub))
+    for day in range(cfg.num_days):
+        # the exact per-day stream the regional scan draws, sliced per region
+        z = jax.random.normal(
+            jax.random.fold_in(key, day),
+            theta.shape[:-1] + (metapop.total_transitions,), jnp.float32,
+        )
+        for r in range(R):
+            states[r] = engine.tau_leap_step(
+                r1, states[r], theta, z[..., r * T:(r + 1) * T],
+                cfg.population / R,
+            )
+        ref_day = np.concatenate([np.asarray(s) for s in states], axis=-1)
+        np.testing.assert_array_equal(
+            traj[:, day, :], ref_day,
+            err_msg=f"day {day}: identity-mobility run is not independent",
+        )
+
+
+def test_metapop_seir_coupling_spreads_infection():
+    """Ring mobility must actually move mass: with identity mobility the
+    non-seed regions stay fully susceptible forever; with ring coupling
+    they develop infections."""
+    cfg = EpiModelConfig(population=4e6, num_days=20, a0=500.0)
+    spec = get_model("metapop_seir")  # R=4, ring:0.1
+    theta = jnp.asarray([spec.default_theta], jnp.float32)
+    key = jax.random.PRNGKey(0)
+    obs = engine.simulate_observed(spec, theta, key, cfg)  # [1, 8, T]
+    per_region = np.asarray(engine.regional_view(obs, spec))[0]  # [R, 2, T]
+    infected_final = per_region[:, 0, -1] + per_region[:, 1, -1]  # I+R at T
+    assert infected_final[spec.seed_region] > 0
+    assert (infected_final > 0).all(), (
+        f"ring mobility failed to spread infection: {infected_final}"
+    )
+    uncoupled = regionalize(spec, spec.n_regions, "identity")
+    obs_u = engine.simulate_observed(uncoupled, theta, key, cfg)
+    per_u = np.asarray(engine.regional_view(obs_u, uncoupled))[0]
+    final_u = per_u[:, 0, -1] + per_u[:, 1, -1]
+    off_seed = [r for r in range(spec.n_regions) if r != spec.seed_region]
+    assert (final_u[off_seed] == 0).all()
+
+
+@pytest.mark.parametrize("summary,distance", [
+    (None, "euclidean"),
+    ("region_pooled", "euclidean"),
+    ("log_weekly", "mae"),
+])
+def test_metapop_r4_kernel_matches_oracle(summary, distance):
+    """The fused Pallas kernel (mobility on const lanes, unrolled coupled
+    rows) matches the hash-RNG XLA oracle on the registered R=4 model."""
+    spec = get_model("metapop_seir")
+    ds = get_dataset("synthetic_small", num_days=12, model=spec)
+    cfg = ds.model_config()
+    theta = spec.prior().sample(jax.random.PRNGKey(0), (16,))
+    obs = jnp.asarray(ds.observed, jnp.float32)
+    common = dict(
+        population=cfg.population, a0=cfg.a0, r0=cfg.r0, d0=cfg.d0,
+        model=spec, summary=summary, distance=distance,
+    )
+    d_kernel = ops.abc_sim_distance(theta, np.uint32(3), obs, **common)
+    d_oracle = ref.abc_sim_distance_ref(theta, np.uint32(3), obs, **common)
+    assert np.isfinite(np.asarray(d_kernel)).all()
+    np.testing.assert_allclose(
+        np.asarray(d_kernel), np.asarray(d_oracle), rtol=2e-5, atol=1e-2
+    )
+
+
+@pytest.mark.parametrize("summary", [None, "region_pooled"])
+def test_metapop_r4_xla_matches_fused(summary):
+    """Post-hoc xla and the fused running-distance scan share the threefry
+    stream — their distances must agree on the regional path too."""
+    spec = get_model("metapop_seir")
+    ds = get_dataset("synthetic_small", num_days=12, model=spec)
+    theta = spec.prior().sample(jax.random.PRNGKey(1), (64,))
+    key = jax.random.PRNGKey(3)
+    dists = {}
+    for backend in ("xla", "xla_fused"):
+        cfg = ABCConfig(batch_size=64, chunk_size=64, num_days=12,
+                        backend=backend, model=spec, summary=summary)
+        sim = jax.jit(make_simulator(ds, cfg))
+        dists[backend] = np.asarray(sim(theta, key))
+    assert np.isfinite(dists["xla"]).all()
+    np.testing.assert_allclose(dists["xla"], dists["xla_fused"], rtol=2e-5)
+
+
+def test_region_pooled_is_identity_at_r1():
+    """The registered region_pooled summary is a no-op for single-region
+    models: pooling factor 1, identical distances to the identity summary."""
+    spec = get_model("seir")
+    ds = get_dataset("synthetic_small", num_days=10, model=spec)
+    theta = spec.prior().sample(jax.random.PRNGKey(4), (32,))
+    key = jax.random.PRNGKey(7)
+    out = {}
+    for summary in (None, "region_pooled"):
+        cfg = ABCConfig(batch_size=32, chunk_size=32, num_days=10,
+                        backend="xla_fused", model=spec, summary=summary)
+        out[summary] = np.asarray(jax.jit(make_simulator(ds, cfg))(theta, key))
+    np.testing.assert_array_equal(out[None], out["region_pooled"])
+
+
+def test_mobility_override_is_a_runtime_value():
+    """cfg.mobility overrides the spec's static matrix: identity override
+    of the ring-coupled model equals the identity-regionalized spec."""
+    spec = get_model("metapop_seir")
+    ds = get_dataset("synthetic_small", num_days=10, model=spec)
+    theta = spec.prior().sample(jax.random.PRNGKey(8), (32,))
+    key = jax.random.PRNGKey(2)
+    cfg_override = ABCConfig(
+        batch_size=32, chunk_size=32, num_days=10, backend="xla_fused",
+        model=spec, mobility=identity_mobility(spec.n_regions),
+    )
+    d_override = np.asarray(jax.jit(make_simulator(ds, cfg_override))(theta, key))
+    ident = regionalize(spec, spec.n_regions, "identity")
+    cfg_ident = ABCConfig(batch_size=32, chunk_size=32, num_days=10,
+                          backend="xla_fused", model=ident)
+    d_ident = np.asarray(jax.jit(make_simulator(ds, cfg_ident))(theta, key))
+    np.testing.assert_array_equal(d_override, d_ident)
+    # ...and it actually changes the result vs the spec's ring matrix
+    cfg_ring = ABCConfig(batch_size=32, chunk_size=32, num_days=10,
+                         backend="xla_fused", model=spec)
+    d_ring = np.asarray(jax.jit(make_simulator(ds, cfg_ring))(theta, key))
+    assert not np.array_equal(d_ring, d_ident)
+
+
+# ---------------------------------------------------------------------------
+# kernel lane budget: loud refusal past R=10, fine at the boundary
+# ---------------------------------------------------------------------------
+
+def test_kernel_lane_budget_boundary():
+    mp = get_model("metapop_seir")
+    r10 = regionalize(mp, 10, "ring:0.1")  # 8 + 20 + 100 = 128 lanes: fits
+    assert abc_sim.kernel_lane_budget_ok(r10, pool=1)
+    r11 = regionalize(mp, 11, "ring:0.1")
+    assert not abc_sim.kernel_lane_budget_ok(r11, pool=1)
+    # pooling frees summary lanes but mobility still needs R^2
+    assert abc_sim.kernel_lane_budget_ok(r10, pool=10)
+    assert not abc_sim.kernel_lane_budget_ok(
+        regionalize(mp, 100, "ring:0.1"), pool=100
+    )
+
+
+def test_kernel_refuses_oversized_metapop_loudly():
+    spec = regionalize(get_model("metapop_seir"), 100, "ring:0.1")
+    theta = spec.prior().sample(jax.random.PRNGKey(0), (128,))
+    obs = jnp.zeros((spec.total_observed, 8), jnp.float32)
+    with pytest.raises(ValueError, match="const-lane budget"):
+        ops.abc_sim_distance(
+            theta, np.uint32(0), obs, model=spec,
+            population=1e6, a0=100.0,
+        )
+
+
+# ---------------------------------------------------------------------------
+# end to end: posterior recovery + 100-region campaign smoke
+# ---------------------------------------------------------------------------
+
+def test_run_abc_recovers_truth_metapop():
+    """C2 for the spatial model: the ABC posterior concentrates around the
+    generating parameters of a 4-region coupled SEIR ground truth."""
+    spec = get_model("metapop_seir")
+    truth = spec.default_theta
+    ds = synthetic_dataset(
+        theta=truth, population=1e6, num_days=15, a0=100.0, seed=11,
+        name="recovery_metapop", model=spec,
+    )
+    pilot = ABCConfig(batch_size=4096, num_days=15, chunk_size=4096,
+                      backend="xla_fused", model=spec)
+    sim = jax.jit(make_simulator(ds, pilot))
+    th = spec.prior().sample(jax.random.PRNGKey(5), (4096,))
+    d = np.asarray(sim(th, jax.random.PRNGKey(6)))
+    eps = float(np.quantile(d[np.isfinite(d)], 5e-3))
+    cfg = ABCConfig(
+        batch_size=4096, tolerance=eps, target_accepted=60, chunk_size=4096,
+        max_runs=60, num_days=15, backend="xla_fused", model=spec,
+    )
+    post = run_abc(ds, cfg, key=0)
+    assert len(post) >= 60
+    prior = spec.prior()
+    width = np.asarray(prior.highs, np.float32) - np.asarray(
+        prior.lows, np.float32
+    )
+    err = np.abs(post.theta.mean(axis=0) - np.asarray(truth)) / width
+    assert (err <= 0.30).all(), (
+        f"metapop posterior-mean error {err} exceeds 0.30 of prior width"
+    )
+
+
+def test_campaign_100_region_smoke(tmp_path):
+    """The 100-region example: two spec-object scenarios through the
+    campaign runner, sharing ONE compiled wave loop (the shape cache keys
+    on the resolved spec, so unregistered regionalized specs behave like
+    registry names)."""
+    from repro.core.campaign import CampaignConfig, run_campaign
+
+    spec = regionalize(get_model("metapop_seir"), 100, "ring:0.1")
+    assert spec.total_state == 400 and spec.total_observed == 200
+    ds = get_dataset("synthetic_small", num_days=8, model=spec)
+    assert ds.observed.shape == (200, 8)
+    assert ds.observed_channels[:3] == ("I@r0", "R@r0", "I@r1")
+
+    cfg = CampaignConfig(
+        datasets=("synthetic_small",),
+        models=(spec,),
+        backends=("xla_fused",),
+        seeds=(0, 1),
+        batch_size=256,
+        num_days=8,
+        target_accepted=4,
+        auto_quantile=0.05,
+        pilot_size=256,
+        max_runs=12,
+        out_dir=str(tmp_path / "camp100"),
+        checkpoint_every=8,
+    )
+    report = run_campaign(cfg)
+    assert len(report.scenarios) == 2
+    for r in report.scenarios:
+        assert r.status == "ok", (r.name, r.status, r.detail)
+        assert r.model == spec.name  # serialized by tag, not by object
+        assert r.n_accepted >= cfg.target_accepted
+    assert report.compiled_shapes == 1  # both seeds share one wave loop

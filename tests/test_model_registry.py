@@ -70,7 +70,8 @@ def test_mass_conservation_and_nonnegativity(name):
     m = get_model(name)
     th = _theta(name, batch=64, seed=3)
     traj = engine.simulate(m, th, jax.random.PRNGKey(2), CFG)
-    assert traj.shape == (64, CFG.num_days, m.n_state)
+    # region-major flattened channel axis (== n_state for R=1 models)
+    assert traj.shape == (64, CFG.num_days, m.total_state)
     assert bool(jnp.all(jnp.isfinite(traj)))
     assert float(jnp.min(traj)) >= 0.0
     total = jnp.sum(traj, axis=-1)
@@ -103,7 +104,7 @@ def test_fused_distance_matches_full_trajectory(name):
     d_fused, state_f = engine.simulate_observed_lowmem(m, th, key, CFG, observed)
     np.testing.assert_allclose(np.asarray(d_full), np.asarray(d_fused), rtol=1e-5)
     assert float(d_fused[0]) == 0.0  # self-distance exactly zero
-    assert state_f.shape == (16, m.n_state)
+    assert state_f.shape == (16, m.total_state)
 
 
 @pytest.mark.parametrize("name", ALL_MODELS)

@@ -1,0 +1,161 @@
+"""Amortized-inference economics: NPE train-once cost vs ABC per-fit cost.
+
+    PYTHONPATH=src python benchmarks/bench_npe.py [--queries 32]
+
+The question this artifact answers: after how many posterior queries does
+training an NPE estimator (repro.core.npe) pay for itself against re-running
+an ABC fit per query? Three measured cells plus the derived amortization
+curve:
+
+  * `npe_train`  — one `train_npe` of the CI-sized `configs.epi_abc.npe_demo`
+    estimator (wall clock + the simulation budget it spends, once);
+  * `npe_query`  — per-query cost of `sample_posterior` on the trained
+    estimator (median over --queries distinct observed series; ZERO
+    simulations per query);
+  * `abc_fit`    — one wave-backed `run_abc` fit of the same (model, days,
+    acceptance target) — the per-query cost of NOT amortizing.
+
+`amortization.break_even_queries` = train cost / (per-fit cost - per-query
+cost): below it ABC is cheaper, above it NPE wins; `speedup_at_n` reports
+the wall-clock ratio at the --queries horizon. Emits the gate-compatible
+`bench-artifact/v1` envelope, diffed against
+`experiments/bench/baselines/npe.json` by tests/check_bench_regression.py
+(parity: the deterministic simulation/step counts; wall clocks gated at the
+usual threshold).
+"""
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from _harness import emit_artifact  # noqa: E402
+from common import render_table  # noqa: E402
+
+from repro.configs.epi_abc import npe_demo  # noqa: E402
+from repro.core import npe  # noqa: E402
+from repro.core.abc import ABCConfig, run_abc  # noqa: E402
+from repro.epi.data import synthetic_dataset  # noqa: E402
+
+#: per-query observed series are fresh synthetic datasets (distinct seeds):
+#: the amortized path must be measured on UNSEEN observations, not the
+#: training dataset
+QUERY_SEED0 = 100
+
+
+def _query_dataset(workload, seed: int):
+    return synthetic_dataset(
+        theta=(0.5, 0.2, 1.0), population=1e6,
+        num_days=workload.abc.num_days, a0=100.0, seed=seed,
+        name=f"npe_query_{seed}", model=workload.abc.model,
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--queries", type=int, default=32,
+                    help="amortization horizon: distinct posterior queries")
+    ap.add_argument("--accept", type=int, default=64,
+                    help="acceptance target of the per-query ABC fit cell")
+    args = ap.parse_args(argv)
+
+    workload = npe_demo()
+    ds = workload.load_dataset()
+    npe_cfg = workload.abc.npe
+
+    # -- train once --------------------------------------------------------
+    est = npe.train_npe(ds, workload.abc, key=0)
+    train = {
+        "wall_s": est.train_wall_s,
+        "simulations": est.train_sims,
+        "sims_per_s": est.train_sims / est.train_wall_s,
+        "train_steps": est.train_steps_done,
+        "final_nll": float(est.final_loss),
+    }
+
+    # -- query many --------------------------------------------------------
+    est.sample_posterior(ds.observed, workload.abc.target_accepted)  # warmup
+    per_query = []
+    for i in range(args.queries):
+        q = _query_dataset(workload, QUERY_SEED0 + i)
+        t0 = time.perf_counter()
+        post = est.sample_posterior(
+            q.observed, workload.abc.target_accepted, key=i
+        )
+        per_query.append(time.perf_counter() - t0)
+        assert post.runs == 0  # zero waves per query, by construction
+    query = {
+        "wall_s": float(np.median(per_query)),
+        "wall_s_p90": float(np.quantile(per_query, 0.9)),
+        "queries": args.queries,
+        "draws_per_query": workload.abc.target_accepted,
+        "simulations_per_query": 0,
+    }
+
+    # -- the unamortized alternative: one wave-backed fit per query --------
+    abc_cfg = ABCConfig(
+        batch_size=4096, chunk_size=4096, tolerance=float("inf"),
+        strategy="topk", top_k=args.accept, target_accepted=args.accept,
+        max_runs=8, num_days=workload.abc.num_days, backend="xla_fused",
+        model=workload.abc.model,
+    )
+    t0 = time.perf_counter()
+    abc_post = run_abc(ds, abc_cfg, key=0)
+    abc_wall = time.perf_counter() - t0
+    abc_fit = {
+        "wall_s": abc_wall,
+        "simulations": abc_post.simulations,
+        "accepted": len(abc_post),
+    }
+
+    # -- amortization ------------------------------------------------------
+    saving = abc_fit["wall_s"] - query["wall_s"]
+    break_even = (
+        train["wall_s"] / saving if saving > 0 else float("inf")
+    )
+    n = args.queries
+    npe_total = train["wall_s"] + n * query["wall_s"]
+    abc_total = n * abc_fit["wall_s"]
+    amortization = {
+        "break_even_queries": break_even,
+        "horizon_queries": n,
+        "npe_total_wall_s_at_n": npe_total,
+        "abc_total_wall_s_at_n": abc_total,
+        "speedup_at_n": abc_total / npe_total,
+    }
+
+    print(render_table(
+        ["cell", "wall_s", "simulations"],
+        [["npe_train", f"{train['wall_s']:.2f}", train["simulations"]],
+         ["npe_query (median)", f"{query['wall_s']:.4f}", 0],
+         ["abc_fit", f"{abc_fit['wall_s']:.2f}", abc_fit["simulations"]]],
+    ))
+    print(f"\nbreak-even at {break_even:.1f} queries; at n={n}: "
+          f"npe {npe_total:.2f}s vs abc {abc_total:.2f}s "
+          f"({amortization['speedup_at_n']:.1f}x)")
+
+    path = emit_artifact(
+        "npe",
+        cells={"npe_train": train, "npe_query": query, "abc_fit": abc_fit},
+        # deterministic by construction: estimator/fit budgets, never wall
+        parity={
+            "train_steps": npe_cfg.train_steps,
+            "train_batch": npe_cfg.train_batch,
+            "train_simulations": est.train_sims,
+            "n_features": est.n_features,
+            "n_params": est.n_params,
+            "abc_simulations": abc_post.simulations,
+            "draws_per_query": workload.abc.target_accepted,
+        },
+        meta={"model": workload.abc.model, "days": workload.abc.num_days,
+              "queries": args.queries, "accept": args.accept},
+        extra={"amortization": amortization},
+    )
+    print(f"\nsaved {path}")
+
+
+if __name__ == "__main__":
+    main()

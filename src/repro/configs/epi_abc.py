@@ -3,7 +3,9 @@ epidemiology models (DESIGN.md §1). Scales from this CPU container (reduced
 batch) to the production pod meshes (launch/abc_run.py). Since the
 stoichiometry-driven refactor a workload names its model via
 `ABCConfig.model`; `cross_model_sweep()` yields one workload per registry
-entry for model-comparison runs."""
+entry for model-comparison runs, `serving_demo()`/`npe_serving_demo()`
+template the query server, and `npe_demo()` sizes the CI amortized-inference
+estimator (backend="npe")."""
 
 import dataclasses
 from typing import Tuple
@@ -87,6 +89,48 @@ def serving_demo(store_dir: str | None = None, data_dir: str | None = None):
         ),
         data_dir=data_dir,
         store_dir=store_dir,
+    )
+
+
+def npe_demo(model: str = "sir", num_days: int = 15) -> ABCWorkload:
+    """CI-sized amortized-inference workload: a tiny NPE estimator trained
+    on ~1e5 simulator calls in seconds (the nightly trains exactly this via
+    benchmarks/bench_npe.py). Production fits scale `train_steps`,
+    `train_batch` and `hidden`; the workflow is identical."""
+    from repro.core.npe import NPEConfig
+
+    return ABCWorkload(
+        name=f"epi-npe-demo-{model}",
+        dataset="synthetic_small",
+        abc=ABCConfig(
+            target_accepted=256,
+            num_days=num_days,
+            backend="npe",
+            model=model,
+            npe=NPEConfig(
+                train_steps=300,
+                train_batch=256,
+                hidden=64,
+                n_components=4,
+                n_pilot=512,
+                fine_tune_steps=50,
+            ),
+        ),
+    )
+
+
+def npe_serving_demo(store_dir: str | None = None,
+                     data_dir: str | None = None):
+    """`serving_demo` with the amortized fit backend: the first query of a
+    (model, summary, schedule) trains the estimator; every later dataset
+    version is a fine-tune + forward pass, never a wave campaign."""
+    from repro.core.npe import NPEConfig
+
+    return dataclasses.replace(
+        serving_demo(store_dir=store_dir, data_dir=data_dir),
+        fit_backend="npe",
+        npe=NPEConfig(train_steps=120, train_batch=128, n_pilot=256,
+                      fine_tune_steps=20),
     )
 
 

@@ -34,8 +34,13 @@ The engine is resumable (ABCState) and backend-pluggable:
   backend="xla"        paper-faithful full-trajectory simulate + distance
   backend="xla_fused"  running-distance scan (no [B, n_obs, T] tensor)
   backend="pallas"     fused VMEM-resident Pallas kernel (repro.kernels)
+  backend="npe"        amortized neural posterior estimation (repro.core.npe):
+                       no waves at all — a mixture-density estimator trained
+                       once on simulator output answers queries with a single
+                       forward pass. `run_abc` delegates to `npe.run_npe`;
+                       the wave machinery below never runs for this backend.
 
-Every backend accepts every registered (summary, distance) pair
+Every wave backend accepts every registered (summary, distance) pair
 (ABCConfig.summary / ABCConfig.distance, see repro.core.summaries): the
 "xla" path applies the summary post hoc, "xla_fused" folds it into the
 running scan, and "pallas" lowers it into the kernel's per-day accumulator
@@ -132,14 +137,26 @@ class ABCConfig:
     #: RUNTIME value on every backend (fconst lanes on pallas), so mobility
     #: sweeps share one compilation.
     mobility: Optional[Tuple[Tuple[float, ...], ...]] = None
+    #: backend="npe" only: training hyperparameters (core.npe.NPEConfig);
+    #: None uses the NPEConfig defaults. Ignored by the wave backends.
+    npe: Optional[object] = None
 
     def __post_init__(self):
         if self.strategy not in ("outfeed", "topk"):
             raise ValueError(f"unknown strategy {self.strategy!r}")
         if self.strategy == "outfeed" and self.batch_size % self.chunk_size:
             raise ValueError("batch_size must be a multiple of chunk_size")
-        if self.backend not in ("xla", "xla_fused", "pallas"):
+        if self.backend not in ("xla", "xla_fused", "pallas", "npe"):
             raise ValueError(f"unknown backend {self.backend!r}")
+        if self.npe is not None:
+            from repro.core.npe import resolve_npe_config
+
+            resolve_npe_config(self.npe)  # raises loudly on wrong type
+            if self.backend != "npe":
+                raise ValueError(
+                    f"cfg.npe is set but backend={self.backend!r}; NPE "
+                    "hyperparameters only apply to backend='npe'"
+                )
         get_distance_kind(self.distance)  # raises on unknown names
         get_summary(self.summary)
         if self.wave_loop not in ("auto", "host", "device"):
@@ -254,6 +271,11 @@ def make_parametric_simulator(spec, cfg: ABCConfig):
     """
     from repro.epi.spec import EpiModelConfig
 
+    if cfg.backend == "npe":
+        raise ValueError(
+            "backend='npe' has no theta -> distance simulator; it is an "
+            "amortized estimator — use repro.core.npe.train_npe / run_npe"
+        )
     if cfg.backend == "pallas":
         raise ValueError(
             "pallas bakes (population, a0, r0, d0) into the kernel as static "
@@ -325,6 +347,11 @@ def make_simulator(dataset: CountryData, cfg: ABCConfig) -> SimulatorFn:
     `cfg.schedule`, theta must carry the widened scale columns
     (`schedule_prior(spec, cfg.schedule)` samples the right layout).
     """
+    if cfg.backend == "npe":
+        raise ValueError(
+            "backend='npe' has no theta -> distance simulator; it is an "
+            "amortized estimator — use repro.core.npe.train_npe / run_npe"
+        )
     if cfg.autotune:
         # fill tile / scan_unroll from the measured tuning cache (a miss
         # runs the search once and persists it); returns autotune=False so
@@ -805,6 +832,17 @@ def run_abc(
         outfeed-strategy runs) or by passing `wave_runner` explicitly
         (see core.distributed.make_wave_runner for the sharded styles).
     """
+    if cfg.backend == "npe":
+        # the amortized backend has no wave loop: train the estimator, then
+        # one forward pass. The wave-driver knobs make no sense here.
+        if run_fn is not None or wave_runner is not None or state is not None:
+            raise ValueError(
+                "backend='npe' does not run waves; run_fn / wave_runner / "
+                "resumable state do not apply"
+            )
+        from repro.core import npe
+
+        return npe.run_npe(dataset, cfg, key, prior=prior, verbose=verbose)
     spec = get_model(cfg.model)
     if isinstance(key, int):
         key = jax.random.PRNGKey(key)

@@ -20,9 +20,17 @@ simulations that a server can batch. Three pieces:
     re-fit can never corrupt what the server reads.
   * `EpiServer` — answers `ForecastQuery` batches: groups compatible queries
     by compiled shape, pads each group to a fixed lane count, answers the
-    whole group with ONE `batched` call, and (re-)fits posteriors on demand
-    — warm-starting SMC from the previous version's population when the
-    dataset content changes (`SMCConfig.initial_particles`).
+    whole group with ONE `batched` call, and (re-)fits posteriors on demand.
+    Two fit backends (`ServeConfig.fit_backend`):
+      - "smc" (default): SMC-ABC per dataset version, warm-started from the
+        previous version's population when the content changes
+        (`SMCConfig.initial_particles`);
+      - "npe": a `repro.core.npe` estimator trained ONCE per
+        (model, summary, schedule) is the amortized fast path — a posterior
+        for any dataset version is a forward pass + mixture draws, ZERO
+        simulation waves (pinned by tests), and a version change costs at
+        most `NPEConfig.fine_tune_steps` gradient steps instead of a wave
+        campaign. Estimators persist next to the PosteriorStore.
 
 Batched responses are BIT-IDENTICAL to sequential `posterior_forecast`
 calls for the same (query, seed): both paths subsample/widen theta with the
@@ -483,6 +491,28 @@ class ServeConfig:
     data_dir: Optional[str] = None
     #: PosteriorStore directory (None = in-memory cache only)
     store_dir: Optional[str] = None
+    #: "smc" fits per dataset version via SMC-ABC waves; "npe" trains one
+    #: amortized estimator per (model, summary, schedule) and answers every
+    #: version with a forward pass (+ optional fine-tune on version change)
+    fit_backend: str = "smc"
+    #: fit_backend="npe" only: training hyperparameters (core.npe.NPEConfig);
+    #: None uses the NPEConfig defaults
+    npe: Optional[object] = None
+
+    def __post_init__(self):
+        if self.fit_backend not in ("smc", "npe"):
+            raise ValueError(
+                f"unknown fit_backend {self.fit_backend!r} "
+                "(expected 'smc' or 'npe')"
+            )
+        if self.npe is not None:
+            from repro.core.npe import resolve_npe_config
+
+            resolve_npe_config(self.npe)
+            if self.fit_backend != "npe":
+                raise ValueError(
+                    "cfg.npe is set but fit_backend is not 'npe'"
+                )
 
 
 class EpiServer:
@@ -507,9 +537,13 @@ class EpiServer:
         )
         #: base cache key -> (dataset version, posterior)
         self._posteriors: Dict[str, Tuple[str, Posterior]] = {}
+        #: fit_backend="npe": base cache key -> trained NPEstimator
+        self._estimators: Dict[str, object] = {}
         self.fits = 0
         self.warm_fits = 0
         self.batched_calls = 0
+        self.npe_trains = 0
+        self.npe_fine_tunes = 0
 
     # -- cache keys --------------------------------------------------------
     def posterior_key(self, dataset_name: str, model: str) -> str:
@@ -576,6 +610,8 @@ class EpiServer:
         hit = self._posteriors.get(bk)
         if hit is not None and hit[0] == version:
             return hit[1], ds, "cached"
+        if self.cfg.fit_backend == "npe":
+            return self._ensure_npe(bk, ds, version)
         if self.store is not None:
             stored = self.store.get(bk, version)
             if stored is not None:
@@ -591,6 +627,69 @@ class EpiServer:
         if self.store is not None:
             self.store.put(bk, version, post)
         return post, ds, "warm_refit" if warm is not None else "cold_fit"
+
+    def _estimator_path(self, bk: str) -> Optional[str]:
+        """On-disk home of a trained estimator (beside the PosteriorStore)."""
+        if self.cfg.store_dir is None:
+            return None
+        return os.path.join(
+            self.cfg.store_dir, "npe", f"{PosteriorStore._slug(bk)}.npz"
+        )
+
+    def _npe_train_cfg(self, model: str):
+        """The backend='npe' ABCConfig mirroring the SMC fit template: same
+        model / window / summary / schedule, so NPE and SMC posteriors for a
+        dataset share the cache key and only the fit mechanism differs."""
+        from repro.core.abc import ABCConfig
+
+        f = self.cfg.fit
+        return ABCConfig(
+            model=model, num_days=f.num_days, backend="npe",
+            summary=f.summary, distance=f.distance, schedule=f.schedule,
+            mobility=f.mobility, target_accepted=f.n_particles,
+            npe=self.cfg.npe,
+        )
+
+    def _ensure_npe(self, bk: str, ds: CountryData, version: str):
+        """Amortized posterior path: the estimator is trained at most once
+        per cache key; every dataset version is answered with a forward
+        pass. A version change while an estimator exists costs only
+        `NPEConfig.fine_tune_steps` gradient steps (0 = free refresh) —
+        never a simulation-wave campaign (`self.fits` stays untouched)."""
+        from repro.core import npe as npe_mod
+
+        if self.store is not None:
+            stored = self.store.get(bk, version)
+            if stored is not None:
+                self._posteriors[bk] = (version, stored)
+                return stored, ds, "cached"
+        cfg = self._npe_train_cfg(ds.model)
+        est = self._estimators.get(bk)
+        path = self._estimator_path(bk)
+        if est is None and path is not None and os.path.exists(path):
+            est = npe_mod.NPEstimator.load(path)
+        if est is None:
+            est = npe_mod.train_npe(ds, cfg, key=self.cfg.fit_seed)
+            self.npe_trains += 1
+            status = "cold_fit"
+        else:
+            # the estimator amortizes over content, but the posterior cache
+            # missed: the dataset version moved (or the cache is cold) —
+            # refresh with a short fine-tune against the current scalars
+            est = npe_mod.fine_tune(est, ds, key=self.cfg.fit_seed)
+            self.npe_fine_tunes += 1
+            status = "warm_refit"
+        self._estimators[bk] = est
+        if path is not None:
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            est.save(path)
+        post = est.sample_posterior(
+            ds.observed, self.cfg.fit.n_particles, key=self.cfg.fit_seed
+        )
+        self._posteriors[bk] = (version, post)
+        if self.store is not None:
+            self.store.put(bk, version, post)
+        return post, ds, status
 
     def _fit(self, ds: CountryData, model: str, warm: Optional[Posterior]):
         fit = dataclasses.replace(self.cfg.fit, model=model)
@@ -679,4 +778,6 @@ class EpiServer:
             "warm_fits": self.warm_fits,
             "batched_calls": self.batched_calls,
             "compiled_shapes": self.kernels.n_compiled,
+            "npe_trains": self.npe_trains,
+            "npe_fine_tunes": self.npe_fine_tunes,
         }

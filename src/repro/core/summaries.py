@@ -394,6 +394,38 @@ def running_finalize(kind: DistanceKind, mean_scale: Array, acc: Array) -> Array
     return jnp.sqrt(acc) if kind.root else acc
 
 
+def flush_columns(num_days: int, bin_days: int) -> np.ndarray:
+    """Static day indices of the flush (bin-closing) columns, [n_bins] i64.
+
+    These are the columns of the running-bin layout that hold actual summary
+    values; everything else is an in-progress partial bin. bin_days == 1
+    degenerates to every day."""
+    t = np.arange(num_days)
+    return t[((t + 1) % bin_days == 0) | (t == num_days - 1)]
+
+
+def summary_features(
+    spec: SummarySpec, series: Array, n_regions: int = 1
+) -> Array:
+    """Flatten a series to its summary FEATURE vector: [..., n_obs, T] ->
+    [..., n_chan * n_bins].
+
+    The conditioning-feature lowering used by the NPE backend
+    (repro.core.npe): region-pool, apply the summary transform, then keep
+    only the flush-day columns — exactly the values the running accumulator
+    compares, so the features carry the same information the ABC distance
+    sees. Applied identically to simulated batches ([B, n_obs, T]) and the
+    observed side ([n_obs, T]); the flush-column gather is static (shape
+    depends only on num_days/bin_days), so it traces under jit/vmap.
+    """
+    x = pool_channels(jnp.asarray(series, jnp.float32),
+                      pool_factor(spec, n_regions), axis=-2)
+    s = apply_summary(spec, x)
+    cols = flush_columns(x.shape[-1], spec.bin_days)
+    feats = s[..., cols]  # [..., n_chan, n_bins]
+    return feats.reshape(feats.shape[:-2] + (-1,))
+
+
 def summary_pairs() -> Tuple[Tuple[str, str], ...]:
     """Every registered (summary, distance) combination — the parity-test
     and benchmark sweep space."""

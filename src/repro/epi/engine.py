@@ -7,17 +7,20 @@ applying the stoichiometry matrix. With the SIARD spec it reproduces the
 original hand-unrolled implementation bit-for-bit (same noise layout, same
 clamp order, same accumulation order — pinned by tests/test_model_registry).
 
-Three entry points mirror the original module:
+Four entry points mirror the original module:
 
   * `simulate`                 — full [B, T, n_state] trajectory
   * `simulate_observed`        — observed channels only, [B, n_obs, T]
   * `simulate_observed_lowmem` — fused simulate + running squared distance
                                  (the beyond-paper memory optimization)
+  * `simulate_features`        — simulate + summary FEATURE vectors,
+                                 [B, n_features] (the NPE backend's batched
+                                 training-pair generator, repro.core.npe)
 
 The Pallas path (`repro.kernels.abc_sim`) inlines the same spec into a fused
 VMEM-resident kernel; this module is the paper-faithful XLA reference.
 
-All three entry points optionally take an `InterventionSchedule`: theta then
+All entry points optionally take an `InterventionSchedule`: theta then
 carries extra per-window scale columns and each day's hazards are computed
 with that day's window-effective parameters (`effective_param_rows` — the
 row-level helper the Pallas kernel shares, like `drain_and_apply`).
@@ -426,3 +429,30 @@ def simulate_observed_lowmem(
         unroll=max(1, int(unroll)),
     )
     return running_finalize(kind, lowered.mean_scale, acc_f), state_f
+
+
+def simulate_features(
+    model: CompartmentalModel,
+    theta: jax.Array,
+    key: jax.Array,
+    cfg: EpiModelConfig,
+    schedule: Optional[InterventionSchedule] = None,
+    breakpoints=None,
+    summary=None,
+    mobility=None,
+) -> jax.Array:
+    """Simulate + summary feature vectors: [B, p] theta -> [B, n_features].
+
+    The batched training-pair generator of the NPE backend (repro.core.npe):
+    one call yields a device-resident batch of `(theta, x)` pairs where
+    `x = summary_features(summary, simulate_observed(theta))` — the same
+    summary values the ABC running accumulator compares, flattened to the
+    flush-day columns (core.summaries.summary_features). Noise streams are
+    the paper-faithful `simulate` streams, so a feature batch under a given
+    key is reproducible across runs and backends.
+    """
+    from repro.core.summaries import get_summary, summary_features
+
+    sim = simulate_observed(model, theta, key, cfg, schedule, breakpoints,
+                            mobility)
+    return summary_features(get_summary(summary), sim, model.n_regions)

@@ -18,6 +18,32 @@ model, with multi-device sharding, checkpoint/resume and backend selection.
     PYTHONPATH=src python -m repro.launch.abc_run --campaign \
         --datasets italy new_zealand usa --models siard seiard \
         --auto-tolerance 1e-3 --accept 100 --out experiments/campaigns/demo
+
+    # amortized inference: train an NPE estimator instead of running waves
+    # (backend=npe; --npe-* flags size the estimator, docs/ARCHITECTURE.md)
+    PYTHONPATH=src python -m repro.launch.abc_run --backend npe \
+        --model sir --dataset synthetic_small --days 20 --accept 256
+
+    # strong/weak scaling study of the wave loop (bench-artifact/v1 JSON)
+    PYTHONPATH=src python -m repro.launch.abc_run --scaling \
+        --models siard --backends xla_fused --scaling-devices 1 2 4
+
+    # posterior-predictive forecast bands (optionally counterfactual)
+    PYTHONPATH=src python -m repro.launch.abc_run --dataset italy \
+        --intervention "alpha@25=0.1:1" --forecast 14 \
+        --forecast-schedule none --forecast-out bands.json
+
+Flag families (full list: --help): single-run fitting (--dataset --model
+--days --batch --accept --tolerance/--auto-tolerance --strategy --summary
+--distance --intervention --seed), backend selection (--backend xla |
+xla_fused | pallas | npe, --tile --scan-unroll --autotune --interpret,
+--npe-steps --npe-batch --npe-hidden --npe-components), spatial
+metapopulation (--regions --mobility), checkpoint/resume (--state),
+multi-device (--multi-device --wave-loop), campaign grids (--campaign
+--datasets --models --backends --seeds --interventions --summaries --out),
+scaling studies (--scaling --scaling-devices --scaling-waves --scaling-reps
+--scaling-out), and forecasting (--forecast --forecast-schedule
+--forecast-out).
 """
 
 from __future__ import annotations
@@ -260,7 +286,15 @@ def main(argv=None):
     ap.add_argument("--days", type=int, default=20)
     ap.add_argument("--strategy", default="outfeed", choices=["outfeed", "topk"])
     ap.add_argument("--backend", default="xla_fused",
-                    choices=["xla", "xla_fused", "pallas"])
+                    choices=["xla", "xla_fused", "pallas", "npe"])
+    ap.add_argument("--npe-steps", type=int, default=None,
+                    help="backend=npe: training steps (default NPEConfig)")
+    ap.add_argument("--npe-batch", type=int, default=None,
+                    help="backend=npe: fresh simulations per training step")
+    ap.add_argument("--npe-hidden", type=int, default=None,
+                    help="backend=npe: MDN trunk width")
+    ap.add_argument("--npe-components", type=int, default=None,
+                    help="backend=npe: mixture components")
     ap.add_argument("--summary", default="identity",
                     choices=list(list_summaries()),
                     help="summary statistic compared by --distance (every "
@@ -376,6 +410,20 @@ def main(argv=None):
         ap.error("--regions/--mobility are not supported with --scaling; "
                  "regionalized specs go through single-run or --campaign")
 
+    if "npe" in args.backends and (args.campaign or args.scaling):
+        ap.error("backend 'npe' is not a campaign/scaling grid axis (it has "
+                 "no wave loop to shard); use the single-run --backend npe")
+    if args.backend == "npe":
+        if args.multi_device:
+            ap.error("--multi-device has no effect with --backend npe: "
+                     "training is a single-device jitted loop")
+        if args.auto_tolerance:
+            ap.error("--auto-tolerance is wave-backend-only; backend npe "
+                     "has no tolerance (posterior is a density estimator)")
+        if args.state:
+            ap.error("--state is wave-backend-only; NPE runs are not "
+                     "checkpoint/resumable (re-train or fine-tune instead)")
+
     if args.campaign:
         return run_campaign_cli(args, ap)
     if args.scaling:
@@ -421,6 +469,20 @@ def main(argv=None):
                                         quantile=args.auto_tolerance)
         print(f"[abc] auto-calibrated tolerance = {tolerance:.4g} "
               f"(quantile {args.auto_tolerance:g})")
+    npe_overrides = {
+        k: v for k, v in (("train_steps", args.npe_steps),
+                          ("train_batch", args.npe_batch),
+                          ("hidden", args.npe_hidden),
+                          ("n_components", args.npe_components))
+        if v is not None
+    }
+    if npe_overrides and args.backend != "npe":
+        ap.error("--npe-* flags have no effect without --backend npe")
+    npe_cfg = None
+    if npe_overrides:
+        from repro.core.npe import NPEConfig
+
+        npe_cfg = NPEConfig(**npe_overrides)
     cfg = ABCConfig(
         batch_size=args.batch,
         tolerance=tolerance,
@@ -439,6 +501,7 @@ def main(argv=None):
         tile=args.tile,
         scan_unroll=args.scan_unroll,
         autotune=args.autotune,
+        npe=npe_cfg,
     )
     run_fn = None
     wave_runner = None

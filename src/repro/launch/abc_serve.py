@@ -8,16 +8,28 @@
     PYTHONPATH=src python -m repro.launch.abc_serve \
         --data-dir data/ --store store/ --interval 300
 
+    # amortized fast path: the re-fit is an NPE fine-tune, not a campaign
+    PYTHONPATH=src python -m repro.launch.abc_serve --once --backend npe \
+        --data-dir data/ --store store/ --models sir --days 21
+
 The serving split (see repro.core.serving): `serve --epi` answers queries
 from the posterior store; THIS process keeps the store fresh. Each sweep
 hashes every `<name>.json` dataset's content and, for each (dataset,
-model) pair whose version moved past the stored fit, runs an SMC re-fit
-WARM-STARTED from the previous version's weighted population
-(`SMCConfig.initial_particles`) — new daily rows barely move a posterior,
-so round 0 costs n_particles simulations instead of a full prior wave —
-then swaps the store entry atomically (tmp+rename on both the .npz and
-the index). A query server crash-reading mid-swap is impossible; a daemon
-crash mid-fit leaves the previous complete entry being served.
+model) pair whose version moved past the stored fit, refreshes the
+posterior and swaps the store entry atomically (tmp+rename on both the
+.npz and the index). A query server crash-reading mid-swap is impossible;
+a daemon crash mid-fit leaves the previous complete entry being served.
+
+Two refresh mechanisms (`--backend`):
+
+  * smc (default) — an SMC re-fit WARM-STARTED from the previous version's
+    weighted population (`SMCConfig.initial_particles`): new daily rows
+    barely move a posterior, so round 0 costs n_particles simulations
+    instead of a full prior wave.
+  * npe — a `repro.core.npe` estimator is trained on the FIRST sweep, then
+    every later version change costs only `--npe-fine-tune` gradient steps
+    (0 = a pure forward pass, zero simulation waves) before re-sampling
+    the store entry. The estimator itself persists under `<store>/npe/`.
 """
 
 from __future__ import annotations
@@ -73,12 +85,38 @@ def main(argv=None):
     ap.add_argument("--fit-rounds", type=int, default=3)
     ap.add_argument("--fit-quantile", type=float, default=0.5)
     ap.add_argument("--fit-backend", default="xla_fused",
-                    choices=["xla", "xla_fused", "pallas"])
+                    choices=["xla", "xla_fused", "pallas"],
+                    help="simulation backend of the SMC waves "
+                         "(--backend smc only)")
+    ap.add_argument("--backend", default="smc", choices=["smc", "npe"],
+                    help="refresh mechanism: SMC re-fit waves, or an "
+                         "amortized NPE estimator fine-tuned per version")
+    ap.add_argument("--npe-steps", type=int, default=None,
+                    help="--backend npe: initial training steps "
+                         "(default NPEConfig)")
+    ap.add_argument("--npe-fine-tune", type=int, default=None,
+                    help="--backend npe: gradient steps per version change "
+                         "(0 = zero-cost refresh)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     from repro.core.serving import EpiServer, ServeConfig
     from repro.core.smc import SMCConfig
+
+    if args.backend != "npe" and (
+        args.npe_steps is not None or args.npe_fine_tune is not None
+    ):
+        ap.error("--npe-* flags have no effect without --backend npe")
+    npe_cfg = None
+    if args.backend == "npe":
+        from repro.core.npe import NPEConfig
+
+        overrides = {
+            k: v for k, v in (("train_steps", args.npe_steps),
+                              ("fine_tune_steps", args.npe_fine_tune))
+            if v is not None
+        }
+        npe_cfg = NPEConfig(**overrides) if overrides else None
 
     server = EpiServer(ServeConfig(
         fit=SMCConfig(
@@ -92,6 +130,8 @@ def main(argv=None):
         fit_seed=args.seed,
         data_dir=args.data_dir,
         store_dir=args.store,
+        fit_backend=args.backend,
+        npe=npe_cfg,
     ))
 
     sweeps = 0

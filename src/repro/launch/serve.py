@@ -7,9 +7,11 @@ LM mode (decoder-family archs; batched prefill + decode loop):
         --requests 8 --prompt-len 16 --gen 8
 
 Epidemiology mode (the paper workload's outward face): batched posterior
-forecast / counterfactual queries answered from cached SMC-ABC fits —
-queries sharing a compiled forecast shape are microbatched into ONE
-compiled call (see repro.core.serving):
+forecast / counterfactual queries answered from cached fits — queries
+sharing a compiled forecast shape are microbatched into ONE compiled call
+(see repro.core.serving). On-demand fits run SMC-ABC waves by default;
+`--backend npe` swaps in the amortized estimator (repro.core.npe), making
+every fit a forward pass after one training run:
 
     PYTHONPATH=src python -m repro.launch.serve --epi \
         --queries queries.json --data-dir data/ --store store/ --days 21
@@ -185,6 +187,7 @@ def run_epi_cli(args):
         fit_seed=args.seed,
         data_dir=args.data_dir or None,
         store_dir=args.store or None,
+        fit_backend=args.backend,
     )
     server = EpiServer(cfg)
     t0 = time.time()
@@ -202,7 +205,9 @@ def run_epi_cli(args):
         print(text)
     print(
         f"[serve --epi] {len(responses)} queries, {stats['fits']} fits "
-        f"({stats['warm_fits']} warm), {stats['batched_calls']} batched "
+        f"({stats['warm_fits']} warm), {stats['npe_trains']} npe trains "
+        f"({stats['npe_fine_tunes']} fine-tunes), "
+        f"{stats['batched_calls']} batched "
         f"calls over {stats['compiled_shapes']} compiled shapes, "
         f"{stats['wall_time_s']:.2f}s",
         file=sys.stderr,
@@ -247,7 +252,13 @@ def main(argv=None):
     ap.add_argument("--fit-rounds", type=int, default=3)
     ap.add_argument("--fit-quantile", type=float, default=0.5)
     ap.add_argument("--fit-backend", default="xla_fused",
-                    choices=["xla", "xla_fused", "pallas"])
+                    choices=["xla", "xla_fused", "pallas"],
+                    help="simulation backend of the SMC waves "
+                         "(--backend smc only)")
+    ap.add_argument("--backend", default="smc", choices=["smc", "npe"],
+                    help="on-demand fit mechanism (--epi): SMC-ABC waves, "
+                         "or an amortized NPE estimator (train once, "
+                         "forward-pass per query; see core/npe.py)")
     ap.add_argument("--seed", type=int, default=0, help="fit seed (--epi)")
     args = ap.parse_args(argv)
 

@@ -1,0 +1,304 @@
+"""Amortized-inference subsystem tests (repro.core.npe).
+
+Statistical accuracy lives in tests/test_posterior_recovery.py (the ABC
+oracle-agreement suite); this file pins the MECHANICS: config validation,
+the run_abc dispatch contract, estimator persistence, the summary-feature
+lowering, and — the acceptance-critical pin — that a serving query answered
+from a trained NPE performs ZERO simulation waves.
+"""
+
+import dataclasses
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import npe as npe_mod
+from repro.core.abc import ABCConfig, make_parametric_simulator, \
+    make_simulator, run_abc
+from repro.core.npe import NPEConfig, NPEstimator, fine_tune, train_npe
+from repro.core.summaries import SummarySpec, flush_columns, get_summary, \
+    summary_features
+from repro.epi.data import synthetic_dataset
+from repro.epi.models import get_model
+
+DAYS = 12
+TINY = NPEConfig(train_steps=25, train_batch=64, n_pilot=64, hidden=32,
+                 n_components=3, fine_tune_steps=4)
+
+
+def _dataset(name="npe_unit", seed=3, scale=1.0, num_days=DAYS):
+    ds = synthetic_dataset(theta=(0.5, 0.2, 1.0), population=1e6,
+                           num_days=num_days, a0=100.0, seed=seed,
+                           name=name, model="sir")
+    if scale != 1.0:
+        ds = dataclasses.replace(
+            ds, observed=(ds.observed * scale).astype(np.float32))
+    return ds
+
+
+def _cfg(**kw):
+    base = dict(num_days=DAYS, backend="npe", model="sir",
+                target_accepted=32, npe=TINY)
+    base.update(kw)
+    return ABCConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def trained():
+    """One tiny trained estimator shared by the mechanics tests."""
+    return train_npe(_dataset(), _cfg(), key=0)
+
+
+# ------------------------------------------------------------- validation
+def test_npe_config_validation():
+    with pytest.raises(ValueError, match="train_steps"):
+        NPEConfig(train_steps=0)
+    with pytest.raises(ValueError, match="train_batch"):
+        NPEConfig(train_batch=1)
+    with pytest.raises(ValueError, match="MDN shape"):
+        NPEConfig(n_components=0)
+    with pytest.raises(ValueError, match="fine_tune_steps"):
+        NPEConfig(fine_tune_steps=-1)
+    with pytest.raises(ValueError, match="sigma_min"):
+        NPEConfig(sigma_min=0.0)
+
+
+def test_abc_config_npe_field_validation():
+    with pytest.raises(TypeError, match="NPEConfig"):
+        ABCConfig(backend="npe", npe={"train_steps": 10})
+    with pytest.raises(ValueError, match="backend"):
+        ABCConfig(backend="xla_fused", npe=TINY)
+    # bare backend="npe" with default hyperparameters is valid
+    assert ABCConfig(backend="npe").npe is None
+
+
+def test_simulator_builders_reject_npe():
+    ds = _dataset()
+    with pytest.raises(ValueError, match="amortized"):
+        make_simulator(ds, _cfg())
+    with pytest.raises(ValueError, match="amortized"):
+        make_parametric_simulator(get_model("sir"), _cfg())
+
+
+def test_run_abc_npe_rejects_wave_machinery():
+    from repro.core.abc import ABCState
+
+    ds = _dataset()
+    with pytest.raises(ValueError, match="waves"):
+        run_abc(ds, _cfg(), key=0, state=ABCState())
+    with pytest.raises(ValueError, match="waves"):
+        run_abc(ds, _cfg(), key=0, run_fn=lambda k: None)
+
+
+# -------------------------------------------------------- summary features
+def test_flush_columns_layout():
+    np.testing.assert_array_equal(flush_columns(12, 5), [4, 9, 11])
+    np.testing.assert_array_equal(flush_columns(10, 5), [4, 9])
+    np.testing.assert_array_equal(flush_columns(4, 1), [0, 1, 2, 3])
+
+
+def test_summary_features_identity_is_flat_series():
+    """With the identity summary every day is a flush column: the feature
+    vector is exactly the flattened raw series — the paper-faithful
+    conditioning baseline."""
+    ds = _dataset()
+    feats = np.asarray(
+        summary_features(get_summary(None), ds.observed, 1)
+    )
+    np.testing.assert_allclose(
+        feats, ds.observed.astype(np.float32).reshape(-1), rtol=1e-6
+    )
+
+
+def test_summary_features_match_abc_flush_values():
+    """Binned summaries condition on the same values the ABC running
+    accumulator compares: the bin-closing columns of apply_summary."""
+    from repro.core.summaries import apply_summary
+
+    spec = SummarySpec(name="cum5", cumulative=True, bin_days=5)
+    ds = _dataset()
+    feats = np.asarray(summary_features(spec, ds.observed, 1))
+    full = np.asarray(apply_summary(spec, ds.observed.astype(np.float32)))
+    np.testing.assert_allclose(
+        feats, full[:, flush_columns(DAYS, 5)].reshape(-1), rtol=1e-6
+    )
+
+
+# ------------------------------------------------------------- persistence
+def test_estimator_save_load_roundtrip(tmp_path, trained):
+    ds = _dataset()
+    path = str(tmp_path / "est.npz")
+    trained.save(path)
+    back = NPEstimator.load(path)
+    assert back.model == "sir" and back.num_days == DAYS
+    assert back.param_names == trained.param_names
+    assert back.train_sims == trained.train_sims
+    a = trained.sample_posterior(ds.observed, 64, key=5)
+    b = back.sample_posterior(ds.observed, 64, key=5)
+    np.testing.assert_array_equal(a.theta, b.theta)
+    np.testing.assert_array_equal(a.distances, b.distances)
+
+
+def test_estimator_load_rejects_corrupt_file(tmp_path):
+    path = tmp_path / "bad.npz"
+    path.write_bytes(b"not an npz at all")
+    with pytest.raises(ValueError, match="corrupt"):
+        NPEstimator.load(str(path))
+    with pytest.raises(FileNotFoundError):
+        NPEstimator.load(str(tmp_path / "missing.npz"))
+
+
+def test_estimator_rejects_wrong_observed_shape(trained):
+    short = np.zeros((2, DAYS - 3), np.float32)
+    with pytest.raises(ValueError, match="days"):
+        trained.features_of(short)
+    wrong_channels = np.zeros((5, DAYS), np.float32)
+    with pytest.raises(ValueError, match="features"):
+        trained.features_of(wrong_channels)
+
+
+# --------------------------------------------------------------- fine-tune
+def test_fine_tune_zero_steps_is_identity(trained):
+    assert fine_tune(trained, _dataset(), key=1, steps=0) is trained
+
+
+def test_fine_tune_updates_weights_and_accounting(trained):
+    ds = _dataset(scale=1.05)
+    ft = fine_tune(trained, ds, key=1, steps=3)
+    assert ft is not trained
+    assert ft.train_steps_done == trained.train_steps_done + 3
+    assert ft.train_sims == trained.train_sims + 3 * TINY.train_batch
+    # standardization is frozen from original training (weights assume it)
+    np.testing.assert_array_equal(ft.feat_mean, trained.feat_mean)
+    np.testing.assert_array_equal(ft.feat_std, trained.feat_std)
+    changed = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(ft.params),
+                        jax.tree.leaves(trained.params))
+    )
+    assert changed
+
+
+def test_fine_tune_rejects_incompatible_channels(trained):
+    # seir would be fine (same observed channels as sir — legitimate model
+    # comparison); siard observes a different channel set and must refuse
+    siard_ds = synthetic_dataset(
+        theta=(0.2, 0.4, 6.0, 0.1, 0.05, 0.01, 0.02, 1.0), population=1e6,
+        num_days=DAYS, a0=100.0, seed=3, name="wrong", model="siard")
+    with pytest.raises(ValueError, match="trained for"):
+        fine_tune(trained, siard_ds, key=1, steps=1)
+
+
+# ------------------------------------------------- serving: zero waves pin
+def test_serving_npe_query_runs_zero_simulation_waves(tmp_path, monkeypatch):
+    """THE amortized-serving acceptance pin: with a trained estimator and
+    fine_tune_steps=0, a posterior query — including one for a CHANGED
+    dataset version — never enters the SMC/ABC wave machinery and adds
+    zero simulations beyond the training budget."""
+    from repro.core import serving
+    from repro.core.serving import EpiServer, ForecastQuery, ServeConfig, \
+        save_dataset_file
+    from repro.core.smc import SMCConfig
+
+    data_dir = tmp_path / "data"
+    data_dir.mkdir()
+    save_dataset_file(str(data_dir / "served.json"), _dataset("served"))
+
+    def _no_waves(*a, **k):  # any wave fit is an immediate failure
+        raise AssertionError("NPE serving path entered the SMC wave fitter")
+
+    monkeypatch.setattr(serving, "run_smc_abc", _no_waves)
+
+    cfg = ServeConfig(
+        slots=2, forecast_particles=16,
+        fit=SMCConfig(n_particles=48, batch_size=512, n_rounds=2,
+                      quantile=0.5, num_days=DAYS, backend="xla_fused",
+                      model="sir"),
+        data_dir=str(data_dir), store_dir=str(tmp_path / "store"),
+        fit_backend="npe",
+        npe=dataclasses.replace(TINY, fine_tune_steps=0),
+    )
+    server = EpiServer(cfg)
+    q = ForecastQuery(dataset="served", model="sir", horizon=4)
+    server.answer([q])
+    stats = server.stats()
+    assert stats["fits"] == 0 and stats["npe_trains"] == 1
+    post, _ = server.get_posterior("served", "sir")
+    assert post.runs == 0 and len(post) == 48
+    train_sims = post.simulations
+
+    # dataset content moves: refresh must stay wave-free AND sim-free
+    save_dataset_file(str(data_dir / "served.json"),
+                      _dataset("served", scale=1.1))
+    assert server.refresh("served", "sir") == "warm_refit"
+    stats = server.stats()
+    assert stats["fits"] == 0 and stats["npe_fine_tunes"] == 1
+    post2, _ = server.get_posterior("served", "sir")
+    assert post2.simulations == train_sims  # fine_tune_steps=0: free refresh
+    # posterior conditions on the NEW observed features, so it moved
+    assert not np.array_equal(post.theta, post2.theta)
+
+
+def test_serving_npe_estimator_persists_across_servers(tmp_path):
+    """A second server process finds the trained estimator on disk: no
+    retrain (npe_trains stays 0), posterior answered from the store."""
+    from repro.core.serving import EpiServer, ServeConfig, save_dataset_file
+    from repro.core.smc import SMCConfig
+
+    data_dir = tmp_path / "data"
+    data_dir.mkdir()
+    save_dataset_file(str(data_dir / "served.json"), _dataset("served"))
+    cfg = ServeConfig(
+        slots=2, forecast_particles=16,
+        fit=SMCConfig(n_particles=32, batch_size=512, n_rounds=2,
+                      quantile=0.5, num_days=DAYS, backend="xla_fused",
+                      model="sir"),
+        data_dir=str(data_dir), store_dir=str(tmp_path / "store"),
+        fit_backend="npe", npe=TINY,
+    )
+    s1 = EpiServer(cfg)
+    assert s1.refresh("served", "sir") == "cold_fit"
+    est_dir = os.path.join(str(tmp_path / "store"), "npe")
+    assert len(os.listdir(est_dir)) == 1
+
+    s2 = EpiServer(cfg)
+    assert s2.refresh("served", "sir") == "cached"
+    assert s2.stats()["npe_trains"] == 0 and s2.stats()["fits"] == 0
+
+    # content moves: the fresh server fine-tunes the PERSISTED estimator
+    save_dataset_file(str(data_dir / "served.json"),
+                      _dataset("served", scale=1.2))
+    s3 = EpiServer(cfg)
+    assert s3.refresh("served", "sir") == "warm_refit"
+    assert s3.stats()["npe_trains"] == 0
+    assert s3.stats()["npe_fine_tunes"] == 1
+
+
+def test_serve_config_validates_npe_fields():
+    from repro.core.serving import ServeConfig
+
+    with pytest.raises(ValueError, match="fit_backend"):
+        ServeConfig(fit_backend="mcmc")
+    with pytest.raises(ValueError, match="npe"):
+        ServeConfig(fit_backend="smc", npe=TINY)
+
+
+# -------------------------------------------------------------- accounting
+def test_posterior_contract_from_sampler(trained):
+    """The Posterior NPE emits must satisfy the consumers' contract:
+    finite distances (densest-first under top()), store-safe tolerance,
+    amortized simulation accounting."""
+    ds = _dataset()
+    post = trained.sample_posterior(ds.observed, 40, key=2)
+    assert post.theta.shape == (40, 3)
+    assert np.isfinite(post.distances).all()
+    assert post.tolerance == 0.0 and post.runs == 0
+    assert post.simulations == trained.train_sims
+    lo = np.asarray(trained.lows)
+    hi = np.asarray(trained.highs)
+    assert (post.theta >= lo - 1e-6).all() and (post.theta <= hi + 1e-6).all()
+    # top(k) returns the k highest-density draws
+    top = post.top(5)
+    assert np.all(np.sort(post.distances)[:5] == np.sort(top.distances))

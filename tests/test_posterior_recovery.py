@@ -5,6 +5,12 @@ parameters; the posterior mean must land within a prior-width-scaled
 tolerance of the truth (SBI validation baseline: if this fails, the sampler
 is silently wrong no matter how fast it runs). Fast seeded variants run in
 tier-1; the wider sweeps are `slow`-marked for the nightly job.
+
+The amortized backend (`backend="npe"`, repro.core.npe) is additionally
+held to the ABC posterior as an ACCURACY ORACLE: its credible intervals
+must overlap ABC's and its posterior mean must not drift from the ABC mean
+by more than a prior-width-scaled bound — the validation story every SBI
+method comparison relies on.
 """
 
 import jax
@@ -12,6 +18,7 @@ import numpy as np
 import pytest
 
 from repro.core.abc import ABCConfig, make_simulator, run_abc
+from repro.core.npe import NPEConfig
 from repro.core.smc import SMCConfig, run_smc_abc
 from repro.epi.data import synthetic_dataset
 from repro.epi.models import get_model
@@ -95,6 +102,100 @@ def test_run_smc_abc_recovers_truth(model, wave_loop):
     assert len(post) == 96
     assert np.isfinite(post.distances).all()
     _assert_recovers(post.theta, model)
+
+
+# ------------------------------------------------- NPE vs the ABC oracle
+
+#: CI-sized estimator: ~1e5 simulated pairs, seconds of training. The
+#: oracle bounds below are calibrated to THIS budget; raising the budget
+#: only tightens the posteriors.
+NPE_TEST = NPEConfig(train_steps=300, train_batch=256, n_pilot=256)
+
+#: NPE-vs-ABC posterior-mean drift budget, as a fraction of prior width
+#: (looser than REL_TOL: both posteriors carry their own MC/optimization
+#: noise, and the bound must catch a silently-wrong estimator, not noise)
+ORACLE_DRIFT = 0.25
+
+
+def _npe_cfg(model: str) -> ABCConfig:
+    return ABCConfig(num_days=DAYS, backend="npe", model=model,
+                     target_accepted=256, npe=NPE_TEST)
+
+
+def _abc_oracle(model: str, ds):
+    eps = _tolerance(ds, model, quantile=5e-3)
+    cfg = ABCConfig(
+        batch_size=4096, tolerance=eps, target_accepted=60, chunk_size=4096,
+        max_runs=60, num_days=DAYS, backend="xla_fused", model=model,
+    )
+    return run_abc(ds, cfg, key=0)
+
+
+@pytest.mark.parametrize("model", ["sir", "seir"])
+def test_npe_recovers_truth_and_agrees_with_abc_oracle(model):
+    """backend='npe' through the run_abc front door: the amortized
+    posterior must (a) recover the planted truth under the same bound as
+    the wave backends, and (b) agree with the ABC oracle posterior —
+    overlapping 90% credible intervals and bounded posterior-mean drift on
+    every parameter."""
+    ds = _dataset(model)
+    npe_post = run_abc(ds, _npe_cfg(model), key=0)
+    # the amortized contract: no waves, no tolerance, same Posterior type
+    assert npe_post.runs == 0 and npe_post.tolerance == 0.0
+    assert npe_post.theta.shape == (256, len(TRUTH[model]))
+    assert np.isfinite(npe_post.distances).all()
+    _assert_recovers(npe_post.theta, model)
+
+    abc_post = _abc_oracle(model, ds)
+    spec = get_model(model)
+    width = np.asarray(spec.prior().highs, np.float32) - np.asarray(
+        spec.prior().lows, np.float32
+    )
+    drift = np.abs(
+        npe_post.theta.mean(axis=0) - abc_post.theta.mean(axis=0)
+    ) / width
+    assert (drift <= ORACLE_DRIFT).all(), (
+        f"{model}: NPE-vs-ABC posterior-mean drift {drift} exceeds "
+        f"{ORACLE_DRIFT} (npe={npe_post.theta.mean(axis=0)}, "
+        f"abc={abc_post.theta.mean(axis=0)})"
+    )
+    for j, name in enumerate(npe_post.param_names):
+        if width[j] < 1e-6:
+            continue  # pinned dimension: both posteriors are a point
+        npe_lo, npe_hi = np.quantile(npe_post.theta[:, j], [0.05, 0.95])
+        abc_lo, abc_hi = np.quantile(abc_post.theta[:, j], [0.05, 0.95])
+        overlap = min(npe_hi, abc_hi) - max(npe_lo, abc_lo)
+        assert overlap > 0.0, (
+            f"{model}.{name}: disjoint 90% credible intervals — "
+            f"npe [{npe_lo:.4f}, {npe_hi:.4f}] vs "
+            f"abc [{abc_lo:.4f}, {abc_hi:.4f}]"
+        )
+
+
+def test_npe_fixed_seed_is_deterministic():
+    """Training and sampling are threefry-keyed jitted programs: the same
+    seed must reproduce the posterior bit-for-bit (estimator weights AND
+    mixture draws)."""
+    from repro.core.npe import train_npe
+
+    ds = _dataset("sir")
+    tiny = ABCConfig(
+        num_days=DAYS, backend="npe", model="sir", target_accepted=64,
+        npe=NPEConfig(train_steps=30, train_batch=64, n_pilot=64, hidden=32),
+    )
+    a = run_abc(ds, tiny, key=7)
+    b = run_abc(ds, tiny, key=7)
+    np.testing.assert_array_equal(a.theta, b.theta)
+    np.testing.assert_array_equal(a.distances, b.distances)
+    # ...and the estimators themselves match, leaf by leaf
+    e1 = train_npe(ds, tiny, key=7)
+    e2 = train_npe(ds, tiny, key=7)
+    for l1, l2 in zip(jax.tree.leaves(e1.params), jax.tree.leaves(e2.params)):
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    # a different seed must actually change the draw (guards against a
+    # key being silently ignored somewhere in the pipeline)
+    c = run_abc(ds, tiny, key=8)
+    assert not np.array_equal(a.theta, c.theta)
 
 
 @pytest.mark.slow
